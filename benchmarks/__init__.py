@@ -1,0 +1,9 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_linear_queries — Fig. 1/4: per-iteration runtime + speedup vs m
+  bench_error_parity   — Fig. 2/3: MWEM vs Fast-MWEM error (flat/ivf/nsw)
+  bench_lp             — Fig. 5/8/9: scalar-private LP violations + runtime
+  bench_margin         — Fig. 6 (§I.1): tail count C vs m
+  bench_n_ablation     — Fig. 7 (§I.2): error vs dataset size n
+  roofline_report      — §Roofline table from the dry-run JSONs
+"""

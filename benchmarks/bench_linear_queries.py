@@ -1,0 +1,60 @@
+"""Fig. 1 / Fig. 4: Fast-MWEM per-iteration runtime and speedup vs m.
+
+Sweeps the query-set size with each index (flat exhaustive baseline vs
+IVF / LSH / NSW) and reports median per-iteration time plus the observed
+speedup factor over the flat scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import med_us, row
+from repro.core import MWEMConfig, run_mwem
+from repro.core.queries import gaussian_histogram, random_binary_queries
+from repro.mips import FlatAbsIndex, IVFIndex, LSHIndex, NSWIndex, augment_complement
+
+
+def run(quick: bool = True):
+    U = 256 if quick else 512
+    ms = [2048, 8192, 32768] if quick else [4096, 16384, 65536, 131072]
+    T = 12 if quick else 30
+    n = 500
+    rows = []
+    key = jax.random.PRNGKey(0)
+    kh, kq = jax.random.split(key)
+    h = gaussian_histogram(kh, n, U)
+
+    for m in ms:
+        Q = random_binary_queries(kq, m, U)
+        Qnp = np.asarray(Q)
+        aug = augment_complement(Qnp)
+        flat_us = None
+        for kind in ("flat", "ivf", "lsh", "nsw"):
+            if kind == "flat":
+                index = FlatAbsIndex(Q)
+            elif kind == "ivf":
+                index = IVFIndex(aug, seed=0, train_iters=4)
+            elif kind == "lsh":
+                index = LSHIndex(aug, n_tables=8, seed=0)
+            else:
+                index = NSWIndex(aug, deg=16, ef=48,
+                                 rounds=3 if quick else 5, seed=0)
+            cfg = MWEMConfig(T=T, mode="fast", n_records=n)
+            res = run_mwem(Q, h, cfg, jax.random.PRNGKey(1), index=index)
+            us = med_us(res.iter_seconds)
+            if kind == "flat":
+                flat_us = us
+            speedup = flat_us / us if us > 0 else float("nan")
+            rows.append(row(f"linear_queries/m{m}/{kind}", us,
+                            f"speedup={speedup:.2f}x"
+                            f";err={res.final_error:.4f}"
+                            f";scored={int(np.mean(res.n_scored))}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run(quick=True))

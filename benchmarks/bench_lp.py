@@ -1,0 +1,50 @@
+"""Fig. 5 / Fig. 8 / Fig. 9: scalar-private LP solving.
+
+Violated-constraint parity (exact vs fast) and per-iteration runtime
+scaling with the number of constraints m for flat vs IVF vs NSW indices.
+Paper fixes d=20, Δ∞=0.1, α=0.5.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import med_us, row
+from repro.core import ScalarLPConfig, solve_scalar_lp
+from repro.core.queries import random_feasible_lp
+from repro.mips import FlatIndex, IVFIndex, NSWIndex
+
+
+def run(quick: bool = True):
+    d = 20
+    ms = [2048, 16384] if quick else [4096, 32768, 131072, 262144]
+    T = 60 if quick else 200
+    rows = []
+    for m in ms:
+        A, b, _ = random_feasible_lp(jax.random.PRNGKey(0), m=m, d=d)
+        Ab = np.concatenate([np.asarray(A), np.asarray(b)[:, None]], axis=1)
+        exact = solve_scalar_lp(A, b, ScalarLPConfig(T=T, mode="exact"),
+                                jax.random.PRNGKey(1))
+        rows.append(row(f"lp/m{m}/exact", med_us(exact.iter_seconds),
+                        f"violated={exact.violated_frac:.4f}"))
+        for kind in ("flat", "ivf", "nsw"):
+            if kind == "flat":
+                index = FlatIndex(Ab, use_pallas="never")
+            elif kind == "ivf":
+                index = IVFIndex(Ab, seed=0, train_iters=4)
+            else:
+                index = NSWIndex(Ab, deg=16, ef=48, rounds=3, seed=0)
+            res = solve_scalar_lp(A, b, ScalarLPConfig(T=T, mode="fast"),
+                                  jax.random.PRNGKey(1), index=index)
+            rows.append(row(
+                f"lp/m{m}/{kind}", med_us(res.iter_seconds),
+                f"violated={res.violated_frac:.4f}"
+                f";scored={int(np.mean(res.n_scored))}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run(quick=True))

@@ -1,0 +1,39 @@
+"""Fig. 7 (§I.2): final error vs dataset size n.
+
+More samples → lower sensitivity-driven noise → lower error; MWEM and
+Fast-MWEM behave identically across n.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import med_us, row
+from repro.core import MWEMConfig, run_mwem
+from repro.core.queries import gaussian_histogram, random_binary_queries
+from repro.mips import FlatAbsIndex
+
+
+def run(quick: bool = True):
+    U, m = 128, 100
+    ns = [100, 400, 1600] if quick else [100, 400, 1600, 6400]
+    T = 150 if quick else 400
+    rows = []
+    kq = jax.random.PRNGKey(7)
+    Q = random_binary_queries(kq, m, U)
+    for n in ns:
+        h = gaussian_histogram(jax.random.PRNGKey(n), n, U)
+        exact = run_mwem(Q, h, MWEMConfig(T=T, mode="exact", n_records=n),
+                         jax.random.PRNGKey(1))
+        fast = run_mwem(Q, h, MWEMConfig(T=T, mode="fast", n_records=n),
+                        jax.random.PRNGKey(1), index=FlatAbsIndex(Q))
+        rows.append(row(f"n_ablation/n{n}", med_us(fast.iter_seconds),
+                        f"exact_err={exact.final_error:.4f}"
+                        f";fast_err={fast.final_error:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run(quick=True))

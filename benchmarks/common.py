@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def med_us(seconds_list, skip: int = 3) -> float:
+    """Median per-iteration microseconds, skipping jit warm-up iterations."""
+    xs = np.asarray(seconds_list[skip:] if len(seconds_list) > skip
+                    else seconds_list)
+    return float(np.median(xs) * 1e6)
+
+
+def row(name: str, us_per_call: float, derived) -> dict:
+    return {"name": name, "us_per_call": round(us_per_call, 1),
+            "derived": derived}
+
+
+def print_rows(rows):
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

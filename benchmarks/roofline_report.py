@@ -1,0 +1,108 @@
+"""§Roofline report: aggregate the dry-run JSONs into the per-cell table.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits both
+CSV rows for benchmarks.run and a markdown table (results/roofline.md) that
+EXPERIMENTS.md references.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(mesh: str = "pod16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = True):
+    rows = []
+    recs = load_records()
+    if not recs:
+        rows.append(row("roofline/NO_DRYRUN_RESULTS", 0.0,
+                        "run repro.launch.dryrun --all first"))
+        return rows
+    for r in recs:
+        rf = r["roofline"]
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        rows.append(row(
+            name, rf["step_lower_bound_s"] * 1e6,
+            f"bottleneck={rf['bottleneck']}"
+            f";compute_s={rf['compute_s']:.4g}"
+            f";memory_s={rf['memory_s']:.4g}"
+            f";collective_s={rf['collective_s']:.4g}"
+            f";roofline_frac={rf['roofline_fraction']:.3f}"
+            f";useful_flops={r.get('useful_flop_fraction', 0):.3f}"
+            f";fits={r['memory']['fits'] if 'fits' in r.get('memory', {}) else '-'}"))
+    write_markdown(recs)
+    return rows
+
+
+def _note(r) -> str:
+    """One sentence: what would move the dominant term down."""
+    rf = r["roofline"]
+    b = rf["bottleneck"]
+    kind = r.get("kind", "")
+    arch = r.get("arch", "")
+    if arch.startswith("fastmwem"):
+        return ("tighten the IVF probe width (nprobe·cap) toward √m_loc — "
+                "recall-vs-wire tradeoff" if "lazy" in r.get("shape", "")
+                else "replace the Θ(m) score psum with the LazyEM path "
+                     "(the paper's contribution — see the lazy twin row)")
+    if b == "memory":
+        if kind == "decode":
+            return ("KV/state-cache streaming floor — quantize the cache "
+                    "(int8/int4 KV) or grow batch to amortize reads")
+        if kind == "prefill":
+            return ("O(S²) f32 logit traffic of the XLA attention path — "
+                    "the Pallas flash kernel keeps tiles in VMEM on TPU")
+        return ("f32 attention/SSD intermediates at CPU-HLO fusion "
+                "granularity — flash/ssd Pallas kernels + bf16 partials "
+                "on TPU")
+    if b == "collective":
+        return ("TP activation psums + FSDP weight gathers — overlap with "
+                "compute (latency-hiding scheduler), bf16 psums, or int8 "
+                "EF compression on the pod axis")
+    return ("MXU-bound — increase per-device batch or improve the op mix "
+            "(fused kernels)")
+
+
+def write_markdown(recs, out="results/roofline.md"):
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| roofline frac | useful FLOP frac | fits | what moves the "
+        "dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        rf = r["roofline"]
+        fits = r.get("memory", {}).get("fits", "-")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4g} "
+            f"| {rf['memory_s']:.4g} | {rf['collective_s']:.4g} "
+            f"| {rf['bottleneck']} | {rf['roofline_fraction']:.3f} "
+            f"| {r.get('useful_flop_fraction', 0):.3f} | {fits} "
+            f"| {_note(r)} |")
+    lines.append("")
+    lines.append(
+        "Memory terms reflect CPU-lowered fusion boundaries (conservative "
+        "for TPU); `MODEL_FLOPS/HLO_FLOPs` = 6·N·D (or 2·N·D inference) "
+        "over trip-count-corrected HLO dot FLOPs.")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run(quick=True))

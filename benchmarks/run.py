@@ -1,0 +1,51 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the paper-scale
+sweeps; the default quick mode keeps the whole suite CPU-friendly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench names to run")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (bench_error_parity, bench_linear_queries,
+                            bench_lp, bench_margin, bench_n_ablation,
+                            roofline_report)
+    from benchmarks.common import print_rows
+
+    benches = {
+        "linear_queries": bench_linear_queries,
+        "error_parity": bench_error_parity,
+        "lp": bench_lp,
+        "margin": bench_margin,
+        "n_ablation": bench_n_ablation,
+        "roofline": roofline_report,
+    }
+    selected = [s for s in args.only.split(",") if s] or list(benches)
+
+    print("name,us_per_call,derived")
+    for name in selected:
+        mod = benches[name]
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=quick)
+            print_rows(rows)
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # keep the suite running
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: private linear query release with Fast-MWEM.
+
+Releases the answers to 1 000 random counting queries over a histogram of
+500 records under (ε=1, δ=1e-3)-DP, comparing classic MWEM against
+Fast-MWEM with an IVF index — same error, fewer score evaluations.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import MWEMConfig, run_mwem
+from repro.core.queries import gaussian_histogram, random_binary_queries, max_error
+from repro.mips import FlatAbsIndex, IVFIndex, augment_complement
+
+U, m, n, T = 256, 1000, 500, 150
+key = jax.random.PRNGKey(0)
+kh, kq = jax.random.split(key)
+h = gaussian_histogram(kh, n, U)
+Q = random_binary_queries(kq, m, U)
+
+print(f"domain |X|={U}, m={m} queries, n={n} records, T={T} iterations")
+print(f"uniform-baseline error: "
+      f"{float(max_error(Q, h, jax.numpy.full((U,), 1/U))):.4f}\n")
+
+# --- classic MWEM: exhaustive exponential mechanism -------------------
+t0 = time.time()
+exact = run_mwem(Q, h, MWEMConfig(eps=1.0, delta=1e-3, T=T, mode="exact",
+                                  n_records=n), jax.random.PRNGKey(1))
+print(f"MWEM      (exhaustive): err={exact.final_error:.4f}  "
+      f"scored/iter={int(np.mean(exact.n_scored))}  "
+      f"wall={time.time()-t0:.1f}s")
+
+# --- Fast-MWEM: lazy Gumbel + k-MIPS index -----------------------------
+for name, index in (
+    ("flat", FlatAbsIndex(Q)),
+    ("ivf", IVFIndex(augment_complement(np.asarray(Q)), seed=0)),
+):
+    t0 = time.time()
+    fast = run_mwem(Q, h, MWEMConfig(eps=1.0, delta=1e-3, T=T, mode="fast",
+                                     n_records=n),
+                    jax.random.PRNGKey(1), index=index)
+    eps, delta = fast.ledger.composed()
+    print(f"Fast-MWEM ({name:4s}):     err={fast.final_error:.4f}  "
+          f"scored/iter={int(np.mean(fast.n_scored))}  "
+          f"wall={time.time()-t0:.1f}s  "
+          f"(ε={eps:.2f}, δ={delta:.1e})")

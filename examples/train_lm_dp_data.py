@@ -1,0 +1,83 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+a DP synthetic-data pipeline released by Fast-MWEM.
+
+The paper's technique enters as the data layer (DESIGN.md §5): the private
+corpus' statistics are released once through Fast-MWEM under (ε, δ)-DP;
+training batches are sampled from the synthetic histogram, so the model is
+DP by post-processing. Any registry architecture works — this driver uses a
+~100M-param llama3-family config.
+
+    PYTHONPATH=src python examples/train_lm_dp_data.py [--steps 300]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig, uniform_stages
+from repro.data.private import PrivateDataPipeline
+from repro.data.synthetic import SyntheticCorpus, batch_for_step
+from repro.models import build_model
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+ap.add_argument("--eps", type=float, default=2.0)
+ap.add_argument("--ckpt", default="/tmp/repro_ckpt_dp")
+args = ap.parse_args()
+
+# ~100M params: llama3-family, 12L × 768
+cfg = get_config("llama3-8b").with_(
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+    head_dim=64, vocab_size=8192, stages=uniform_stages("attn", 12),
+    tie_embeddings=True, dtype="float32")
+model = build_model(cfg)
+params, _ = model.init(jax.random.PRNGKey(0))
+n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+print(f"model: {n_params/1e6:.1f}M params "
+      f"({cfg.n_layers}L × {cfg.d_model}d, vocab {cfg.vocab_size})")
+
+# ---- DP data release via Fast-MWEM ------------------------------------
+corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
+raw = np.asarray(batch_for_step(corpus, 0, 0, 1, 256, args.seq))
+pipe = PrivateDataPipeline(vocab_size=cfg.vocab_size, eps=args.eps,
+                           n_queries=512, T=150, index_kind="ivf", seed=0)
+t0 = time.time()
+pipe.fit(raw)
+eps, delta = pipe.privacy_spent()
+print(f"Fast-MWEM release: (ε={eps:.2f}, δ={delta:.1e}) "
+      f"in {time.time()-t0:.1f}s — training is DP by post-processing")
+
+# ---- train --------------------------------------------------------------
+tcfg = TrainConfig(lr=1e-3, total_steps=args.steps, warmup_steps=20,
+                   remat="none")
+opt_init, train_step = make_train_step(model, tcfg)
+train_step = jax.jit(train_step)
+opt_state = opt_init(params)
+ckpt = CheckpointManager(args.ckpt, keep_n=2)
+
+losses = []
+t0 = time.time()
+for step in range(args.steps):
+    tokens = pipe.sample_batch(step, 0, args.batch, args.seq)
+    params, opt_state, metrics = train_step(params, opt_state,
+                                            {"tokens": tokens})
+    losses.append(float(metrics["loss"]))
+    if (step + 1) % 25 == 0:
+        tok_s = (step + 1) * args.batch * args.seq / (time.time() - t0)
+        print(f"step {step+1:4d}  loss {losses[-1]:.4f}  tok/s {tok_s:,.0f}")
+    if (step + 1) % 100 == 0:
+        ckpt.save(step + 1, {"params": params, "opt": opt_state})
+
+ckpt.save(args.steps, {"params": params, "opt": opt_state}, block=True)
+import math
+print(f"\nloss: {losses[0]:.3f} → {losses[-1]:.3f} "
+      f"(uniform = ln V = {math.log(cfg.vocab_size):.3f}); "
+      f"checkpoints in {args.ckpt}")
+assert losses[-1] < losses[0], "training should reduce loss"

@@ -1,0 +1,16 @@
+"""Fast-MWEM: private data release in sublinear time — a production JAX framework.
+
+Layers:
+  repro.core      — the paper's contribution (MWEM, LazyEM, private LP solvers)
+  repro.mips      — k-MIPS index substrate (flat / IVF / LSH / NSW)
+  repro.kernels   — Pallas TPU kernels for the compute hot-spots
+  repro.models    — the assigned LM architecture zoo
+  repro.data      — data pipeline incl. DP synthetic-data release
+  repro.train     — optimizer / trainer / checkpoint / elastic runtime
+  repro.serve     — KV-cache serving engine
+  repro.launch    — mesh + dry-run + train/serve launchers
+  repro.analysis  — HLO cost parsing + roofline model
+  repro.configs   — architecture configs
+"""
+
+__version__ = "0.1.0"

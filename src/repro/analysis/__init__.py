@@ -1,0 +1,6 @@
+"""Compiled-HLO cost parsing + TPU v5e roofline model."""
+
+from repro.analysis.hlo import analyze_hlo, HLOAnalysis
+from repro.analysis.roofline import roofline_terms, V5E
+
+__all__ = ["analyze_hlo", "HLOAnalysis", "roofline_terms", "V5E"]

@@ -1,0 +1,50 @@
+"""TPU v5e roofline model (per DESIGN.md §6 / assignment constants).
+
+    compute term    = FLOPs_per_device / peak_FLOPs
+    memory term     = HBM_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / link_bw
+
+All terms in seconds; the max is the step-time lower bound and the largest
+term is the bottleneck the §Perf loop attacks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    peak_flops: float    # FLOP/s (bf16)
+    hbm_bw: float        # bytes/s
+    ici_bw: float        # bytes/s per link
+    hbm_bytes: float     # capacity
+
+
+V5E = Chip(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9, hbm_bytes=16e9)
+
+
+def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float,
+                   wire_bytes_per_dev: float, chip: Chip = V5E) -> dict:
+    t_compute = flops_per_dev / chip.peak_flops
+    t_memory = hbm_bytes_per_dev / chip.hbm_bw
+    t_coll = wire_bytes_per_dev / chip.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    terms.update({
+        "bottleneck": bottleneck.replace("_s", ""),
+        "step_lower_bound_s": bound,
+        # fraction of peak compute achievable at this op mix
+        "roofline_fraction": (t_compute / bound) if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def model_flops(n_params: int, n_tokens: int, active_params: int | None = None,
+                kind: str = "train") -> float:
+    """6·N·D (training) or 2·N·D (inference fwd) with MoE active-param N."""
+    n = active_params if active_params is not None else n_params
+    per_tok = 6.0 * n if kind == "train" else 2.0 * n
+    return per_tok * n_tokens

@@ -1,0 +1,51 @@
+"""Architecture registry: the 10 assigned configs + the paper's own workload.
+
+``get_config(name)`` returns the exact assigned configuration;
+``get_smoke_config(name)`` returns a reduced same-family config for CPU
+smoke tests (small widths/depths, tiny vocab — structure preserved).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, ShardingRules, TrainConfig,
+    SHAPES, TP_RULES, FSDP_TP_RULES, LONG_DECODE_RULES, uniform_stages,
+)
+
+ARCH_MODULES = {
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+}
+
+ARCH_NAMES = tuple(ARCH_MODULES)
+
+
+def _module(name: str):
+    if name not in ARCH_MODULES:
+        raise ValueError(f"unknown arch {name!r}; options: {ARCH_NAMES}")
+    return importlib.import_module(ARCH_MODULES[name])
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke()
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "ShardingRules", "TrainConfig",
+    "SHAPES", "TP_RULES", "FSDP_TP_RULES", "LONG_DECODE_RULES",
+    "uniform_stages", "ARCH_NAMES", "get_config", "get_smoke_config",
+]

@@ -1,0 +1,41 @@
+"""The paper's own workload as a selectable config (the `fastmwem-dist`
+dry-run cell): m queries over a domain of size U, per-shard IVF structure,
+LazyEM parameters. See repro.core.distributed for the mesh-parallel
+iteration it parameterizes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MWEMWorkloadConfig:
+    name: str = "fastmwem-synth"
+    m: int = 2 ** 24            # queries (complement-augmented count)
+    U: int = 2 ** 14            # histogram domain |X|
+    eps: float = 1.0
+    delta: float = 1e-3
+    T: int = 1000
+    mode: str = "lazy"          # lazy | exhaustive
+    nprobe: int = 10
+
+    def derived(self, n_data_shards: int) -> dict:
+        m_loc = self.m // n_data_shards
+        k_loc = int(math.isqrt(m_loc))
+        nlist = 2 * k_loc
+        return {
+            "m_loc": m_loc,
+            "k_loc": k_loc,
+            "nlist": nlist,
+            "cap": max(8, math.ceil(2.0 * m_loc / nlist)),
+            "tail_cap": 4 * k_loc,
+        }
+
+
+CONFIG = MWEMWorkloadConfig()
+
+
+def smoke() -> MWEMWorkloadConfig:
+    return MWEMWorkloadConfig(m=4096, U=256, T=20)

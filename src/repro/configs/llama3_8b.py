@@ -1,0 +1,30 @@
+"""llama3-8b [dense] — GQA, 128k vocab [arXiv:2407.21783].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256; SwiGLU,
+RoPE θ=500000.
+"""
+
+from repro.configs.base import ModelConfig, uniform_stages
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=128_256,
+    head_dim=128,
+    stages=uniform_stages("attn", 32),
+    mlp_type="swiglu",
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, head_dim=16, stages=uniform_stages("attn", 2),
+    )

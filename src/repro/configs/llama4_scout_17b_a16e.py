@@ -1,0 +1,40 @@
+"""llama4-scout-17b-a16e [moe] — MoE 16e top-1, iRoPE
+[hf:meta-llama/Llama-4-Scout-17B-16E].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 (per expert) vocab=202048.
+Attention layout (iRoPE): 3 chunked-local layers (RoPE, 8192 chunk) :
+1 global layer (NoPE) — which makes the arch sub-quadratic end-to-end and
+eligible for long_500k. MoE: 16 routed experts, top-1, + shared expert.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202_048,
+    head_dim=128,
+    stages=((("chunk_attn", "chunk_attn", "chunk_attn", "attn"), 12),),
+    window=8192,
+    nope_on_global=True,
+    rope_theta=500_000.0,
+    mlp_type="moe",
+    n_experts=16,
+    moe_top_k=1,
+    moe_shared_expert=True,
+    tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=256, head_dim=16, window=16,
+        stages=((("chunk_attn", "chunk_attn", "chunk_attn", "attn"), 1),),
+        n_experts=4, moe_top_k=1,
+    )

@@ -1,0 +1,28 @@
+"""minitron-8b [dense] — pruned nemotron [arXiv:2407.14679].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000; squared-ReLU MLP.
+"""
+
+from repro.configs.base import ModelConfig, uniform_stages
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=16_384,
+    vocab_size=256_000,
+    head_dim=128,
+    stages=uniform_stages("attn", 32),
+    mlp_type="squared_relu",
+    tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, head_dim=16, stages=uniform_stages("attn", 2),
+    )

@@ -1,0 +1,28 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU [arXiv:2402.16819].
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.
+"""
+
+from repro.configs.base import ModelConfig, uniform_stages
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18_432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73_728,
+    vocab_size=256_000,
+    head_dim=192,
+    stages=uniform_stages("attn", 96),
+    mlp_type="squared_relu",
+    tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=2, d_model=96, n_heads=4, n_kv_heads=2, d_ff=192,
+        vocab_size=256, head_dim=24, stages=uniform_stages("attn", 2),
+    )

@@ -1,0 +1,34 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064. Backbone only:
+the vision frontend is a stub — `input_specs()` provides precomputed patch
+embeddings (B, S, d_model) and M-RoPE position ids (3, B, S).
+"""
+
+from repro.configs.base import ModelConfig, uniform_stages
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29_568,
+    vocab_size=152_064,
+    head_dim=128,
+    stages=uniform_stages("attn", 80),
+    rope_mode="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    mlp_type="swiglu",
+    input_embeds=True,
+    tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=256, head_dim=16, stages=uniform_stages("attn", 2),
+    )

@@ -1,0 +1,32 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B].
+
+48L d_model=2048 32H (GQA kv=4) d_ff=768 (per expert) vocab=151936.
+"""
+
+from repro.configs.base import ModelConfig, uniform_stages
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=768,
+    vocab_size=151_936,
+    head_dim=128,
+    stages=uniform_stages("attn", 48),
+    rope_theta=1_000_000.0,
+    mlp_type="moe",
+    n_experts=128,
+    moe_top_k=8,
+    tie_embeddings=False,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=32,
+        vocab_size=256, head_dim=16, stages=uniform_stages("attn", 2),
+        n_experts=8, moe_top_k=2,
+    )

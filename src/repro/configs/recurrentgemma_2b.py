@@ -1,0 +1,38 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention 2:1
+[arXiv:2402.19427].
+
+26L d_model=2560 10H (MQA kv=1) d_ff=7680 vocab=256000; GeGLU MLP;
+layout (R, R, A)×8 + (R, R) = 26 blocks; local attention window 2048.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256_000,
+    head_dim=256,
+    stages=(
+        (("rglru", "rglru", "window_attn"), 8),
+        (("rglru", "rglru"), 1),
+    ),
+    window=2048,
+    mlp_type="geglu",
+    rglru_width=2560,
+    rglru_conv=4,
+    tie_embeddings=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=1, d_ff=128,
+        vocab_size=256, head_dim=16, window=16,
+        stages=((("rglru", "rglru", "window_attn"), 1), (("rglru", "rglru"), 1)),
+        rglru_width=64,
+    )

@@ -1,0 +1,40 @@
+"""whisper-large-v3 [audio] — enc-dec, conv frontend (stub)
+[arXiv:2212.04356].
+
+32L (32 encoder + 32 decoder — the actual whisper-large-v3 layout; see
+DESIGN.md §5) d_model=1280 20H (MHA kv=20) d_ff=5120 vocab=51866; GELU MLP,
+LayerNorm, sinusoidal positions. The conv frontend is a stub: inputs are
+precomputed frame embeddings (B, enc_len, d_model). The assigned shapes
+apply to the decoder stream; encoder length is the whisper-standard 1500.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51_866,
+    head_dim=64,
+    stages=((("xattn_dec",), 32),),
+    is_encdec=True,
+    encoder_layers=32,
+    enc_len=1500,
+    mlp_type="gelu",
+    norm_type="layernorm",
+    rope_mode="none",
+    tie_embeddings=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=256, head_dim=16,
+        stages=((("xattn_dec",), 2),),
+        encoder_layers=2, enc_len=32,
+    )

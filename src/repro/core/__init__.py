@@ -1,0 +1,38 @@
+"""The paper's contribution: Fast-MWEM and its private selection machinery."""
+
+from repro.core.gumbel import gumbel, truncated_gumbel, tail_prob
+from repro.core.em import exact_em, em_scores, em_utility_bound
+from repro.core.lazy_em import LazyEMResult, lazy_em, lazy_em_from_topk
+from repro.core.accountant import (
+    PrivacyLedger,
+    advanced_composition,
+    calibrate_eps0,
+)
+from repro.core.bregman import bregman_project_dense
+from repro.core.mwem import MWEMConfig, MWEMState, run_mwem, mwem_iteration_counts
+from repro.core.lp_scalar import ScalarLPConfig, solve_scalar_lp
+from repro.core.lp_dual import DualLPConfig, solve_constraint_private_lp
+
+__all__ = [
+    "gumbel",
+    "truncated_gumbel",
+    "tail_prob",
+    "exact_em",
+    "em_scores",
+    "em_utility_bound",
+    "LazyEMResult",
+    "lazy_em",
+    "lazy_em_from_topk",
+    "PrivacyLedger",
+    "advanced_composition",
+    "calibrate_eps0",
+    "bregman_project_dense",
+    "MWEMConfig",
+    "MWEMState",
+    "run_mwem",
+    "mwem_iteration_counts",
+    "ScalarLPConfig",
+    "solve_scalar_lp",
+    "DualLPConfig",
+    "solve_constraint_private_lp",
+]

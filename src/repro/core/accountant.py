@@ -1,0 +1,84 @@
+"""Privacy accounting (paper §B, Thm B.1) and budget calibration.
+
+The ledger tracks every mechanism invocation and the extra failure mass the
+index contributes (Thm 3.3 adds ``γ = 1/m`` to δ when the k-MIPS structure
+may fail). Composition is reported three ways:
+
+* basic:      (Σ ε_i, Σ δ_i)
+* paper B.1:  ε̃ = ε√(2k ln 1/δ′) + 2kε²        (as printed in the paper)
+* tight B.1:  ε̃ = ε√(2k ln 1/δ′) + kε(e^ε − 1)  (Dwork-Rothblum-Vadhan)
+
+and the calibration helpers invert the paper's per-iteration formulas
+(Alg. 1: ε₀ = ε/√(T ln 1/δ); Alg. 3: ε₀ = ε/√(8T log 1/δ)).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+def advanced_composition(
+    eps0: float, delta0: float, k: int, delta_prime: float, tight: bool = False
+) -> tuple[float, float]:
+    """Compose k adaptive (ε₀, δ₀)-DP mechanisms (Thm B.1)."""
+    if k == 0:
+        return 0.0, 0.0
+    head = eps0 * math.sqrt(2.0 * k * math.log(1.0 / delta_prime))
+    tail = k * eps0 * (math.expm1(eps0)) if tight else 2.0 * k * eps0 * eps0
+    return head + tail, k * delta0 + delta_prime
+
+
+def calibrate_eps0(eps: float, delta: float, T: int, scheme: str = "mwem") -> float:
+    """Per-iteration budget from a global (ε, δ) target.
+
+    ``scheme="mwem"`` follows Alg. 1/2: ε₀ = ε / √(T ln(1/δ)).
+    ``scheme="lp"`` follows Alg. 3:     ε₀ = ε / √(8 T log(1/δ)).
+    """
+    if scheme == "mwem":
+        return eps / math.sqrt(T * math.log(1.0 / delta))
+    if scheme == "lp":
+        return eps / math.sqrt(8.0 * T * math.log(1.0 / delta))
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+@dataclass
+class PrivacyLedger:
+    """Append-only record of privacy events for one end-to-end run."""
+
+    target_delta_prime: float = 1e-9
+    events: list = field(default_factory=list)
+    index_failure_mass: float = 0.0  # γ: P[k-MIPS structure answers wrongly]
+    approx_slack: float = 0.0        # Σ 2c from runtime-preserving approx top-k (Thm F.2)
+
+    def record(self, eps0: float, delta0: float = 0.0, label: str = "") -> None:
+        self.events.append((eps0, delta0, label))
+
+    def record_index_failure(self, gamma: float) -> None:
+        """Thm 3.3: an imperfect index adds γ to the δ of the whole run."""
+        self.index_failure_mass += gamma
+
+    def record_approx_slack(self, c: float) -> None:
+        """Thm F.2: a c-approximate top-k costs +2c in ε for that invocation."""
+        self.approx_slack += 2.0 * c
+
+    def composed(self, tight: bool = False) -> tuple[float, float]:
+        """Total (ε, δ) over all events, plus index failure mass and slack.
+
+        Events are grouped by their ε₀ (homogeneous composition within each
+        group, basic composition across groups — a safe upper bound).
+        """
+        groups: dict[tuple[float, float], int] = {}
+        for e0, d0, _ in self.events:
+            groups[(e0, d0)] = groups.get((e0, d0), 0) + 1
+        eps_total, delta_total = 0.0, 0.0
+        for (e0, d0), k in groups.items():
+            e, d = advanced_composition(e0, d0, k, self.target_delta_prime, tight)
+            eps_total += e
+            delta_total += d
+        return eps_total + self.approx_slack, delta_total + self.index_failure_mass
+
+    def basic(self) -> tuple[float, float]:
+        eps = sum(e for e, _, _ in self.events) + self.approx_slack
+        delta = sum(d for _, d, _ in self.events) + self.index_failure_mass
+        return eps, delta

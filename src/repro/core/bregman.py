@@ -1,0 +1,45 @@
+"""Dense distributions and Bregman projections (paper §A).
+
+``Γ_s A`` projects a measure ``A`` onto the set of 1/s-dense distributions
+(Def. A.2): ``(Γ_s A)_a = (1/s)·min(1, c·A_a)`` with ``c`` solving
+``Σ_a min(1, c·A_a) = s``. The solution is found exactly: sorting ``A``
+descending, the constraint is piecewise linear in ``c`` with breakpoints
+``1/A_(i)``; scan the pieces and solve the active one in closed form.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _solve_c(a: jax.Array, s: float) -> jax.Array:
+    """Find c ≥ 0 with Σ min(1, c·a_i) = s (requires 1 ≤ s ≤ sum(a>0) count)."""
+    n = a.shape[0]
+    desc = -jnp.sort(-a)  # descending
+    # With c in the piece where exactly the j largest entries are clipped to 1:
+    #   j + c · suffix_sum(j) = s  →  c = (s − j) / suffix_sum(j)
+    # valid iff c·desc[j] ≤ 1 (next entry unclipped) and c·desc[j−1] ≥ 1.
+    suffix = jnp.concatenate([jnp.cumsum(desc[::-1])[::-1], jnp.zeros((1,), a.dtype)])
+    j = jnp.arange(n + 1, dtype=a.dtype)
+    c_cand = (s - j) / jnp.maximum(suffix, 1e-38)
+    thresh_hi = jnp.concatenate([jnp.full((1,), jnp.inf, a.dtype), desc])  # desc[j-1]
+    thresh_lo = jnp.concatenate([desc, jnp.zeros((1,), a.dtype)])          # desc[j]
+    valid = (c_cand * thresh_lo <= 1.0 + 1e-6) & (c_cand * thresh_hi >= 1.0 - 1e-6) & (c_cand >= 0)
+    # The first valid piece is the solution; fall back to the last piece.
+    idx = jnp.argmax(valid)
+    return jnp.where(jnp.any(valid), c_cand[idx], c_cand[-1])
+
+
+def bregman_project_dense(a: jax.Array, s: float) -> jax.Array:
+    """KL (Bregman) projection of measure ``a`` to the 1/s-dense simplex.
+
+    Returns a distribution y with ``‖y‖_∞ ≤ 1/s`` and ``Σy = 1`` minimizing
+    ``KL(y ‖ a/Σa)`` (Def. A.2). For s ≤ 1 this is just normalization.
+    """
+    a = jnp.maximum(a, 1e-38)
+    if s <= 1.0:
+        return a / jnp.sum(a)
+    c = _solve_c(a, float(s))
+    y = jnp.minimum(1.0, c * a) / s
+    return y / jnp.sum(y)  # guard tiny numeric drift

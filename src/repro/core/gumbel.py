@@ -1,0 +1,48 @@
+"""Gumbel distribution machinery (paper §C, Lemma C.2/C.3).
+
+Numerically-stable helpers used by the exact and lazy exponential mechanisms.
+All functions are jit-compatible and operate in float32 without catastrophic
+cancellation:
+
+* ``tail_prob(B)`` computes ``P[G > B] = 1 - exp(-exp(-B))`` as
+  ``-expm1(-exp(-B))`` — exact even for large ``B`` where the naive form
+  rounds to 0.
+* ``truncated_gumbel`` samples ``G | G > B`` through the log-space
+  transform ``W = -log1p(-q*(1-u)); G = -log(W)`` with ``q = tail_prob(B)``,
+  avoiding the unstable ``-log(-log(U))`` with ``U`` microscopically below 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gumbel(key: jax.Array, shape=(), dtype=jnp.float32) -> jax.Array:
+    """Standard Gumbel(0, 1) samples."""
+    return jax.random.gumbel(key, shape, dtype)
+
+
+def tail_prob(B: jax.Array) -> jax.Array:
+    """P[Gumbel(0,1) > B] = 1 - exp(-exp(-B)), computed stably."""
+    return -jnp.expm1(-jnp.exp(-B))
+
+
+def truncated_gumbel(key: jax.Array, shape, B: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Sample ``G ~ Gumbel(0,1)`` conditioned on ``G > B`` (Lemma C.3).
+
+    Equivalent to ``-log(-log(U))`` with ``U ~ Uniform(exp(-exp(-B)), 1)``
+    but stable for large ``B``: with ``q = P[G > B]`` and ``u ~ U[0,1)``,
+
+        W = -log(U) = -log1p(-q * (1 - u)),   G = -log(W).
+    """
+    u = jax.random.uniform(key, shape, dtype)
+    q = tail_prob(jnp.asarray(B, dtype))
+    w = -jnp.log1p(-q * (1.0 - u))
+    return -jnp.log(w)
+
+
+def gumbel_max(key: jax.Array, scores: jax.Array) -> jax.Array:
+    """Gumbel-Max trick (Lemma C.2): argmax(scores + G) ~ softmax(scores)."""
+    g = gumbel(key, scores.shape, scores.dtype)
+    return jnp.argmax(scores + g)

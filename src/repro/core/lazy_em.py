@@ -1,0 +1,151 @@
+"""Lazy Gumbel sampling — the paper's accelerated exponential mechanism.
+
+Implements Algorithms 4 (perfect top-k), 5 (approximate top-k, runtime-
+preserving, (ε+2c)-DP) and 6 (approximate top-k, privacy-preserving,
+e^c·Θ(√n) runtime). The three are one code path parameterized by the margin
+adjustment: Alg. 4 is Alg. 6 with c = 0; Alg. 5 is Alg. 6 with the margin
+*not* lowered (``margin_slack=0``) while the caller accounts (ε+2c)-DP.
+
+Fixed-shape JAX: the data-dependent binomial count ``C`` is drawn exactly,
+but tail candidates live in a ``tail_cap``-sized buffer. If ``C > tail_cap``
+the result carries ``overflow=True`` and the driver must fall back to the
+exact mechanism for that iteration (exactness is preserved; only time is
+lost — see DESIGN.md §1 faithfulness notes). E[C] ≤ n/k ≈ √n, so with
+``tail_cap ≥ 4√n`` overflow is exponentially rare.
+
+The tail indices are sampled *distinct* uniformly from ``[n] \\ S`` via the
+order-statistics shift trick: with ``S`` sorted, complement index ``u`` maps
+to ``u + |{j : s_j − j ≤ u}|``. Duplicate draws inside the buffer are
+rejected by a sort-and-mask pass (a with-replacement draw would give some
+elements two truncated Gumbels and bias the max upward by O(C²/n)).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gumbel import gumbel, tail_prob, truncated_gumbel
+
+
+class LazyEMResult(NamedTuple):
+    index: jax.Array        # selected candidate index in [n] (int32 scalar)
+    n_scored: jax.Array     # number of score evaluations used (k + C_unique)
+    tail_count: jax.Array   # the raw binomial draw C
+    margin: jax.Array       # the threshold B actually used
+    overflow: jax.Array     # True if C exceeded the tail buffer — caller must redo exactly
+
+
+def _complement_shift(sorted_s: jax.Array, u: jax.Array) -> jax.Array:
+    """Map complement-space indices ``u ∈ [0, n−k)`` to ``[n] \\ S``.
+
+    With ``t_j = s_j − j`` (non-decreasing), the actual index is
+    ``u + |{j : t_j ≤ u}|``.
+    """
+    t = sorted_s - jnp.arange(sorted_s.shape[0], dtype=sorted_s.dtype)
+    shift = jnp.searchsorted(t, u, side="right")
+    return u + shift.astype(u.dtype)
+
+
+def lazy_em_from_topk(
+    key: jax.Array,
+    topk_idx: jax.Array,
+    topk_scores: jax.Array,
+    n: int,
+    score_fn: Callable[[jax.Array], jax.Array],
+    tail_cap: int,
+    margin_slack: float = 0.0,
+) -> LazyEMResult:
+    """Lazy Gumbel sampling given an (approximate) top-k set.
+
+    Args:
+      key: PRNG key.
+      topk_idx: (k,) candidate indices of the (approximate) top-k set S.
+      topk_scores: (k,) their EM log-space scores ``x_i = ε·u_i/(2Δ)``.
+      n: total number of candidates.
+      score_fn: maps an (t,) int32 index array to (t,) EM log-space scores;
+        used only for the ≤ tail_cap tail candidates.
+      tail_cap: tail buffer capacity (fixed shape).
+      margin_slack: the approximation constant ``c``. 0 → Alg. 4/5;
+        c > 0 lowers the threshold ``B ← B − c`` → Alg. 6 (ε-DP preserved
+        under a c-approximate top-k, at e^c× expected tail size).
+
+    Returns a LazyEMResult; jit-compatible (fixed shapes throughout).
+    """
+    k = topk_idx.shape[0]
+    key_s, key_c, key_t, key_g = jax.random.split(key, 4)
+
+    # Step 1-2 (Alg. 4 l.3-5): Gumbel-perturb S, compute the margin B.
+    g_s = gumbel(key_s, (k,))
+    pert_s = topk_scores + g_s
+    M = jnp.max(pert_s)
+    m_min = jnp.min(topk_scores)
+    B = M - m_min - margin_slack
+
+    # Step 3 (l.6): how many tail Gumbels exceed B.
+    p = tail_prob(B)
+    C = jax.random.binomial(key_c, n - k, p).astype(jnp.int32)
+
+    # Step 4 (l.7): C *distinct* uniform indices from [n] \ S. We draw
+    # tail_cap i.i.d. indices and keep the first C unique ones — by
+    # exchangeability the first-C-distinct set of an i.i.d. uniform stream is
+    # a uniform C-subset. If the stream yields fewer than C uniques (or
+    # C > tail_cap) we flag overflow and the caller redoes the step exactly.
+    u = jax.random.randint(key_t, (tail_cap,), 0, max(n - k, 1))
+    sorted_s = jnp.sort(topk_idx.astype(jnp.int32))
+    tail_idx = _complement_shift(sorted_s, u)
+    order = jnp.argsort(u)  # stable → first occurrence keeps earliest slot
+    su = u[order]
+    dup_sorted = jnp.concatenate([jnp.array([False]), su[1:] == su[:-1]])
+    first_occ = ~dup_sorted[jnp.argsort(order)]
+    n_unique_before = jnp.cumsum(first_occ)
+    active = first_occ & (n_unique_before <= C)
+    overflow = (C > tail_cap) | (jnp.sum(active) < C)
+
+    # Step 5 (l.8): truncated Gumbels for the tail.
+    g_t = truncated_gumbel(key_g, (tail_cap,), B)
+    tail_scores = score_fn(tail_idx)
+    pert_t = jnp.where(active, tail_scores + g_t, -jnp.inf)
+
+    # Step 6 (l.9): argmax over S ∪ T.
+    all_pert = jnp.concatenate([pert_s, pert_t])
+    all_idx = jnp.concatenate([topk_idx.astype(jnp.int32), tail_idx.astype(jnp.int32)])
+    winner = all_idx[jnp.argmax(all_pert)]
+
+    n_scored = k + jnp.sum(active)
+    return LazyEMResult(
+        index=winner,
+        n_scored=n_scored.astype(jnp.int32),
+        tail_count=C,
+        margin=B,
+        overflow=overflow,
+    )
+
+
+def lazy_em(
+    key: jax.Array,
+    scores: jax.Array,
+    k: int,
+    tail_cap: int | None = None,
+    margin_slack: float = 0.0,
+) -> LazyEMResult:
+    """Reference lazy EM over an explicit score vector (exact top-k).
+
+    Used for statistical validation and as the pure-jnp oracle for the
+    distributed / index-backed paths. ``scores`` are EM log-space scores.
+    """
+    n = scores.shape[0]
+    if tail_cap is None:
+        tail_cap = min(n, max(64, 4 * int(n ** 0.5)))
+    topk_scores, topk_idx = jax.lax.top_k(scores, k)
+    return lazy_em_from_topk(
+        key,
+        topk_idx.astype(jnp.int32),
+        topk_scores,
+        n,
+        score_fn=lambda idx: scores[idx],
+        tail_cap=tail_cap,
+        margin_slack=margin_slack,
+    )

@@ -1,0 +1,141 @@
+"""Fast scalar-private LP solver (paper §4.1, Algorithm 3).
+
+Feasibility LPs ``Ax ≤ b`` over the simplex ``x ∈ Δ([d])`` in the
+scalar-private, low-sensitivity setting: neighboring databases only move
+``b`` by ``‖b−b'‖_∞ ≤ Δ_∞`` (A and c public). Each iteration selects the
+most-violated constraint privately; the EM score is the inner product
+
+    Q_t(i) = A_i·x − b_i = ⟨A_i ∘ b_i, x ∘ −1⟩
+
+so LazyEM over a k-MIPS index on the concatenated rows ``{A_i ∘ b_i}``
+gives O(d√m) expected per-iteration time (Thm 4.1) vs Θ(dm) exhaustive.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accountant import PrivacyLedger, calibrate_eps0
+from repro.core.gumbel import gumbel
+from repro.core.lazy_em import lazy_em_from_topk
+
+
+@dataclass(frozen=True)
+class ScalarLPConfig:
+    eps: float = 1.0
+    delta: float = 1e-3
+    alpha: float = 0.5
+    delta_inf: float = 0.1        # Δ∞ sensitivity of b
+    T: Optional[int] = None       # default 9ρ² log d / α²
+    mode: str = "fast"            # "exact" | "fast"
+    k: Optional[int] = None
+    tail_cap: Optional[int] = None
+    margin_slack: float = 0.0
+    eta: Optional[float] = None
+
+
+@dataclass
+class ScalarLPResult:
+    x_bar: jax.Array
+    violations: jax.Array          # A x̄ − b
+    violated_frac: float           # fraction with A x̄ > b + α
+    selected: list = field(default_factory=list)
+    n_scored: list = field(default_factory=list)
+    overflow_count: int = 0
+    iter_seconds: list = field(default_factory=list)
+    ledger: PrivacyLedger = field(default_factory=PrivacyLedger)
+
+
+@partial(jax.jit, static_argnames=("scale",))
+def _exact_select_lp(key, A, b, x, scale: float):
+    scores = (A @ x - b) * scale
+    g = gumbel(key, scores.shape)
+    return jnp.argmax(scores + g)
+
+
+@partial(jax.jit, static_argnames=("eta", "rho"))
+def _lp_update(logX, A_row, eta: float, rho: float):
+    logX = logX - (eta / rho) * A_row
+    logX = logX - jnp.max(logX)
+    return logX, jax.nn.softmax(logX)
+
+
+def solve_scalar_lp(
+    A: jax.Array,
+    b: jax.Array,
+    cfg: ScalarLPConfig,
+    key: jax.Array,
+    index=None,
+    ledger: Optional[PrivacyLedger] = None,
+) -> ScalarLPResult:
+    """Algorithm 3. ``index`` must be built on rows ``[A_i, b_i] ∈ R^{d+1}``."""
+    m, d = A.shape
+    rho = float(jnp.max(jnp.abs(A)))
+    T = cfg.T or max(1, math.ceil(9.0 * rho * rho * math.log(d) / (cfg.alpha ** 2)))
+    eta = cfg.eta if cfg.eta is not None else math.sqrt(math.log(d) / T)
+    eps0 = calibrate_eps0(cfg.eps, cfg.delta, T, scheme="lp")
+    scale = float(eps0 / (2.0 * cfg.delta_inf))
+    k = cfg.k or max(1, math.ceil(math.sqrt(m)))
+    tail_cap = cfg.tail_cap or min(m, max(64, 4 * math.ceil(math.sqrt(m))))
+
+    res = ScalarLPResult(x_bar=None, violations=None, violated_frac=float("nan"),
+                         ledger=ledger if ledger is not None else PrivacyLedger())
+    if cfg.mode == "fast":
+        if index is None:
+            raise ValueError("fast mode requires a k-MIPS index over [A_i, b_i]")
+        res.ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
+        c_idx = float(getattr(index, "approx_margin", 0.0))
+
+        Ab = jnp.concatenate([A, b[:, None]], axis=1)  # for tail score gathers
+
+        @jax.jit
+        def fast_select(key, topk_idx, topk_scores, xq):
+            return lazy_em_from_topk(
+                key, topk_idx, topk_scores * scale, m,
+                score_fn=lambda idx: (Ab[idx] @ xq) * scale,
+                tail_cap=tail_cap,
+                margin_slack=cfg.margin_slack * scale if cfg.margin_slack else 0.0,
+            )
+
+    logX = jnp.zeros((d,), jnp.float32)
+    x = jnp.full((d,), 1.0 / d, jnp.float32)
+    x_sum = jnp.zeros((d,), jnp.float32)
+
+    for _ in range(T):
+        key, k_sel = jax.random.split(key)
+        t0 = time.perf_counter()
+        if cfg.mode == "exact":
+            sel = int(_exact_select_lp(k_sel, A, b, x, scale))
+            res.n_scored.append(m)
+        else:
+            xq = jnp.concatenate([x, -jnp.ones((1,), x.dtype)])
+            idx, raw = index.query(xq, k)
+            out = fast_select(k_sel, idx, raw, xq)
+            if bool(out.overflow):
+                sel = int(_exact_select_lp(k_sel, A, b, x, scale))
+                res.overflow_count += 1
+                res.n_scored.append(m)
+            else:
+                sel = int(out.index)
+                res.n_scored.append(int(out.n_scored))
+        res.ledger.record(eps0, 0.0, "lp_em")
+        if cfg.mode == "fast" and c_idx > 0.0 and cfg.margin_slack == 0.0:
+            res.ledger.record_approx_slack(c_idx)
+        logX, x = _lp_update(logX, A[sel], float(eta), rho)
+        x_sum = x_sum + x
+        jax.block_until_ready(x)
+        res.iter_seconds.append(time.perf_counter() - t0)
+        res.selected.append(sel)
+
+    x_bar = x_sum / T
+    res.x_bar = x_bar
+    res.violations = A @ x_bar - b
+    res.violated_frac = float(jnp.mean(res.violations > cfg.alpha))
+    return res

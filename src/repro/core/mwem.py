@@ -1,0 +1,224 @@
+"""MWEM (Alg. 1) and Fast-MWEM (Alg. 2) for private linear query release.
+
+The engine is written so that *the only difference* between classic MWEM and
+Fast-MWEM is the private-selection oracle — exhaustive EM vs LazyEM over a
+k-MIPS index — exactly the surface the paper modifies. Everything else
+(multiplicative-weights update, accounting, output averaging) is shared.
+
+Implementation notes:
+* weights live in log-space (`log_w`); the multiplicative update is additive
+  and `p = softmax(log_w)` — numerically stable for tens of thousands of
+  iterations.
+* absolute-value scores use the complement closure (§3.4): since
+  ``Σ(h − p) = 0``, ``⟨1−q, h−p⟩ = −⟨q, h−p⟩``; augmented index id ``j``
+  encodes query ``j % m`` with sign ``+1`` for ``j < m`` else ``−1`` — the
+  augmented matrix is never materialized for scoring.
+* the update rule is selectable (`"paper"`, `"signed"`, `"hardt"`) — see
+  DESIGN.md §1: Alg. 1 as printed omits the sign/measurement step; the
+  default `"hardt"` is the original MWEM update. Comparisons always use the
+  same rule on both sides so the EM-vs-LazyEM effect is isolated.
+* the LazyEM tail buffer can overflow (prob. ≈ e^{-Ω(√m)}); the driver falls
+  back to the exhaustive oracle for that iteration, preserving exactness.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accountant import PrivacyLedger, calibrate_eps0
+from repro.core.gumbel import gumbel
+from repro.core.lazy_em import lazy_em_from_topk
+from repro.core.queries import max_error
+
+
+@dataclass(frozen=True)
+class MWEMConfig:
+    eps: float = 1.0
+    delta: float = 1e-3
+    T: int = 100
+    update_rule: str = "hardt"   # "paper" | "signed" | "hardt"
+    mode: str = "fast"           # "exact" | "fast"
+    k: Optional[int] = None      # top-k size; default ceil(√m)
+    tail_cap: Optional[int] = None
+    margin_slack: float = 0.0    # c ≥ 0 → Alg. 6 privacy-preserving approx mode
+    eta: Optional[float] = None  # default √(ln U / T)
+    measure_frac: float = 0.5    # ε₀ fraction spent on the Laplace measurement
+    eval_every: int = 0          # 0 → only final error
+    n_records: Optional[int] = None  # dataset size n → sensitivity Δu = 1/n
+
+    @staticmethod
+    def iterations_for(alpha: float, m: int) -> int:
+        """T = 4 α⁻² ln m (Alg. 1/2 line 3)."""
+        return max(1, math.ceil(4.0 * math.log(m) / (alpha * alpha)))
+
+
+def mwem_iteration_counts(alpha: float, m: int) -> int:
+    return MWEMConfig.iterations_for(alpha, m)
+
+
+class MWEMState(NamedTuple):
+    log_w: jax.Array   # (U,) log weights
+    p_sum: jax.Array   # (U,) running sum of iterates for the averaged output
+
+
+@dataclass
+class MWEMResult:
+    p_hat: jax.Array
+    final_error: float
+    errors: list = field(default_factory=list)        # (t, ‖Q(p−h)‖_∞) pairs
+    selected: list = field(default_factory=list)      # chosen query index per t
+    n_scored: list = field(default_factory=list)      # score evaluations per t
+    overflow_count: int = 0
+    iter_seconds: list = field(default_factory=list)
+    ledger: PrivacyLedger = field(default_factory=PrivacyLedger)
+
+
+def _aug_score(Q: jax.Array, v: jax.Array, aug_idx: jax.Array) -> jax.Array:
+    """Scores of augmented ids: ⟨q_{j%m}, v⟩ · sign(j<m) (== |·| at the top)."""
+    m = Q.shape[0]
+    base = aug_idx % m
+    sign = jnp.where(aug_idx < m, 1.0, -1.0)
+    return (Q[base] @ v) * sign
+
+
+@partial(jax.jit, static_argnames=("rule", "eta", "scale", "lap_scale"))
+def _mwu_update(state: MWEMState, q_row: jax.Array, h: jax.Array, key: jax.Array,
+                rule: str, eta: float, scale: float, lap_scale: float) -> MWEMState:
+    """One multiplicative-weights update given the selected query row."""
+    p = jax.nn.softmax(state.log_w)
+    if rule == "paper":
+        log_w = state.log_w - eta * q_row
+    else:
+        true_ans = q_row @ h
+        noise = lap_scale * jax.random.laplace(key)
+        measured = true_ans + noise
+        est = q_row @ p
+        if rule == "signed":
+            log_w = state.log_w + eta * jnp.sign(measured - est) * q_row
+        elif rule == "hardt":
+            log_w = state.log_w + q_row * (measured - est) / 2.0
+        else:
+            raise ValueError(f"unknown update rule {rule!r}")
+    log_w = log_w - jnp.max(log_w)  # drift control
+    p_new = jax.nn.softmax(log_w)
+    return MWEMState(log_w=log_w, p_sum=state.p_sum + p_new)
+
+
+@partial(jax.jit, static_argnames=("scale",))
+def _exact_select(key: jax.Array, Q: jax.Array, h: jax.Array, log_w: jax.Array,
+                  scale: float):
+    """Exhaustive EM (Alg. 1 oracle): score all m queries, Gumbel-max."""
+    p = jax.nn.softmax(log_w)
+    v = h - p
+    u = jnp.abs(Q @ v)
+    x = u * scale
+    g = gumbel(key, x.shape)
+    return jnp.argmax(x + g), v
+
+
+def run_mwem(
+    Q: jax.Array,
+    h: jax.Array,
+    cfg: MWEMConfig,
+    key: jax.Array,
+    index=None,
+    ledger: Optional[PrivacyLedger] = None,
+) -> MWEMResult:
+    """Run (Fast-)MWEM for ``cfg.T`` iterations.
+
+    Args:
+      Q: (m, U) query matrix with entries in [0, 1].
+      h: (U,) true normalized histogram.
+      cfg: engine configuration. ``mode="fast"`` requires ``index``.
+      key: PRNG key.
+      index: a k-MIPS index over the complement-augmented queries
+        (see repro.mips); must expose ``query(v, k) -> (aug_idx, raw_scores)``
+        and attributes ``approx_margin`` (c ≥ 0) and ``failure_mass`` (γ).
+    """
+    m, U = Q.shape
+    eps0 = calibrate_eps0(cfg.eps, cfg.delta, cfg.T, scheme="mwem")
+    if cfg.update_rule == "paper":
+        eps_em, eps_meas = eps0, 0.0
+    else:
+        eps_em = eps0 * (1.0 - cfg.measure_frac)
+        eps_meas = eps0 * cfg.measure_frac
+    # Δu = 1/n: changing one of the n records moves one histogram cell by 1/n,
+    # so each |⟨q, h−p⟩| utility moves by at most 1/n (q ∈ [0,1]^U).
+    if cfg.n_records is None:
+        raise ValueError("MWEMConfig.n_records (dataset size n) is required")
+    sensitivity = 1.0 / cfg.n_records
+    scale = float(eps_em / (2.0 * sensitivity))
+    lap_scale = float(sensitivity / max(eps_meas, 1e-12))
+    eta = cfg.eta if cfg.eta is not None else math.sqrt(math.log(U) / cfg.T)
+
+    k = cfg.k or max(1, math.ceil(math.sqrt(m)))
+    tail_cap = cfg.tail_cap or min(2 * m, max(64, 4 * math.ceil(math.sqrt(2 * m))))
+
+    res = MWEMResult(p_hat=None, final_error=float("nan"),
+                     ledger=ledger if ledger is not None else PrivacyLedger())
+    state = MWEMState(log_w=jnp.zeros((U,), jnp.float32),
+                      p_sum=jnp.zeros((U,), jnp.float32))
+
+    if cfg.mode == "fast":
+        if index is None:
+            raise ValueError("fast mode requires a k-MIPS index")
+        res.ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
+        c_idx = float(getattr(index, "approx_margin", 0.0))
+
+        @partial(jax.jit, static_argnames=())
+        def fast_select(key, topk_idx, topk_scores, Qm, v):
+            return lazy_em_from_topk(
+                key, topk_idx,
+                topk_scores * scale,
+                2 * m,
+                score_fn=lambda idx: _aug_score(Qm, v, idx) * scale,
+                tail_cap=tail_cap,
+                margin_slack=cfg.margin_slack * scale if cfg.margin_slack else 0.0,
+            )
+
+    for t in range(cfg.T):
+        key, k_sel, k_meas = jax.random.split(key, 3)
+        t0 = time.perf_counter()
+        p = jax.nn.softmax(state.log_w)
+        v = h - p
+        if cfg.mode == "exact":
+            sel, v = _exact_select(k_sel, Q, h, state.log_w, scale)
+            sel = int(sel)
+            res.n_scored.append(m)
+            res.ledger.record(eps_em, 0.0, "em")
+        else:
+            aug_idx, raw = index.query(v, k)
+            out = fast_select(k_sel, aug_idx, raw, Q, v)
+            if bool(out.overflow):
+                sel_arr, _ = _exact_select(k_sel, Q, h, state.log_w, scale)
+                sel = int(sel_arr)
+                res.overflow_count += 1
+                res.n_scored.append(m)
+            else:
+                sel = int(out.index) % m
+                res.n_scored.append(int(out.n_scored))
+            res.ledger.record(eps_em, 0.0, "lazy_em")
+            if c_idx > 0.0 and cfg.margin_slack == 0.0:
+                res.ledger.record_approx_slack(c_idx)  # Thm F.2 runtime mode
+        if cfg.update_rule != "paper":
+            res.ledger.record(eps_meas, 0.0, "laplace")
+        state = _mwu_update(state, Q[sel], h, k_meas, cfg.update_rule,
+                            float(eta), scale, lap_scale)
+        jax.block_until_ready(state.log_w)
+        res.iter_seconds.append(time.perf_counter() - t0)
+        res.selected.append(sel)
+        if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
+            p_avg = state.p_sum / (t + 1)
+            res.errors.append((t + 1, float(max_error(Q, h, p_avg))))
+
+    p_hat = state.p_sum / cfg.T
+    res.p_hat = p_hat
+    res.final_error = float(max_error(Q, h, p_hat))
+    return res

@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic synthetic corpus + DP synthetic-data release."""
+
+from repro.data.synthetic import SyntheticCorpus, batch_for_step
+from repro.data.private import PrivateDataPipeline
+
+__all__ = ["SyntheticCorpus", "batch_for_step", "PrivateDataPipeline"]

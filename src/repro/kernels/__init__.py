@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package contains:
+  <name>.py — the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py    — the jit'd public wrapper (padding, interpret-mode fallback)
+  ref.py    — the pure-jnp oracle the kernel is validated against
+
+Kernels:
+  mips_topk       — streaming tiled top-k inner-product search (the flat-scan
+                    baseline of Fast-MWEM at HBM-bandwidth roofline)
+  mwu_update      — fused multiplicative-weights update + online softmax stats
+  flash_attention — GQA flash attention (full/causal/window/chunk masking)
+  ssd_scan        — Mamba-2 SSD chunked state-passing scan
+"""

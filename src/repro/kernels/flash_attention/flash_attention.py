@@ -1,0 +1,130 @@
+"""GQA flash attention Pallas kernel (forward).
+
+IO-aware attention: never materializes the (Sq × Skv) logit matrix in HBM.
+Q/K/V stream through VMEM in (block_q × d) / (block_kv × d) tiles; the
+softmax is computed online (running max `m`, running denominator `l`,
+rescaled accumulator) across the kv tiles, which form the innermost,
+sequential grid dimension — the standard FlashAttention-2 schedule mapped
+onto the TPU grid.
+
+GQA is handled *in the index map*: kv tiles for query head ``h`` are
+fetched from kv head ``h // group`` — no repeat/materialization of K/V.
+
+Mask modes (static): full | causal | window | chunk, plus a `q_offset` for
+decode (query row i sits at global position q_offset + i). Fully-masked
+kv tiles are skipped with `pl.when` — for causal masks this halves the
+work; for window/chunk masks it makes the kernel O(S·window) instead of
+O(S²), which is what makes `long_500k` decodes tractable.
+
+Grid: (B, Hq, q_tiles, kv_tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            mode: str, window: int, q_offset: int, scale: float,
+            block_q: int, block_kv: int, sq_real: int, skv_real: int,
+            logit_softcap: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    q_start = qi * block_q + q_offset          # global position of row 0
+    kv_start = ki * block_kv
+
+    # --- tile-level mask reasoning: skip kv tiles no q row can see ---
+    first_q = q_start
+    last_q = q_start + block_q - 1
+    if mode in ("causal", "window", "chunk"):
+        needed = kv_start <= last_q                      # causal reach
+        if mode == "window":
+            needed = needed & (kv_start + block_kv - 1 > first_q - window)
+        if mode == "chunk":
+            needed = needed & ((kv_start + block_kv - 1) // window >= first_q // window) \
+                            & (kv_start // window <= last_q // window)
+    else:
+        needed = ki >= 0                                 # always true, traced
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(needed)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bkv, d)
+        s = q @ k.T                                       # (bq, bkv)
+        if logit_softcap > 0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+        qpos = q_start + jax.lax.iota(jnp.int32, block_q)[:, None]
+        kpos = kv_start + jax.lax.iota(jnp.int32, block_kv)[None, :]
+        mask = (kpos < skv_real) & (qpos < q_offset + sq_real)
+        if mode == "causal":
+            mask &= kpos <= qpos
+        elif mode == "window":
+            mask &= (kpos <= qpos) & (kpos > qpos - window)
+        elif mode == "chunk":
+            mask &= (kpos <= qpos) & ((kpos // window) == (qpos // window))
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_old - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, mode: str, window: int, q_offset: int,
+                           scale: float, block_q: int, block_kv: int,
+                           interpret: bool, sq_real: int, skv_real: int,
+                           logit_softcap: float = 0.0):
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Sq % block_q == 0 and Skv % block_kv == 0
+    group = Hq // Hkv
+    grid = (B, Hq, Sq // block_q, Skv // block_kv)
+    kern = functools.partial(
+        _kernel, mode=mode, window=window, q_offset=q_offset, scale=scale,
+        block_q=block_q, block_kv=block_kv, sq_real=sq_real, skv_real=skv_real,
+        logit_softcap=logit_softcap)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,42 @@
+"""Public jit'd wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("mode", "window", "q_offset", "block_q",
+                                   "block_kv", "interpret", "logit_softcap"))
+def flash_attention(q, k, v, *, mode: str = "causal", window: int = 0,
+                    q_offset: int = 0, block_q: int = 128, block_kv: int = 128,
+                    interpret: bool | None = None, logit_softcap: float = 0.0):
+    """GQA flash attention. q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D)."""
+    B, Hq, Sq, D = q.shape
+    Skv = k.shape[2]
+    block_q = min(block_q, max(8, Sq))
+    block_kv = min(block_kv, max(8, Skv))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = D ** -0.5
+    qp = _pad_axis(q, 2, block_q)
+    kp = _pad_axis(k, 2, block_kv)
+    vp = _pad_axis(v, 2, block_kv)
+    out = flash_attention_pallas(
+        qp, kp, vp, mode=mode, window=window, q_offset=q_offset, scale=scale,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+        sq_real=Sq, skv_real=Skv, logit_softcap=logit_softcap)
+    return out[:, :, :Sq]

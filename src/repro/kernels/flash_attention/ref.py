@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for GQA attention with the framework's mask modes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_mask(sq: int, skv: int, mode: str, window: int = 0,
+              q_offset: int = 0) -> jax.Array:
+    """(sq, skv) boolean mask; True = attend.
+
+    Row i's *global* position is ``q_offset + i`` (decode: q_offset = cache
+    length). Modes: full | causal | window (sliding, size `window`) |
+    chunk (attend within `window`-sized chunks, causal inside).
+    """
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    if mode == "full":
+        return jnp.ones((sq, skv), bool)
+    if mode == "causal":
+        return kpos <= qpos
+    if mode == "window":
+        return (kpos <= qpos) & (kpos > qpos - window)
+    if mode == "chunk":
+        return (kpos <= qpos) & ((kpos // window) == (qpos // window))
+    raise ValueError(f"unknown mask mode {mode!r}")
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, mode: str = "causal",
+                  window: int = 0, q_offset: int = 0, scale: float | None = None,
+                  logit_softcap: float = 0.0) -> jax.Array:
+    """GQA attention oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+    Returns (B, Hq, Sq, D) in q's dtype; softmax in f32.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, g, axis=1)
+    vf = jnp.repeat(vf, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if logit_softcap > 0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    mask = make_mask(Sq, Skv, mode, window, q_offset)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows → zero output
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vf)
+    return out.astype(q.dtype)

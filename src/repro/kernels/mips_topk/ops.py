@@ -1,0 +1,39 @@
+"""Public jit'd wrapper for the mips_topk kernel (padding + dispatch)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mips_topk.mips_topk import mips_topk_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("k", "block_n", "block_d", "interpret"))
+def mips_topk(V: jax.Array, q: jax.Array, k: int, *, block_n: int = 512,
+              block_d: int = 512, interpret: bool | None = None):
+    """Top-k inner products of ``q`` against rows of ``V``.
+
+    Pads (n, d) to tile multiples; padded rows are masked inside the kernel
+    (scores forced to −inf). ``interpret=None`` → interpret everywhere
+    except real TPU backends.
+    """
+    n, d = V.shape
+    block_n = min(block_n, max(8, n))
+    block_d = min(block_d, max(8, d))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Vp = _pad_to(_pad_to(V, 0, block_n), 1, block_d)
+    qp = _pad_to(q, 0, block_d)
+    return mips_topk_pallas(Vp, qp, k, block_n=block_n, block_d=block_d,
+                            interpret=interpret, n_real=n)

@@ -1,0 +1,82 @@
+"""Fused multiplicative-weights update Pallas kernel.
+
+Fuses the MWEM inner-loop update ``log_w += coef·q_row`` with the *online*
+softmax statistics (running max + rescaled running sum-of-exponentials, the
+same trick flash attention uses), so the (U,)-sized weight vector is read
+exactly once from HBM instead of three times (update, max pass, sum pass).
+
+Outputs the updated log-weights plus (max, sumexp) scalars; the caller forms
+``p = exp(log_w − m)/s`` lazily, fused by XLA into whichever consumer needs
+p. For MWEM, U = |X| can be 2^20+, so this is the bandwidth hot-spot of the
+MWU half of each iteration.
+
+Grid: (u_tiles,), sequential; scratch keeps (m, s) running scalars in VMEM
+(shaped (1,1) for TPU SMEM friendliness).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(lw_ref, c_ref, coef_ref, out_lw_ref, out_m_ref, out_s_ref, stat_ref,
+            *, block_u: int, u_real: int):
+    ui = pl.program_id(0)
+
+    @pl.when(ui == 0)
+    def _init():
+        stat_ref[0, 0] = -jnp.inf   # running max
+        stat_ref[0, 1] = 0.0        # running sumexp (w.r.t. running max)
+
+    idx = ui * block_u + jax.lax.iota(jnp.int32, block_u)
+    valid = idx < u_real
+    lw = lw_ref[...].astype(jnp.float32) + coef_ref[0] * c_ref[...].astype(jnp.float32)
+    out_lw_ref[...] = lw
+
+    lw_masked = jnp.where(valid, lw, -jnp.inf)
+    tile_max = jnp.max(lw_masked)
+    m_old = stat_ref[0, 0]
+    m_new = jnp.maximum(m_old, tile_max)
+    tile_sum = jnp.sum(jnp.where(valid, jnp.exp(lw_masked - m_new), 0.0))
+    stat_ref[0, 1] = stat_ref[0, 1] * jnp.exp(m_old - m_new) + tile_sum
+    stat_ref[0, 0] = m_new
+
+    @pl.when(ui == pl.num_programs(0) - 1)
+    def _emit():
+        out_m_ref[0] = stat_ref[0, 0]
+        out_s_ref[0] = stat_ref[0, 1]
+
+
+def mwu_update_pallas(lw: jax.Array, c: jax.Array, coef: jax.Array, *,
+                      block_u: int, interpret: bool, u_real: int):
+    u = lw.shape[0]
+    assert u % block_u == 0
+    grid = (u // block_u,)
+    kern = functools.partial(_kernel, block_u=block_u, u_real=u_real)
+    out_lw, out_m, out_s = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_u,), lambda i: (i,)),
+            pl.BlockSpec((block_u,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_u,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((u,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 2), jnp.float32)],
+        interpret=interpret,
+    )(lw, c, coef)
+    return out_lw, out_m, out_s

@@ -1,0 +1,32 @@
+"""Public jit'd wrapper for the fused MWU update kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mwu_update.mwu_update import mwu_update_pallas
+
+
+@partial(jax.jit, static_argnames=("block_u", "interpret"))
+def mwu_update(log_w: jax.Array, c_row: jax.Array, coef, *, block_u: int = 1024,
+               interpret: bool | None = None):
+    """Fused ``log_w += coef·c_row`` + softmax(p) (see kernel docstring).
+
+    Returns (log_w', p) matching `ref.mwu_update_ref`.
+    """
+    u = log_w.shape[0]
+    block_u = min(block_u, max(8, u))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pad = (-u) % block_u
+    lw = jnp.pad(log_w.astype(jnp.float32), (0, pad))
+    c = jnp.pad(c_row.astype(jnp.float32), (0, pad))
+    coef_arr = jnp.asarray(coef, jnp.float32).reshape(1)
+    out_lw, m, s = mwu_update_pallas(lw, c, coef_arr, block_u=block_u,
+                                     interpret=interpret, u_real=u)
+    out_lw = out_lw[:u]
+    p = jnp.exp(out_lw - m[0]) / s[0]
+    return out_lw, p

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused MWU update."""
+
+import jax
+import jax.numpy as jnp
+
+
+def mwu_update_ref(log_w: jax.Array, c_row: jax.Array, coef: jax.Array):
+    """log_w' = log_w + coef·c_row; p = softmax(log_w').
+
+    Returns (log_w', p).
+    """
+    lw = log_w.astype(jnp.float32) + jnp.float32(coef) * c_row.astype(jnp.float32)
+    m = jnp.max(lw)
+    e = jnp.exp(lw - m)
+    return lw, e / jnp.sum(e)

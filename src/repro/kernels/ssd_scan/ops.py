@@ -1,0 +1,33 @@
+"""Public jit'd wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, interpret: bool | None = None):
+    """Mamba-2 SSD: y_t = C_t·h_t with h_t = exp(dt_t A)h_{t−1} + dt_t x_t⊗B_t.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,); Bm/Cm: (B, S, N) → y (B,S,H,P) f32.
+    Padding timesteps carry dt = 0 (identity state transition, zero input).
+    """
+    B, S, H, P = x.shape
+    chunk = min(chunk, max(8, S))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_pallas(x.astype(jnp.float32), dt.astype(jnp.float32),
+                        A.astype(jnp.float32), Bm.astype(jnp.float32),
+                        Cm.astype(jnp.float32), chunk=chunk, interpret=interpret)
+    return y[:, :S]

@@ -1,0 +1,93 @@
+"""Oracles for the Mamba-2 SSD scan.
+
+`ssd_scan_ref` is the literal sequential recurrence (the ground truth):
+
+    h_t = exp(dt_t A) · h_{t−1} + (dt_t x_t) ⊗ B_t,   y_t = h_t C_t
+
+`ssd_chunked_jnp` is the chunked (state-space duality) formulation the
+model layer uses on non-TPU backends — quadratic within chunks, linear
+state passing across chunks — mathematically identical, validated against
+the sequential oracle in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence.
+
+    x: (B, S, H, P); dt: (B, S, H) > 0; A: (H,) < 0; Bm/Cm: (B, S, N).
+    Returns y: (B, S, H, P), final state (B, H, P, N). All f32.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    x, dt, A, Bm, Cm = (t.astype(jnp.float32) for t in (x, dt, A, Bm, Cm))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # (B,H,P), (B,H), (B,N), (B,N)
+        a = jnp.exp(dtt * A[None, :])             # (B,H)
+        dtx = dtt[..., None] * xt                 # (B,H,P)
+        h = a[..., None, None] * h + dtx[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def ssd_chunked_jnp(x, dt, A, Bm, Cm, chunk: int = 64, h0=None):
+    """Chunked SSD (the TPU-friendly formulation; see kernel docstring).
+
+    Same signature/returns as `ssd_scan_ref`, plus optional initial state.
+
+    Memory note: the chunk dimension is a `lax.scan`, emitting y per chunk —
+    live state is one (B,H,P,N) carry plus one chunk's quadratic
+    intermediates, never the (n_chunks × state) stack.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    x, dt, A, Bm, Cm = (t.astype(jnp.float32) for t in (x, dt, A, Bm, Cm))
+    pad = (-S) % chunk
+    if pad:  # dt = 0 → identity transition, zero input
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    # (nc, B, Q, ...) chunked views, chunk dim leading for the scan
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, chunk, H, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, chunk, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nc, chunk, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nc, chunk, N), 1, 0)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def step(h, inp):
+        xq, dtq, bq, cq = inp                       # (B,Q,H,P) (B,Q,H) (B,Q,N)
+        l = dtq * A[None, None, :]                  # (B,Q,H) ≤ 0
+        cum = jnp.cumsum(l, axis=1)                 # inclusive
+        # intra: W[i,j] = (C_i·B_j)·exp(cum_i − cum_j)·dt_j, j ≤ i
+        Sij = jnp.einsum("bin,bjn->bij", cq, bq)    # (B,Q,Q)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,H)
+        W = Sij[..., None] * decay * tri[None, :, :, None] * dtq[:, None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, xq)
+        # inter: exp(cum_i)·C_i·h — explicit contraction order (2·B·Q·H·P·N)
+        y_inter = jnp.einsum("bin,bhpn->bihp", cq, h) * jnp.exp(cum)[..., None]
+        # state update
+        cum_last = cum[:, -1, :]                    # (B,H)
+        wj = jnp.exp(cum_last[:, None, :] - cum) * dtq          # (B,Q,H)
+        U = jnp.einsum("bjhp,bjn->bhpn", xq * wj[..., None], bq)
+        h_new = jnp.exp(cum_last)[..., None, None] * h + U
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, hT

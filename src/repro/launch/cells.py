@@ -1,0 +1,285 @@
+"""Dry-run cell construction: (arch × shape × mesh) → jittable step + specs.
+
+A *cell* is one entry of the assignment matrix: the train / prefill /
+decode step of one architecture at one input shape, with every argument an
+allocation-free ShapeDtypeStruct carrying its NamedSharding. `build_cell`
+returns everything `dryrun.py` needs to `.lower().compile()` it.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, SHAPES
+from repro.configs.base import ModelConfig, ShapeConfig, ShardingRules, TrainConfig
+from repro.models import build_model
+from repro.models.common import sharding_ctx
+from repro.train.trainer import make_train_step
+from repro.launch.mesh import batch_axes
+
+# ---------------------------------------------------------------- rules ----
+MODEL_DEGREE = 16  # fixed model-axis size of the production meshes
+
+
+def _ssm_tp_ok(cfg: ModelConfig) -> bool:
+    """The fused in_proj output (z|x|B|C|dt) must split evenly for SSM TP."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    width = 2 * d_inner + 2 * cfg.ssm_state + d_inner // cfg.ssm_headdim
+    return width % MODEL_DEGREE == 0
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, multi_pod: bool) -> ShardingRules:
+    """Per-arch rules: every sharded axis must divide the mesh axis (jit
+    input shardings require exact tiling; replication is the fallback)."""
+    batch = ("pod", "data") if multi_pod else "data"
+    div = lambda n: (n % MODEL_DEGREE == 0)
+    rnn_ok = True
+    if cfg.ssm_state and not _ssm_tp_ok(cfg):
+        rnn_ok = False
+    if cfg.rglru_width and not div(cfg.rglru_width):
+        rnn_ok = False
+    kw = dict(
+        batch=batch,
+        embed="data" if div(cfg.d_model) else None,   # FSDP over data
+        mlp="model" if div(cfg.d_ff or MODEL_DEGREE) else None,
+        q_heads="model" if div(cfg.n_heads) else None,
+        kv_heads="model" if div(cfg.n_kv_heads) else None,
+        vocab="model",          # padded_vocab is a multiple of 512
+        experts="model" if div(cfg.n_experts or MODEL_DEGREE) else None,
+        rnn="model" if rnn_ok else None,
+        expert_mlp=None,
+    )
+    if shape.kind == "decode":
+        # kv heads never divide the 16-way model axis on the assigned archs
+        # → shard the cache *sequence* over "model" (flash-decoding style:
+        # the partitioner turns the softmax into partial-merge collectives).
+        if kw["kv_heads"] is None:
+            kw["kv_seq"] = "model"
+        if shape.global_batch < 16:
+            # long-context decode: batch can't fill the batch axes — shard
+            # the cache sequence over data (and model) instead.
+            kw["batch"] = None
+            kw["kv_seq"] = ("data", "model") if kw["kv_heads"] is None \
+                else "data"
+    # weight sharding over "data" stays on for inference too (ZeRO-style):
+    # a 340B bf16 model is 42.5 GB/chip under TP-16 alone — it only fits
+    # with the data axis sharding weights as well (per-layer all-gathers).
+    return ShardingRules(**kw)
+
+
+TRAIN_CFGS = {
+    "mamba2-130m": TrainConfig(microbatches=2),
+    "llama3.2-3b": TrainConfig(microbatches=4),
+    "minitron-8b": TrainConfig(microbatches=8),
+    "llama3-8b": TrainConfig(microbatches=8),
+    "qwen3-moe-30b-a3b": TrainConfig(microbatches=4),
+    "llama4-scout-17b-a16e": TrainConfig(microbatches=8),
+    "recurrentgemma-2b": TrainConfig(microbatches=4),
+    "qwen2-vl-72b": TrainConfig(microbatches=16),
+    # 340B: adafactor states + full remat — saving the (B,S,18432) f32
+    # sublayer outputs (save_tp) costs more HBM than their psums save
+    # (measured: EXPERIMENTS.md §Perf iteration N4). microbatches=16 is the
+    # ceiling (1 sequence / data shard / microbatch).
+    "nemotron-4-340b": TrainConfig(microbatches=16, optimizer="adafactor",
+                                   remat="full"),
+    "whisper-large-v3": TrainConfig(microbatches=4),
+}
+
+
+# ------------------------------------------------------------- shardings ---
+def to_shardings(spec_tree, rules: ShardingRules, mesh):
+    def conv(logical):
+        return NamedSharding(mesh, rules.spec(*logical))
+    return jax.tree.map(conv, spec_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def attach(sds_tree, sharding_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, sharding_tree)
+
+
+def opt_spec_tree(opt_state_abs, param_specs, optimizer: str):
+    """Logical specs for the optimizer state, mirroring param layout."""
+    if optimizer == "adam":
+        return {"mu": param_specs, "nu": param_specs, "step": ()}
+    # adafactor: factored stats drop one dim
+    def factored(spec):
+        spec = tuple(spec)
+        return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]} if len(spec) >= 2 \
+            else {"v": spec}
+    v = jax.tree.map(factored, param_specs,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    return {"v": v, "step": ()}
+
+
+def cache_spec_tree(cache_abs):
+    """Logical specs for a decode cache, keyed by leaf path names."""
+    flat = jax.tree_util.tree_flatten_with_path(cache_abs)
+    specs = []
+    for path, leaf in flat[0]:
+        name = str(getattr(path[-1], "key", path[-1]))
+        rank = len(leaf.shape)
+        if name in ("k", "v"):
+            spec = ("layers", "batch", "kv_heads", "kv_seq", None)[:rank]
+            if rank == 5:
+                spec = ("layers", "batch", "kv_heads", "kv_seq", None)
+        elif name in ("xk", "xv"):
+            spec = ("layers", "batch", "kv_heads", None, None)
+        elif name == "conv":
+            spec = ("layers", "batch", None, "rnn")
+        elif name == "state":
+            spec = ("layers", "batch", "rnn", None, None)
+        elif name == "h":
+            spec = ("layers", "batch", "rnn")
+        else:
+            spec = (None,) * rank
+        assert len(spec) == rank, (name, rank, spec)
+        specs.append(tuple(spec))
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+# ----------------------------------------------------------- input specs ---
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                rules: ShardingRules):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec = NamedSharding(mesh, rules.spec("batch", None))
+    b3 = NamedSharding(mesh, rules.spec(None, "batch", None))
+    bde = NamedSharding(mesh, rules.spec("batch", None, None))
+    rep = NamedSharding(mesh, P())
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if shape.kind == "decode":
+        if cfg.input_embeds:
+            tok = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dtype, sharding=bde)
+        else:
+            tok = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=bspec)
+        pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+        return {"tokens": tok, "pos": pos}
+
+    batch = {}
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_len, cfg.d_model), dtype, sharding=bde)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bspec)
+    elif cfg.input_embeds:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype,
+                                               sharding=bde)
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bspec)
+        # (B, 3, S) so the microbatch split sees the batch dim first
+        batch["positions"] = jax.ShapeDtypeStruct((B, 3, S), jnp.int32,
+                                                  sharding=bde)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bspec)
+    return batch
+
+
+# ----------------------------------------------------------------- cells ---
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    fn: object            # jittable step function
+    args: tuple           # SDS pytrees
+    meta: dict
+
+
+def count_params(params_abs, cfg: ModelConfig):
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_abs)[0]:
+        keys = [str(getattr(p, "key", p)) for p in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "mlp" in keys and any(k in ("w_gate", "w_up", "w_down")
+                                 for k in keys) and cfg.n_experts:
+            if leaf.shape and len(leaf.shape) >= 3:
+                expert += n
+    active = total - expert
+    if cfg.n_experts:
+        active += int(expert * cfg.moe_top_k / cfg.n_experts)
+    return total, active
+
+
+def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool) -> Cell:
+    cfg = get_config(arch).with_(vocab_pad_multiple=512)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        raise ValueError(f"{arch} is pure full-attention; long_500k skipped "
+                         "(see DESIGN.md §5)")
+    rules = rules_for(cfg, shape, multi_pod)
+    model = build_model(cfg)
+    params_abs, specs = model.init(abstract=True)
+    params_sh = to_shardings(specs, rules, mesh)
+    params_in = attach(params_abs, params_sh)
+    n_params, n_active = count_params(params_abs, cfg)
+    meta = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "n_params": n_params, "n_active_params": n_active,
+            "tokens_per_step": shape.global_batch *
+            (1 if shape.kind == "decode" else shape.seq_len),
+            "kind": shape.kind}
+
+    if shape.kind == "train":
+        tcfg = TRAIN_CFGS[arch]
+        meta["microbatches"] = tcfg.microbatches
+        meta["optimizer"] = tcfg.optimizer
+        opt_init, train_step = make_train_step(model, tcfg, param_specs=specs)
+        opt_abs = jax.eval_shape(opt_init, params_abs)
+        opt_sh = to_shardings(
+            opt_spec_tree(opt_abs, specs, tcfg.optimizer), rules, mesh)
+        opt_in = attach(opt_abs, opt_sh)
+        batch = input_specs(cfg, shape, mesh, rules)
+
+        def fn(params, opt_state, b):
+            with sharding_ctx(mesh, rules):
+                return train_step(params, opt_state, b)
+
+        return Cell(arch, shape, fn, (params_in, opt_in, batch), meta)
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape, mesh, rules)
+
+        def fn(params, b):
+            with sharding_ctx(mesh, rules):
+                return model.prefill(params, b)
+
+        return Cell(arch, shape, fn, (params_in, batch), meta)
+
+    # decode
+    cache_abs = model.init_cache(shape.global_batch, shape.seq_len,
+                                 abstract=True)
+    cache_sh = to_shardings(cache_spec_tree(cache_abs), rules, mesh)
+    cache_in = attach(cache_abs, cache_sh)
+    io = input_specs(cfg, shape, mesh, rules)
+
+    def fn(params, cache, tokens, pos):
+        with sharding_ctx(mesh, rules):
+            return model.decode_step(params, cache, tokens, pos)
+
+    return Cell(arch, shape, fn, (params_in, cache_in, io["tokens"], io["pos"]),
+                meta)
+
+
+def all_cells():
+    """The assignment matrix (plus documented skips)."""
+    from repro.configs import ARCH_NAMES
+
+    cells, skips = [], []
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            if shape_name == "long_500k" and not cfg.subquadratic:
+                skips.append((arch, shape_name,
+                              "pure full-attention stack (DESIGN.md §5)"))
+                continue
+            cells.append((arch, shape_name))
+    return cells, skips

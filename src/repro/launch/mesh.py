@@ -1,0 +1,21 @@
+"""Production mesh construction (assignment §MULTI-POD DRY-RUN).
+
+A function — not a module-level constant — so importing this module never
+touches JAX device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes(multi_pod: bool):
+    """Mesh axes the global batch shards over."""
+    return ("pod", "data") if multi_pod else ("data",)

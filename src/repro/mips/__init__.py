@@ -1,0 +1,46 @@
+"""k-MIPS index substrate (paper §3.3/§E/§H), TPU-adapted.
+
+All indices share the protocol:
+    ``index.query(v, k) -> (idx int32 (k,), raw_scores float32 (k,))``
+with fixed-shape, jit-compiled search paths (padded cells / buckets /
+fixed-degree adjacency) so retrieval is MXU-batched matmuls + top_k, not
+pointer chasing — see DESIGN.md §3 for the hardware adaptation rationale.
+"""
+
+from repro.mips.base import MIPSIndex, augment_complement
+from repro.mips.flat import FlatIndex, FlatAbsIndex
+from repro.mips.ivf import IVFIndex
+from repro.mips.lsh import LSHIndex
+from repro.mips.nsw import NSWIndex
+from repro.mips.transform import mips_to_knn_keys, mips_to_knn_query
+
+INDEX_TYPES = {
+    "flat": FlatIndex,
+    "ivf": IVFIndex,
+    "lsh": LSHIndex,
+    "nsw": NSWIndex,
+}
+
+
+def build_index(kind: str, vectors, **kwargs) -> MIPSIndex:
+    """Factory: build a k-MIPS index of the given kind over ``vectors``."""
+    try:
+        cls = INDEX_TYPES[kind]
+    except KeyError:
+        raise ValueError(f"unknown index kind {kind!r}; options {sorted(INDEX_TYPES)}")
+    return cls(vectors, **kwargs)
+
+
+__all__ = [
+    "MIPSIndex",
+    "augment_complement",
+    "FlatIndex",
+    "FlatAbsIndex",
+    "IVFIndex",
+    "LSHIndex",
+    "NSWIndex",
+    "mips_to_knn_keys",
+    "mips_to_knn_query",
+    "build_index",
+    "INDEX_TYPES",
+]

@@ -1,0 +1,44 @@
+"""Index protocol + complement augmentation (paper §3.4)."""
+
+from __future__ import annotations
+
+from typing import Protocol, Tuple, runtime_checkable
+
+import jax
+import numpy as np
+
+
+@runtime_checkable
+class MIPSIndex(Protocol):
+    """k-MIPS index protocol.
+
+    Attributes:
+      approx_margin: the retrieval approximation constant ``c`` of Def. 3.4
+        (0 for exact indices). Feeds the (ε+2c) accounting of Thm F.2 or the
+        margin lowering of Alg. 6.
+      failure_mass: γ — probability mass of the index answering incorrectly
+        over a whole run (adds to δ per Thm 3.3).
+    """
+
+    approx_margin: float
+    failure_mass: float
+
+    def query(self, v: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+        """Return (idx, scores): the (approximate) top-k inner products."""
+        ...
+
+    def query_cost(self, k: int) -> int:
+        """Analytic count of candidate score evaluations per query."""
+        ...
+
+
+def augment_complement(Q: np.ndarray) -> np.ndarray:
+    """Close a query set under complements: rows ``[Q; 1 − Q]`` (§3.4).
+
+    For probe vectors with ``Σv = 0`` (histogram differences),
+    ``⟨1−q, v⟩ = −⟨q, v⟩`` — so top-k over the augmented set retrieves the
+    top absolute scores. Augmented id ``j`` ↦ query ``j % m``, sign
+    ``+1 if j < m else −1``.
+    """
+    Q = np.asarray(Q, np.float32)
+    return np.concatenate([Q, 1.0 - Q], axis=0)

@@ -1,0 +1,83 @@
+"""Flat (exact, linear-scan) MIPS index — the Θ(m) baseline.
+
+On TPU this path is the `repro.kernels.mips_topk` Pallas kernel; on CPU the
+jnp reference executes the same math. Exact ⇒ approx_margin = 0,
+failure_mass = 0.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FlatIndex:
+    """Exact top-k by full matvec + top_k over arbitrary vectors."""
+
+    approx_margin = 0.0
+    failure_mass = 0.0
+
+    def __init__(self, vectors, use_pallas: str = "auto"):
+        self._v = jnp.asarray(vectors, jnp.float32)
+        self.n, self.dim = self._v.shape
+        self._use_pallas = use_pallas
+
+        @partial(jax.jit, static_argnames=("k",))
+        def _query(vectors, q, k: int):
+            if self._resolve_pallas():
+                from repro.kernels.mips_topk import ops as topk_ops
+
+                return topk_ops.mips_topk(vectors, q, k)
+            scores = vectors @ q
+            top_s, top_i = jax.lax.top_k(scores, k)
+            return top_i.astype(jnp.int32), top_s
+
+        self._query_fn = _query
+
+    def _resolve_pallas(self) -> bool:
+        if self._use_pallas == "always":
+            return True
+        if self._use_pallas == "never":
+            return False
+        return jax.default_backend() == "tpu"
+
+    def query(self, v, k: int):
+        return self._query_fn(self._v, jnp.asarray(v, jnp.float32), k)
+
+    def query_cost(self, k: int) -> int:
+        return self.n
+
+
+class FlatAbsIndex:
+    """Exact top-k of |⟨q_i, v⟩| without materializing the complement rows.
+
+    Returns *augmented* ids (j < m ⇒ +⟨q_j, v⟩; j ≥ m ⇒ −⟨q_{j−m}, v⟩),
+    matching the convention of `augment_complement`.
+    """
+
+    approx_margin = 0.0
+    failure_mass = 0.0
+
+    def __init__(self, Q):
+        self._q = jnp.asarray(Q, jnp.float32)
+        self.m, self.dim = self._q.shape
+        self.n = 2 * self.m
+
+        @partial(jax.jit, static_argnames=("k",))
+        def _query(Qm, v, k: int):
+            s = Qm @ v
+            a = jnp.abs(s)
+            top_a, top_i = jax.lax.top_k(a, k)
+            aug = jnp.where(s[top_i] >= 0, top_i, top_i + self.m)
+            return aug.astype(jnp.int32), top_a
+
+        self._query_fn = _query
+
+    def query(self, v, k: int):
+        return self._query_fn(self._q, jnp.asarray(v, jnp.float32), k)
+
+    def query_cost(self, k: int) -> int:
+        return self.m

@@ -1,0 +1,81 @@
+"""Sign (SimHash) LSH k-MIPS index (Datar et al. 2004; paper §1.1).
+
+Keys are lifted to constant norm through the MIPS→kNN transform (§E) so the
+angular metric sign-LSH preserves matches inner-product order. Buckets are
+padded (g × 2^b × cap) tables; a query hashes into one bucket per table,
+gathers the union of candidates, and exactly reranks them — fixed shapes
+throughout.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mips.transform import mips_to_knn_keys, mips_to_knn_query
+
+
+class LSHIndex:
+    def __init__(self, vectors, n_tables: int = 8, n_bits: int | None = None,
+                 cap_factor: float = 4.0, seed: int = 0,
+                 approx_margin: float = 0.0, failure_mass: float | None = None):
+        V = np.asarray(vectors, np.float32)
+        self.n, self.dim = V.shape
+        Vt, _ = mips_to_knn_keys(V)
+        self.g = n_tables
+        self.b = n_bits or max(4, int(math.ceil(math.log2(max(self.n, 16) / 16))))
+        self.n_buckets = 1 << self.b
+        self.cap = max(8, math.ceil(cap_factor * self.n / self.n_buckets))
+        rng = np.random.default_rng(seed)
+        planes = rng.standard_normal((self.g, Vt.shape[1], self.b)).astype(np.float32)
+        flat_planes = planes.transpose(1, 0, 2).reshape(Vt.shape[1], self.g * self.b)
+        codes = (Vt @ flat_planes).reshape(self.n, self.g, self.b) > 0
+        weights = (1 << np.arange(self.b)).astype(np.int64)
+        codes = (codes @ weights).astype(np.int32)            # (n, g)
+        buckets = np.full((self.g, self.n_buckets, self.cap), -1, np.int32)
+        fill = np.zeros((self.g, self.n_buckets), np.int32)
+        self.dropped = 0
+        for t in range(self.g):
+            for i, code in enumerate(codes[:, t]):
+                f = fill[t, code]
+                if f < self.cap:
+                    buckets[t, code, f] = i
+                    fill[t, code] += 1
+                else:
+                    self.dropped += 1
+        self._v = jnp.asarray(V)
+        self._planes = jnp.asarray(planes)
+        self._buckets = jnp.asarray(buckets)
+        self._weights = jnp.asarray(weights.astype(np.int32))
+        self.approx_margin = approx_margin
+        self.failure_mass = (1.0 / self.n) if failure_mass is None else failure_mass
+
+        @partial(jax.jit, static_argnames=("k",))
+        def _query(V, planes, buckets, weights, q, k: int):
+            qt = jnp.concatenate([q, jnp.zeros((1,), q.dtype)])
+            bits = jnp.einsum("d,gdb->gb", qt, planes) > 0
+            codes = (bits.astype(jnp.int32) * weights[None, :]).sum(-1)   # (g,)
+            cand = buckets[jnp.arange(self.g), codes].reshape(-1)          # (g·cap,)
+            # Dedupe (an id can live in several tables' buckets).
+            order = jnp.argsort(cand)
+            sc = cand[order]
+            dup = jnp.concatenate([jnp.array([False]), sc[1:] == sc[:-1]])
+            dup = dup[jnp.argsort(order)]
+            valid = (cand >= 0) & ~dup
+            scores = V[jnp.clip(cand, 0)] @ q
+            scores = jnp.where(valid, scores, -jnp.inf)
+            top_s, pos = jax.lax.top_k(scores, k)
+            return cand[pos].astype(jnp.int32), top_s
+
+        self._query_fn = _query
+
+    def query(self, v, k: int):
+        return self._query_fn(self._v, self._planes, self._buckets, self._weights,
+                              jnp.asarray(v, jnp.float32), k)
+
+    def query_cost(self, k: int) -> int:
+        return self.g * self.cap

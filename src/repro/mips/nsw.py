@@ -1,0 +1,133 @@
+"""Navigable-small-world graph k-MIPS index — the TPU adaptation of HNSW.
+
+HNSW's hierarchy + pointer chasing saves *scalar* distance evaluations on a
+CPU; on TPU the economics invert: batched gathers + one matmul per hop are
+nearly free, irregular control flow is not. So (DESIGN.md §3):
+
+* build: a kNN graph over the MIPS→kNN-transformed keys via vectorized
+  NN-descent (neighbors-of-neighbors refinement, numpy, offline), with a
+  reserved fraction of random long-range links for navigability — the role
+  the HNSW upper layers play.
+* search: fixed-width best-first *beam* search (`ef` frontier), each hop
+  gathering `ef·deg` neighbor ids, scoring them in one (ef·deg × dim) @ v
+  matvec, merging with `top_k`. A boolean visited mask replaces the hash
+  set. `lax.while_loop` with fixed shapes; terminates when the beam stops
+  improving.
+
+Defaults mirror the paper's HNSW config (M=32, efSearch=64).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mips.transform import mips_to_knn_keys
+
+
+def _nn_descent(Vt: np.ndarray, deg: int, rounds: int, rng: np.random.Generator,
+                block: int = 4096) -> np.ndarray:
+    """Vectorized NN-descent: iteratively replace neighbors with better
+    neighbors-of-neighbors (cosine/IP in the transformed space)."""
+    n = Vt.shape[0]
+    nbrs = rng.integers(0, n, size=(n, deg)).astype(np.int32)
+    for _ in range(rounds):
+        # candidates = own neighbors + neighbors of a pivot neighbor + random
+        extra = rng.integers(0, n, size=(n, deg)).astype(np.int32)
+        cand = np.concatenate([nbrs, nbrs[nbrs[:, 0]], extra], axis=1)
+        new_nbrs = np.empty_like(nbrs)
+        for i in range(0, n, block):
+            cb = cand[i:i + block]                       # (b, ncand)
+            sims = np.einsum("bd,bcd->bc", Vt[i:i + block], Vt[cb])
+            rows = np.arange(cb.shape[0])[:, None]
+            # mask self-loops and duplicates
+            sims[cb == (np.arange(i, min(i + block, n))[:, None])] = -np.inf
+            order = np.argsort(cb, axis=1)
+            sorted_c = cb[rows, order]
+            dup = np.concatenate([np.zeros((cb.shape[0], 1), bool),
+                                  sorted_c[:, 1:] == sorted_c[:, :-1]], axis=1)
+            back = np.argsort(order, axis=1)
+            sims[dup[rows, back]] = -np.inf
+            top = np.argpartition(-sims, deg - 1, axis=1)[:, :deg]
+            new_nbrs[i:i + block] = cb[rows[:, :1], top]
+        nbrs = new_nbrs
+    return nbrs
+
+
+class NSWIndex:
+    def __init__(self, vectors, deg: int = 32, ef: int = 64, rounds: int = 6,
+                 rand_frac: float = 0.25, max_steps: int | None = None, seed: int = 0,
+                 approx_margin: float = 0.0, failure_mass: float | None = None):
+        V = np.asarray(vectors, np.float32)
+        self.n, self.dim = V.shape
+        Vt, _ = mips_to_knn_keys(V)
+        Vt = Vt / np.maximum(np.linalg.norm(Vt, axis=1, keepdims=True), 1e-12)
+        rng = np.random.default_rng(seed)
+        deg = min(deg, max(self.n - 1, 1))
+        n_rand = max(1, int(deg * rand_frac)) if self.n > deg + 1 else 0
+        n_nn = deg - n_rand
+        nn = _nn_descent(Vt, max(n_nn, 1), rounds, rng)[:, :n_nn]
+        if n_rand:
+            rnd = rng.integers(0, self.n, size=(self.n, n_rand)).astype(np.int32)
+            adj = np.concatenate([nn, rnd], axis=1)
+        else:
+            adj = nn
+        self.deg = adj.shape[1]
+        self.ef = min(ef, self.n)
+        self.max_steps = max_steps or (2 * int(math.ceil(math.log2(max(self.n, 2)))) + 8)
+        seeds = rng.choice(self.n, size=self.ef, replace=self.n < self.ef)
+        self._v = jnp.asarray(V)
+        self._adj = jnp.asarray(adj)
+        self._seeds = jnp.asarray(seeds.astype(np.int32))
+        self.approx_margin = approx_margin
+        self.failure_mass = (1.0 / self.n) if failure_mass is None else failure_mass
+
+        @partial(jax.jit, static_argnames=("k", "max_steps"))
+        def _query(V, adj, seeds, q, k: int, max_steps: int):
+            n, ef = V.shape[0], seeds.shape[0]
+
+            def dedupe_mask(ids):
+                order = jnp.argsort(ids)
+                s = ids[order]
+                dup = jnp.concatenate([jnp.array([False]), s[1:] == s[:-1]])
+                return ~dup[jnp.argsort(order)]
+
+            beam_idx = seeds
+            beam_scores = jnp.where(dedupe_mask(seeds), V[seeds] @ q, -jnp.inf)
+            visited = jnp.zeros((n,), bool).at[seeds].set(True)
+
+            def cond(state):
+                _, _, _, steps, improved = state
+                return improved & (steps < max_steps)
+
+            def body(state):
+                beam_idx, beam_scores, visited, steps, _ = state
+                cand = adj[beam_idx].reshape(-1)              # (ef·deg,)
+                fresh = ~visited[cand] & dedupe_mask(cand)
+                cscores = jnp.where(fresh, V[cand] @ q, -jnp.inf)
+                visited = visited.at[cand].set(True)
+                all_idx = jnp.concatenate([beam_idx, cand])
+                all_scores = jnp.concatenate([beam_scores, cscores])
+                new_scores, pos = jax.lax.top_k(all_scores, ef)
+                new_idx = all_idx[pos]
+                improved = jnp.any(new_idx != beam_idx)
+                return new_idx, new_scores, visited, steps + 1, improved
+
+            state = (beam_idx, beam_scores, visited, jnp.int32(0), jnp.bool_(True))
+            beam_idx, beam_scores, _, steps, _ = jax.lax.while_loop(cond, body, state)
+            top_s, pos = jax.lax.top_k(beam_scores, min(k, ef))
+            return beam_idx[pos].astype(jnp.int32), top_s
+
+        self._query_fn = _query
+
+    def query(self, v, k: int):
+        return self._query_fn(self._v, self._adj, self._seeds,
+                              jnp.asarray(v, jnp.float32), k, self.max_steps)
+
+    def query_cost(self, k: int) -> int:
+        # ~log-depth beam search: ef·deg scored rows per hop.
+        return self.ef * self.deg * int(math.ceil(math.log2(max(self.n, 2))))

@@ -1,0 +1,24 @@
+"""MIPS → kNN reduction (paper §E).
+
+Pad every key with ``sqrt(M² − ‖k‖²)`` so all keys share norm ``M``; pad the
+query with 0. Inner products are preserved, so maximum inner product equals
+minimum L2 / maximum cosine — the regime sign-LSH and NSW graphs navigate
+well.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def mips_to_knn_keys(V: np.ndarray) -> tuple[np.ndarray, float]:
+    V = np.asarray(V, np.float32)
+    norms2 = (V * V).sum(axis=1)
+    M2 = float(norms2.max())
+    aug = np.sqrt(np.maximum(M2 - norms2, 0.0))[:, None]
+    return np.concatenate([V, aug], axis=1), float(np.sqrt(M2))
+
+
+def mips_to_knn_query(q: np.ndarray) -> np.ndarray:
+    q = np.asarray(q, np.float32)
+    return np.concatenate([q, np.zeros((1,), np.float32)])

@@ -1,0 +1,6 @@
+"""The assigned architecture zoo: composable JAX model definitions."""
+
+from repro.models.registry import build_model
+from repro.models.lm import LM
+
+__all__ = ["build_model", "LM"]

@@ -1,0 +1,253 @@
+"""GQA attention: training/prefill forward + cached single-token decode.
+
+Mask kinds: "attn" (causal), "attn_bidir" (encoder), "window_attn"
+(sliding window), "chunk_attn" (llama4 iRoPE chunked-local). Decode uses a
+ring buffer of size `window` for the local kinds — O(window) memory and
+compute per token, which is what makes `long_500k` sub-quadratic.
+
+The forward path uses the pure-jnp reference math (XLA fuses it well and it
+is what the dry-run rooflines measure); on TPU backends the
+`repro.kernels.flash_attention` Pallas kernel swaps in for prefill/train.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention.ref import attention_ref, make_mask
+from repro.models.common import ParamBuilder, apply_mrope, apply_rope, shard
+
+_MASK_OF_KIND = {
+    "attn": "causal",
+    "attn_bidir": "full",
+    "window_attn": "window",
+    "chunk_attn": "chunk",
+    "xattn_dec": "causal",      # decoder self-attention half of the block
+}
+
+# beyond this kv length the forward path switches to the blockwise
+# (online-softmax) attention so the (Sq × Skv) logit matrix never
+# materializes — the XLA analogue of the flash kernel.
+BLOCKWISE_THRESHOLD = 8192
+BLOCKWISE_CHUNK = 1024
+
+
+def blockwise_attention(q, k, v, *, mode: str, window: int = 0,
+                        logit_softcap: float = 0.0,
+                        chunk: int = BLOCKWISE_CHUNK) -> jax.Array:
+    """Flash-style attention in pure jnp: scan over kv chunks with running
+    (max, denom, acc) — O(Sq·chunk) live memory instead of O(Sq·Skv).
+
+    q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D). Same semantics as
+    `attention_ref` (GQA, mask modes, f32 softmax).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (Skv + pad) // chunk
+    kc = k.reshape(B, Hkv, n_chunks, chunk, D)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, D)
+    qf = (q.astype(jnp.float32) * D ** -0.5).reshape(B, Hkv, g, Sq, D)
+    # spread the per-chunk (B,Hkv,g,Sq,chunk) logit tensors over the model
+    # axis (kv-head groups) — the dominant HBM term of long prefills.
+    from repro.models.common import shard as _shard
+    qf = _shard(qf, "batch", "kv_heads_act", None, None, None)
+    kc = _shard(kc, "batch", "kv_heads_act", None, None, None)
+    vc = _shard(vc, "batch", "kv_heads_act", None, None, None)
+    qpos = jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp
+        kj = kj.astype(jnp.float32)
+        s = jnp.einsum("bngsd,bncd->bngsc", qf, kj)
+        if logit_softcap > 0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        kpos = j * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] < Skv
+        if mode in ("causal", "window", "chunk"):
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if mode == "window":
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        if mode == "chunk":
+            mask = mask & ((kpos[None, :] // window) == (qpos[:, None] // window))
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        msafe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - msafe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - msafe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bngsc,bncd->bngsd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    # carry must start with the same sharding the body produces, or the
+    # partitioner reshards (all-gathers) the multi-GB accumulator every
+    # chunk step (measured: EXPERIMENTS.md §Perf N5)
+    m0 = _shard(jnp.full((B, Hkv, g, Sq), -jnp.inf, jnp.float32),
+                "batch", "kv_heads_act", None, None)
+    l0 = _shard(jnp.zeros((B, Hkv, g, Sq), jnp.float32),
+                "batch", "kv_heads_act", None, None)
+    a0 = _shard(jnp.zeros((B, Hkv, g, Sq, D), jnp.float32),
+                "batch", "kv_heads_act", None, None, None)
+    ks = jnp.moveaxis(kc, 2, 0)
+    vs = jnp.moveaxis(vc, 2, 0)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (ks, vs, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def init_attention(pb: ParamBuilder, cfg: ModelConfig, name: str = "attn",
+                   kv_dim: Optional[int] = None):
+    D, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    Dh = cfg.resolved_head_dim
+    kv_dim = kv_dim or D
+    with pb.scope(name):
+        pb("wq", (D, H, Dh), ("embed", "q_heads", "head_dim"))
+        pb("wk", (kv_dim, Hkv, Dh), ("embed", "kv_heads", "head_dim"))
+        pb("wv", (kv_dim, Hkv, Dh), ("embed", "kv_heads", "head_dim"))
+        pb("wo", (H, Dh, D), ("q_heads", "head_dim", "embed"))
+
+
+def _rope_qk(q, k, cfg: ModelConfig, kind: str, positions):
+    """positions: (B, S) int32, or (3, B, S) for mrope."""
+    use_rope = cfg.rope_mode != "none"
+    if kind == "attn" and cfg.nope_on_global:
+        use_rope = False                      # llama4 iRoPE: NoPE global layers
+    if not use_rope:
+        return q, k
+    if cfg.rope_mode == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attn_forward(p, x, cfg: ModelConfig, kind: str, positions,
+                 xkv: Optional[jax.Array] = None, return_kv: bool = False):
+    """x: (B, S, D) → (B, S, D). xkv: cross-attention source (B, Skv, D).
+
+    ``return_kv=True`` additionally returns the post-RoPE (k, v) tensors —
+    the prefill cache feed.
+    """
+    mode = _MASK_OF_KIND[kind] if xkv is None else "full"
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    src = x if xkv is None else xkv
+    k = jnp.einsum("bsd,dhk->bhsk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", src, p["wv"])
+    q = shard(q, "batch", "heads_act", None, None)
+    k = shard(k, "batch", "kv_heads", None, None)
+    if xkv is None:
+        q, k = _rope_qk(q, k, cfg, kind, positions)
+    if k.shape[2] > BLOCKWISE_THRESHOLD:
+        out = blockwise_attention(q, k, v, mode=mode, window=cfg.window,
+                                  logit_softcap=cfg.logit_softcap)
+    else:
+        out = attention_ref(q, k, v, mode=mode, window=cfg.window,
+                            logit_softcap=cfg.logit_softcap)
+    out = shard(out, "batch", "heads_act", None, None)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    y = shard(y, "batch", None, None)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ------------------------------------------------------------- decoding ----
+def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    abstract: bool = False, dtype=jnp.bfloat16):
+    """Ring buffer for local kinds; full-length buffer for global attention."""
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    size = max_len if kind in ("attn", "attn_bidir", "xattn_dec") \
+        else min(cfg.window, max_len)
+    shape = (batch, Hkv, size, Dh)
+    if abstract:
+        k = v = jax.ShapeDtypeStruct(shape, dtype)
+    else:
+        k = jnp.zeros(shape, dtype)
+        v = jnp.zeros(shape, dtype)
+    return {"k": k, "v": v}
+
+
+def attn_decode(p, x, cache, pos, cfg: ModelConfig, kind: str,
+                positions=None):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 global position.
+
+    Returns (y (B,1,D), new_cache).
+    """
+    mode = _MASK_OF_KIND[kind]
+    B = x.shape[0]
+    S = cache["k"].shape[2]
+    is_ring = kind in ("window_attn", "chunk_attn")
+    W = cfg.window if is_ring else 0
+
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    if positions is None:
+        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        if cfg.rope_mode == "mrope":
+            positions = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+    q, k_new = _rope_qk(q, k_new, cfg, kind, positions)
+
+    slot = jnp.mod(pos, S) if is_ring else pos
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                           (0, 0, slot, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                           (0, 0, slot, 0))
+    k_cache = shard(k_cache, "batch", "kv_heads", "kv_seq", None)
+    v_cache = shard(v_cache, "batch", "kv_heads", "kv_seq", None)
+
+    # global position each slot holds
+    slots = jnp.arange(S)
+    if is_ring:
+        gpos = pos - jnp.mod(pos - slots, S)
+    else:
+        gpos = slots
+    if mode == "causal" or mode == "full":
+        valid = (gpos <= pos) & (gpos >= 0)
+    elif mode == "window":
+        valid = (gpos <= pos) & (gpos > pos - W) & (gpos >= 0)
+    else:  # chunk
+        valid = (gpos <= pos) & ((gpos // W) == (pos // W)) & (gpos >= 0)
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    Dh = cfg.resolved_head_dim
+    qh = q[:, :, 0].reshape(B, cfg.n_kv_heads, g, Dh).astype(jnp.float32)
+    logits = jnp.einsum("bngk,bnsk->bngs", qh * Dh ** -0.5,
+                        k_cache.astype(jnp.float32))
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngs,bnsk->bngk", w, v_cache.astype(jnp.float32))
+    out = out.reshape(B, cfg.n_heads, 1, Dh).astype(x.dtype)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def init_cross_cache(cfg: ModelConfig, p, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output (whisper decode)."""
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wv"])
+    return {"k": k, "v": v}
+
+
+def cross_decode(p, x, cross_cache, cfg: ModelConfig):
+    """Cross-attention for one decode token against the cached encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    out = attention_ref(q, cross_cache["k"], cross_cache["v"], mode="full",
+                        logit_softcap=cfg.logit_softcap)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"])

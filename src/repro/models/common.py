@@ -1,0 +1,202 @@
+"""Shared model machinery: params, norms, RoPE, logical sharding.
+
+Params are plain nested dicts of arrays built through `ParamBuilder`, which
+simultaneously records a parallel tree of *logical* PartitionSpecs (tuples
+of logical axis names). `abstract=True` builds ShapeDtypeStructs instead of
+arrays — the dry-run path, which never allocates.
+
+Activation sharding goes through `shard(x, *logical_axes)`, resolved against
+the ambient `ShardingRules`/mesh installed by `sharding_ctx` — a no-op when
+no mesh is active (unit tests, CPU smoke runs).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShardingRules
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules: ShardingRules):
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def current_rules() -> Optional[ShardingRules]:
+    state = getattr(_CTX, "state", None)
+    return state[1] if state else None
+
+
+def current_mesh_and_rules():
+    return getattr(_CTX, "state", None)
+
+
+def shard(x: jax.Array, *logicals) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op w/o mesh)."""
+    state = getattr(_CTX, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, rules.spec(*logicals)))
+
+
+class ParamBuilder:
+    """Builds (params, logical_specs) trees with scoped names."""
+
+    def __init__(self, key: Optional[jax.Array], abstract: bool = False,
+                 dtype=jnp.bfloat16):
+        self.key = key
+        self.abstract = abstract
+        self.dtype = dtype
+        self.params: dict = {}
+        self.specs: dict = {}
+        self._path: list = []
+        self._stack: list = []
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._path.append(str(name))
+        try:
+            yield self
+        finally:
+            self._path.pop()
+
+    @contextlib.contextmanager
+    def stacked(self, n: int):
+        """Prepend a (n,) 'layers' dim to every param created inside —
+        the scan-over-layers stacking."""
+        self._stack.append(n)
+        try:
+            yield self
+        finally:
+            self._stack.pop()
+
+    def _insert(self, tree: dict, name: str, value):
+        node = tree
+        for p in self._path:
+            node = node.setdefault(p, {})
+        node[name] = value
+
+    def __call__(self, name: str, shape, logical, *, scale: Optional[float] = None,
+                 dtype=None, init: str = "normal"):
+        dtype = dtype or self.dtype
+        assert len(shape) == len(logical), (name, shape, logical)
+        if scale is None and init == "normal":
+            fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+            scale = fan_in ** -0.5
+        shape = tuple(self._stack) + tuple(shape)
+        logical = ("layers",) * len(self._stack) + tuple(logical)
+        self._insert(self.specs, name, tuple(logical))
+        if self.abstract:
+            value = jax.ShapeDtypeStruct(shape, dtype)
+        else:
+            self.key, sub = jax.random.split(self.key)
+            if init == "zeros":
+                value = jnp.zeros(shape, dtype)
+            elif init == "ones":
+                value = jnp.ones(shape, dtype)
+            else:
+                value = (jax.random.normal(sub, shape, jnp.float32) * scale).astype(dtype)
+        self._insert(self.params, name, value)
+        return value
+
+
+# ------------------------------------------------------------------ norms --
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32) \
+        + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(x, p, norm_type: str, eps: float):
+    if norm_type == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+def init_norm(pb: ParamBuilder, name: str, d: int, norm_type: str):
+    with pb.scope(name):
+        pb("scale", (d,), ("embed",), init="zeros" if norm_type == "rmsnorm" else "ones",
+           dtype=jnp.float32)
+        if norm_type == "layernorm":
+            pb("bias", (d,), ("embed",), init="zeros", dtype=jnp.float32)
+
+
+# ------------------------------------------------------------------- rope --
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D); positions: (B, S) int."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                              # (D/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions: (3, B, S) (t, h, w) ids.
+
+    The D/2 rotary frequency slots are split into `sections` (per modality
+    stream); each section rotates by its own position stream.
+    """
+    D = x.shape[-1]
+    half = D // 2
+    sections = tuple(int(s * half / sum(sections)) for s in sections)
+    sections = sections[:-1] + (half - sum(sections[:-1]),)
+    freqs = rope_freqs(D, theta)                              # (half,)
+    # build per-slot positions by section
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        pos = positions[i]                                    # (B, S)
+        ang = pos[:, None, :, None].astype(jnp.float32) * freqs[start:start + sec]
+        parts.append(ang)
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                     # (B,1,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int, offset=0) -> jax.Array:
+    pos = (jnp.arange(seq) + offset)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos / (10_000.0 ** (dim / d))
+    out = jnp.zeros((seq, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

@@ -1,0 +1,425 @@
+"""LM assembly: stages of scanned layer-units → train / prefill / decode.
+
+An architecture is a list of *stages*; each stage is a layer-unit pattern
+(e.g. ``("rglru", "rglru", "attn")``) scanned over ``n_units`` with stacked
+parameters — HLO size is independent of depth, and heterogeneous layouts
+(RecurrentGemma 2:1, Llama-4 3:1 chunked:global) are exact.
+
+The same parameter tree serves three entry points:
+  * ``loss(params, batch)``      — training objective (next-token CE)
+  * ``prefill(params, batch)``   — forward + cache extraction
+  * ``decode_step(params, cache, tokens, pos)`` — one-token serving step
+
+Caches mirror the param tree structure (stage → block → stacked-over-units)
+so both move through ``jax.lax.scan`` together.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as att
+from repro.models import mlp as mlp_mod
+from repro.models import rglru as rg
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    ParamBuilder, apply_norm, init_norm, shard, sinusoidal_pos,
+)
+
+ATTN_KINDS = ("attn", "attn_bidir", "window_attn", "chunk_attn", "xattn_dec")
+
+
+def _has_mlp(kind: str) -> bool:
+    return kind != "ssm"
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.stages, "ModelConfig.stages must be set"
+        self.cfg = cfg
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------- init ----
+    def _init_block(self, pb: ParamBuilder, kind: str):
+        cfg = self.cfg
+        init_norm(pb, "norm_1", cfg.d_model, cfg.norm_type)
+        if kind in ATTN_KINDS:
+            att.init_attention(pb, cfg, "attn")
+            if kind == "xattn_dec":
+                init_norm(pb, "norm_x", cfg.d_model, cfg.norm_type)
+                att.init_attention(pb, cfg, "xattn")
+        elif kind == "ssm":
+            ssm_mod.init_ssm(pb, cfg, "ssm")
+        elif kind == "rglru":
+            rg.init_rglru(pb, cfg, "rglru")
+        else:
+            raise ValueError(f"unknown block kind {kind!r}")
+        if _has_mlp(kind):
+            init_norm(pb, "norm_2", cfg.d_model, cfg.norm_type)
+            mlp_mod.init_mlp(pb, cfg, "mlp")
+
+    def init(self, key: Optional[jax.Array] = None, abstract: bool = False):
+        """Returns (params, logical_specs)."""
+        cfg = self.cfg
+        pb = ParamBuilder(key, abstract=abstract, dtype=self.dtype)
+        # d^-1/2 init keeps tied-head logits O(1) at depth
+        pb("embedding", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+           scale=cfg.d_model ** -0.5)
+        if not cfg.tie_embeddings:
+            pb("lm_head", (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))
+        if cfg.is_encdec:
+            with pb.scope("encoder"):
+                with pb.stacked(cfg.encoder_layers):
+                    with pb.scope("unit"):
+                        with pb.scope("block_0"):
+                            self._init_block(pb, "attn_bidir")
+                init_norm(pb, "final_norm", cfg.d_model, cfg.norm_type)
+        for si, (pattern, n_units) in enumerate(cfg.stages):
+            with pb.scope(f"stage_{si}"):
+                with pb.stacked(n_units):
+                    for bi, kind in enumerate(pattern):
+                        with pb.scope(f"block_{bi}"):
+                            self._init_block(pb, kind)
+        init_norm(pb, "final_norm", cfg.d_model, cfg.norm_type)
+        return pb.params, pb.specs
+
+    # ---------------------------------------------------------- forward ----
+    def _block_fwd(self, p, h, kind, positions, h_enc=None, cache_len=0):
+        """One block forward. Returns (h, cache|None) — cache when
+        ``cache_len > 0`` (prefill)."""
+        cfg = self.cfg
+        cache = None
+        hn = apply_norm(h, p["norm_1"], cfg.norm_type, cfg.norm_eps)
+        if kind in ATTN_KINDS:
+            if cache_len > 0:
+                y, (k, v) = att.attn_forward(p["attn"], hn, cfg, kind,
+                                             positions, return_kv=True)
+                cache = self._kv_to_cache(k, v, kind, cache_len)
+            else:
+                y = att.attn_forward(p["attn"], hn, cfg, kind, positions)
+            y = checkpoint_name(y, "tp_out")
+            h = h + y
+            if kind == "xattn_dec":
+                hx = apply_norm(h, p["norm_x"], cfg.norm_type, cfg.norm_eps)
+                h = h + att.attn_forward(p["xattn"], hx, cfg, kind, positions,
+                                         xkv=h_enc)
+        elif kind == "ssm":
+            if cache_len > 0:
+                y, cache = self._ssm_prefill(p["ssm"], hn)
+            else:
+                y = ssm_mod.ssm_forward(p["ssm"], hn, cfg)
+            h = h + y
+        elif kind == "rglru":
+            if cache_len > 0:
+                y, cache = self._rglru_prefill(p["rglru"], hn)
+            else:
+                y = rg.rglru_forward(p["rglru"], hn, cfg)
+            h = h + y
+        if _has_mlp(kind):
+            hn2 = apply_norm(h, p["norm_2"], cfg.norm_type, cfg.norm_eps)
+            y2 = mlp_mod.mlp_forward(p["mlp"], hn2, cfg)
+            h = h + checkpoint_name(y2, "tp_out")
+        return shard(h, "batch", "seq", None), cache
+
+    def _kv_to_cache(self, k, v, kind, cache_len):
+        """Convert prefill (B,Hkv,S,Dh) K/V into the decode cache layout."""
+        cfg = self.cfg
+        B, Hkv, S, Dh = k.shape
+        if kind in ("window_attn", "chunk_attn"):
+            W = min(cfg.window, cache_len)
+            # ring layout: slot = pos % W for the last W positions
+            last = jnp.arange(S - W, S) if S >= W else jnp.arange(S)
+            kw, vw = k[:, :, -W:], v[:, :, -W:]
+            slots = jnp.mod(jnp.arange(max(S - W, 0), S), W) if S >= W else \
+                jnp.arange(S)
+            kc = jnp.zeros((B, Hkv, W, Dh), k.dtype).at[:, :, slots].set(kw)
+            vc = jnp.zeros((B, Hkv, W, Dh), v.dtype).at[:, :, slots].set(vw)
+            return {"k": kc, "v": vc}
+        size = cache_len
+        pad = size - S
+        kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return {"k": kc, "v": vc}
+
+    def _ssm_prefill(self, p, hn):
+        cfg = self.cfg
+        B, S, D = hn.shape
+        d_inner, H, N, P = ssm_mod._dims(cfg)
+        z, xbc, dt_raw = ssm_mod._split_proj(p, hn, cfg)
+        xbc_f = xbc.astype(jnp.float32)
+        conv_in = jax.nn.silu(ssm_mod._causal_conv(xbc_f, p["conv_w"], p["conv_b"]))
+        xs, Bm, Cm = jnp.split(conv_in, [d_inner, d_inner + N], axis=-1)
+        xs = xs.reshape(B, S, H, P)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        from repro.kernels.ssd_scan.ref import ssd_chunked_jnp
+
+        y, hT = ssd_chunked_jnp(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+        y = y + p["D_skip"][None, None, :, None] * xs
+        y = y.reshape(B, S, d_inner)
+        from repro.models.common import rmsnorm
+
+        y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_scale"])
+        out = jnp.einsum("bse,ed->bsd", y.astype(hn.dtype), p["out_proj"])
+        K = cfg.ssm_conv - 1
+        conv_hist = xbc_f[:, -K:] if S >= K else jnp.pad(
+            xbc_f, ((0, 0), (K - S, 0), (0, 0)))
+        return out, {"conv": conv_hist, "state": hT}
+
+    def _rglru_prefill(self, p, hn):
+        cfg = self.cfg
+        B, S, D = hn.shape
+        u_pre = jnp.einsum("bsd,dr->bsr", hn, p["w_x"]).astype(jnp.float32)
+        u = rg._causal_conv(u_pre, p["conv_w"], p["conv_b"])
+        log_a, b_term = rg._gates(p, u)
+        hseq, _ = rg.rglru_scan(log_a, b_term)
+        gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", hn, p["w_gate_branch"])
+                           .astype(jnp.float32))
+        y = (hseq * gate).astype(hn.dtype)
+        out = jnp.einsum("bsr,rd->bsd", y, p["out_proj"])
+        K = cfg.rglru_conv - 1
+        conv_hist = u_pre[:, -K:] if S >= K else jnp.pad(
+            u_pre, ((0, 0), (K - S, 0), (0, 0)))
+        return out, {"conv": conv_hist, "h": hseq[:, -1].astype(jnp.float32)}
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.input_embeds:
+            h = batch["embeds"].astype(self.dtype)
+        else:
+            h = params["embedding"][batch["tokens"]]
+        h = shard(h, "batch", "seq", None)
+        B, S = h.shape[:2]
+        if cfg.rope_mode == "mrope":
+            positions = batch.get("positions")
+            if positions is None:
+                pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+                positions = jnp.stack([pos, pos, pos])
+            elif positions.shape[0] == B and positions.shape[1] == 3:
+                positions = jnp.moveaxis(positions, 1, 0)  # (B,3,S) → (3,B,S)
+        elif cfg.rope_mode == "none":
+            h = (h.astype(jnp.float32)
+                 + sinusoidal_pos(S, cfg.d_model)[None]).astype(self.dtype)
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return h, positions
+
+    def _encode(self, params, batch, remat: bool = False):
+        cfg = self.cfg
+        h = batch["enc_embeds"].astype(self.dtype)
+        h = (h.astype(jnp.float32)
+             + sinusoidal_pos(h.shape[1], cfg.d_model)[None]).astype(self.dtype)
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        enc = params["encoder"]
+
+        def unit(hc, up):
+            out, _ = self._block_fwd(up["block_0"], hc, "attn_bidir", positions)
+            return out, None
+
+        if remat:
+            unit = jax.checkpoint(unit)
+        h, _ = jax.lax.scan(unit, h, enc["unit"])
+        return apply_norm(h, enc["final_norm"], cfg.norm_type, cfg.norm_eps)
+
+    @staticmethod
+    def _remat_policy(remat):
+        if remat in (True, "full"):
+            return None  # save nothing
+        if remat == "save_tp":
+            # keep the outputs of TP-collective-producing sublayers: their
+            # recomputation would replay the psum collectives in the bwd
+            return jax.checkpoint_policies.save_only_these_names("tp_out")
+        return None
+
+    def forward(self, params, batch, remat=False):
+        """Full forward → logits (B, S, V) in f32."""
+        cfg = self.cfg
+        h, positions = self._embed(params, batch)
+        h_enc = self._encode(params, batch, remat) if cfg.is_encdec else None
+
+        for si, (pattern, n_units) in enumerate(cfg.stages):
+            stage_p = params[f"stage_{si}"]
+
+            def unit(hc, up, _pattern=pattern):
+                for bi, kind in enumerate(_pattern):
+                    hc, _ = self._block_fwd(up[f"block_{bi}"], hc, kind,
+                                            positions, h_enc=h_enc)
+                return hc, None
+
+            if remat:
+                unit = jax.checkpoint(unit, policy=self._remat_policy(remat))
+            h, _ = jax.lax.scan(unit, h, stage_p)
+
+        h = apply_norm(h, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+        logits = self._logits(params, h)
+        return shard(logits, "batch", "seq", "vocab")
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        head = params["embedding"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("...d,dv->...v", h, head.astype(h.dtype))
+        logits = logits.astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad_mask, -1e9, logits)
+        return logits
+
+    def loss(self, params, batch, remat: bool = False):
+        """Next-token cross entropy (mean over positions)."""
+        logits = self.forward(params, batch, remat)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = batch["tokens"][:, 1:]
+            logits = logits[:, :-1]
+        else:
+            labels = labels[:, :logits.shape[1]]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        # one-hot contraction instead of take_along_axis: partitions cleanly
+        # over the vocab-sharded logits (local partial + psum), where a
+        # cross-shard gather would all-gather the full logits.
+        vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+        gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                       axis=-1)
+        return jnp.mean(logz - gold)
+
+    # ------------------------------------------------------------ decode ---
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False):
+        """Cache pytree mirroring the stage/block structure (stacked units)."""
+        cfg = self.cfg
+
+        def stacked(tree, n):
+            def expand(x):
+                if isinstance(x, jax.ShapeDtypeStruct):
+                    return jax.ShapeDtypeStruct((n,) + x.shape, x.dtype)
+                return jnp.broadcast_to(x[None], (n,) + x.shape)
+            return jax.tree.map(expand, tree)
+
+        def block_cache(kind):
+            if kind in ("attn", "attn_bidir", "window_attn", "chunk_attn",
+                        "xattn_dec"):
+                c = att.init_attn_cache(cfg, kind, batch, max_len,
+                                        abstract=abstract, dtype=self.dtype)
+                if kind == "xattn_dec":
+                    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+                    xshape = (batch, Hkv, cfg.enc_len, Dh)
+                    if abstract:
+                        c["xk"] = jax.ShapeDtypeStruct(xshape, self.dtype)
+                        c["xv"] = jax.ShapeDtypeStruct(xshape, self.dtype)
+                    else:
+                        c["xk"] = jnp.zeros(xshape, self.dtype)
+                        c["xv"] = jnp.zeros(xshape, self.dtype)
+                return c
+            if kind == "ssm":
+                return ssm_mod.init_ssm_cache(cfg, batch, abstract=abstract)
+            if kind == "rglru":
+                return rg.init_rglru_cache(cfg, batch, abstract=abstract)
+            raise ValueError(kind)
+
+        cache = {}
+        for si, (pattern, n_units) in enumerate(cfg.stages):
+            cache[f"stage_{si}"] = {
+                f"block_{bi}": stacked(block_cache(kind), n_units)
+                for bi, kind in enumerate(pattern)
+            }
+        return cache
+
+    def _block_decode(self, p, c, h, kind, pos):
+        cfg = self.cfg
+        hn = apply_norm(h, p["norm_1"], cfg.norm_type, cfg.norm_eps)
+        if kind in ATTN_KINDS:
+            y, kv = att.attn_decode(p["attn"], hn, {"k": c["k"], "v": c["v"]},
+                                    pos, cfg,
+                                    "attn" if kind == "xattn_dec" else kind)
+            c = dict(c)
+            c.update(kv)
+            h = h + y
+            if kind == "xattn_dec":
+                hx = apply_norm(h, p["norm_x"], cfg.norm_type, cfg.norm_eps)
+                h = h + att.cross_decode(p["xattn"], hx,
+                                         {"k": c["xk"], "v": c["xv"]}, cfg)
+        elif kind == "ssm":
+            y, c = ssm_mod.ssm_decode(p["ssm"], hn, c, cfg)
+            h = h + y
+        elif kind == "rglru":
+            y, c = rg.rglru_decode(p["rglru"], hn, c, cfg)
+            h = h + y
+        if _has_mlp(kind):
+            hn2 = apply_norm(h, p["norm_2"], cfg.norm_type, cfg.norm_eps)
+            h = h + mlp_mod.mlp_forward(p["mlp"], hn2, cfg)
+        return h, c
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One serving step. tokens: (B, 1) int32 (or embeds (B,1,D));
+        pos: scalar int32 — the global position being written.
+        Returns (logits (B, V) f32, new_cache)."""
+        cfg = self.cfg
+        if cfg.input_embeds:
+            h = tokens.astype(self.dtype)
+        else:
+            h = params["embedding"][tokens]
+        if cfg.rope_mode == "none":
+            S = 1
+            h = (h.astype(jnp.float32)
+                 + sinusoidal_pos(S, cfg.d_model, offset=pos)[None]
+                 ).astype(self.dtype)
+        new_cache = {}
+        for si, (pattern, n_units) in enumerate(cfg.stages):
+            stage_p = params[f"stage_{si}"]
+            stage_c = cache[f"stage_{si}"]
+
+            def unit(hc, pc, _pattern=pattern):
+                up, uc = pc
+                new_uc = {}
+                for bi, kind in enumerate(_pattern):
+                    hc, cb = self._block_decode(up[f"block_{bi}"],
+                                                uc[f"block_{bi}"], hc, kind, pos)
+                    new_uc[f"block_{bi}"] = cb
+                return hc, new_uc
+
+            h, new_stage_c = jax.lax.scan(unit, h, (stage_p, stage_c))
+            new_cache[f"stage_{si}"] = new_stage_c
+        h = apply_norm(h, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+        logits = self._logits(params, h)
+        return logits[:, 0], new_cache
+
+    # ----------------------------------------------------------- prefill ---
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Forward + cache extraction. Returns (last-position logits, cache)."""
+        cfg = self.cfg
+        h, positions = self._embed(params, batch)
+        S = h.shape[1]
+        max_len = max_len or S
+        h_enc = self._encode(params, batch) if cfg.is_encdec else None
+
+        cache = {}
+        for si, (pattern, n_units) in enumerate(cfg.stages):
+            stage_p = params[f"stage_{si}"]
+
+            def unit(hc, up, _pattern=pattern):
+                caches = {}
+                for bi, kind in enumerate(_pattern):
+                    hc, cb = self._block_fwd(up[f"block_{bi}"], hc, kind,
+                                             positions, h_enc=h_enc,
+                                             cache_len=max_len)
+                    if kind == "xattn_dec":
+                        cb["xk"] = jnp.einsum("bsd,dhk->bhsk", h_enc,
+                                              up[f"block_{bi}"]["xattn"]["wk"])
+                        cb["xv"] = jnp.einsum("bsd,dhk->bhsk", h_enc,
+                                              up[f"block_{bi}"]["xattn"]["wv"])
+                    caches[f"block_{bi}"] = cb
+                return hc, caches
+
+            h, stage_cache = jax.lax.scan(unit, h, stage_p)
+            cache[f"stage_{si}"] = stage_cache
+
+        h = apply_norm(h, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+        logits = self._logits(params, h[:, -1])
+        return logits, cache

@@ -1,0 +1,10 @@
+"""Model factory."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import LM
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

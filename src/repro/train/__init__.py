@@ -1,0 +1,8 @@
+"""Training substrate: optimizers, trainer, checkpointing, elasticity."""
+
+from repro.train.optim import make_optimizer
+from repro.train.trainer import make_train_step, param_shardings
+from repro.train.checkpoint import CheckpointManager
+
+__all__ = ["make_optimizer", "make_train_step", "param_shardings",
+           "CheckpointManager"]

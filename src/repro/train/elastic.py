@@ -1,0 +1,102 @@
+"""Elastic scaling + straggler mitigation for 1000+ node runs.
+
+Design (simulated here, since the container has one host):
+
+* **Deterministic, index-based data**: every batch is a pure function of
+  (seed, step, shard, n_shards) — `shard_plan`. Any surviving host can
+  recompute any failed host's shard; there is no data-loader state to lose.
+* **Mesh re-planning**: on node failure the controller computes the largest
+  valid mesh from the healthy device count (`plan_mesh`), keeping the model
+  axis intact (TP degree is a property of the checkpointed layout) and
+  shrinking the data axis — then re-lowers the step and restores the latest
+  checkpoint. Growth (nodes coming back) is the same path.
+* **Straggler watchdog**: per-step heartbeats; a host slower than
+  `threshold ×` the median for `patience` consecutive steps is treated as
+  failed (eject + reshard) — slow nodes hurt a synchronous program exactly
+  as much as dead ones.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+def plan_mesh(n_healthy: int, model_degree: int, pods: int = 1):
+    """Largest (pods, data, model) grid that fits the healthy devices.
+
+    The model axis is fixed by the checkpoint layout; data shrinks to the
+    largest whole multiple.
+    """
+    per_pod = n_healthy // pods
+    data = per_pod // model_degree
+    if data < 1:
+        raise RuntimeError(
+            f"cannot keep model_degree={model_degree} with {n_healthy} devices")
+    used = pods * data * model_degree
+    shape = (pods, data, model_degree) if pods > 1 else (data, model_degree)
+    return shape, used
+
+
+def shard_plan(seed: int, step: int, n_shards: int, shard: int,
+               global_batch: int):
+    """Deterministic batch-index assignment: (seed, step) → sample ids.
+
+    Returns the sample indices this shard must produce — pure function, so
+    recovery/resharding never replays or skips data.
+    """
+    per = global_batch // n_shards
+    base = (seed * 1_000_003 + step) * global_batch
+    return [base + shard * per + i for i in range(per)]
+
+
+@dataclass
+class StragglerWatchdog:
+    threshold: float = 2.0
+    patience: int = 3
+    _strikes: dict = field(default_factory=dict)
+
+    def observe(self, step_times: dict) -> list:
+        """step_times: host → seconds for this step. Returns hosts to eject."""
+        if not step_times:
+            return []
+        times = sorted(step_times.values())
+        median = times[len(times) // 2]
+        eject = []
+        for host, t in step_times.items():
+            if t > self.threshold * median:
+                self._strikes[host] = self._strikes.get(host, 0) + 1
+                if self._strikes[host] >= self.patience:
+                    eject.append(host)
+            else:
+                self._strikes[host] = 0
+        return eject
+
+
+@dataclass
+class ElasticController:
+    """Controller loop state machine (simulation-friendly)."""
+    n_devices: int
+    model_degree: int
+    pods: int = 1
+    watchdog: StragglerWatchdog = field(default_factory=StragglerWatchdog)
+    healthy: Optional[set] = None
+    events: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.healthy is None:
+            self.healthy = set(range(self.n_devices))
+
+    def fail(self, device_ids):
+        self.healthy -= set(device_ids)
+        self.events.append(("fail", tuple(device_ids), time.time()))
+
+    def recover(self, device_ids):
+        self.healthy |= set(device_ids)
+        self.events.append(("recover", tuple(device_ids), time.time()))
+
+    def current_plan(self):
+        shape, used = plan_mesh(len(self.healthy), self.model_degree, self.pods)
+        return {"mesh_shape": shape, "devices_used": used,
+                "devices_idle": len(self.healthy) - used}

@@ -1,0 +1,127 @@
+"""Optimizers: Adam and Adafactor with dtype-configurable state.
+
+Pure-functional: ``make_optimizer(tcfg) → (init_fn, update_fn)``. The huge
+archs (340B/72B) use Adafactor (factored second moments) or bf16 Adam state
+to fit the per-device HBM budget — selected per arch in the launcher.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_schedule(tcfg: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(tcfg.warmup_steps, 1))
+    frac = jnp.clip((step - tcfg.warmup_steps)
+                    / max(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return tcfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def make_optimizer(tcfg: TrainConfig) -> Tuple[Callable, Callable]:
+    state_dtype = jnp.bfloat16 if tcfg.state_dtype == "bfloat16" else jnp.float32
+
+    if tcfg.optimizer == "adam":
+        def init_fn(params):
+            zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+            return {"mu": jax.tree.map(zeros, params),
+                    "nu": jax.tree.map(zeros, params),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        def update_fn(grads, state, params):
+            step = state["step"] + 1
+            lr = lr_schedule(tcfg, step)
+            grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+            b1, b2 = tcfg.b1, tcfg.b2
+
+            def upd(g, mu, nu, p):
+                g = g.astype(jnp.float32)
+                mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+                nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+                mu_hat = mu_n / (1 - b1 ** step.astype(jnp.float32))
+                nu_hat = nu_n / (1 - b2 ** step.astype(jnp.float32))
+                delta = lr * mu_hat / (jnp.sqrt(nu_hat) + tcfg.eps)
+                if tcfg.weight_decay:
+                    delta = delta + lr * tcfg.weight_decay * p.astype(jnp.float32)
+                return ((p.astype(jnp.float32) - delta).astype(p.dtype),
+                        mu_n.astype(state_dtype), nu_n.astype(state_dtype))
+
+            out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+            new_params = jax.tree.map(lambda o: o[0], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+            new_mu = jax.tree.map(lambda o: o[1], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+            new_nu = jax.tree.map(lambda o: o[2], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+            new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+            return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+        return init_fn, update_fn
+
+    if tcfg.optimizer == "adafactor":
+        def init_fn(params):
+            def factored(p):
+                if p.ndim >= 2:
+                    return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            return {"v": jax.tree.map(factored, params),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        def update_fn(grads, state, params):
+            step = state["step"] + 1
+            lr = lr_schedule(tcfg, step)
+            grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+            beta2 = 1.0 - (step.astype(jnp.float32)) ** -0.8
+
+            def upd(g, v, p):
+                g = g.astype(jnp.float32)
+                g2 = g * g + 1e-30
+                if p.ndim >= 2:
+                    vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                    vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                    rms = (vr[..., None] * vc[..., None, :]
+                           / jnp.maximum(jnp.mean(vr, axis=-1,
+                                                  keepdims=True)[..., None], 1e-30))
+                    precond = g / jnp.sqrt(rms + 1e-30)
+                    new_v = {"vr": vr, "vc": vc}
+                else:
+                    vv = beta2 * v["v"] + (1 - beta2) * g2
+                    precond = g / jnp.sqrt(vv + 1e-30)
+                    new_v = {"v": vv}
+                # relative-scale update clipping (Adafactor's d=1 rule)
+                d = jnp.maximum(1.0, jnp.sqrt(jnp.mean(precond * precond)))
+                delta = lr * precond / d
+                if tcfg.weight_decay:
+                    delta = delta + lr * tcfg.weight_decay * p.astype(jnp.float32)
+                return ((p.astype(jnp.float32) - delta).astype(p.dtype), new_v)
+
+            is_v = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+            out = jax.tree.map(upd, grads, state["v"], params, is_leaf=is_v)
+            is_pair = lambda x: isinstance(x, tuple)
+            new_params = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+            new_v = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+            return new_params, {"v": new_v, "step": step}, \
+                {"lr": lr, "grad_norm": gnorm}
+
+        return init_fn, update_fn
+
+    raise ValueError(f"unknown optimizer {tcfg.optimizer!r}")

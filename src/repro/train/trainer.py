@@ -1,0 +1,102 @@
+"""Train-step builder: grad-accumulation scan, remat, sharded update.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, key) → (params, opt_state, metrics)
+suitable for ``jax.jit`` with in/out shardings derived from the model's
+logical specs via ``param_shardings``. Microbatch gradient accumulation is
+a ``lax.scan`` over the leading batch split — activation memory scales with
+the microbatch, HLO size stays constant.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShardingRules, TrainConfig
+from repro.train.optim import make_optimizer
+from repro.train.compression import ef_allreduce_grads
+
+
+def param_shardings(specs, rules: ShardingRules, mesh):
+    """Logical spec tree → NamedSharding tree."""
+    def to_sharding(logical):
+        return NamedSharding(mesh, rules.spec(*logical))
+    return jax.tree.map(to_sharding, specs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_shardings(batch_tree, rules: ShardingRules, mesh):
+    def spec_for(x):
+        ndim = len(x.shape)
+        return NamedSharding(mesh, rules.spec(*(["batch"] + [None] * (ndim - 1))))
+    return jax.tree.map(spec_for, batch_tree)
+
+
+def constrain_like_params(tree, param_specs):
+    """Constrain a param-shaped tree (e.g. grad accumulators) to the params'
+    logical sharding — without this the f32 accumulation buffers stay
+    replicated and every microbatch's gradient sync becomes a full
+    all-reduce instead of a reduce-scatter."""
+    from repro.models.common import current_mesh_and_rules
+
+    state = current_mesh_and_rules()
+    if state is None or param_specs is None:
+        return tree
+    mesh, rules = state
+    from jax.sharding import NamedSharding
+
+    def con(x, spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, rules.spec(*spec)))
+
+    return jax.tree.map(con, tree, param_specs,
+                        is_leaf=lambda x: not isinstance(x, dict))
+
+
+def make_train_step(model, tcfg: TrainConfig, pod_axis: Optional[str] = None,
+                    param_specs=None):
+    """Build the jittable train step for ``model`` (a repro.models.LM)."""
+    opt_init, opt_update = make_optimizer(tcfg)
+    remat = False if tcfg.remat == "none" else tcfg.remat
+
+    def loss_fn(params, microbatch):
+        return model.loss(params, microbatch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        n_micro = tcfg.microbatches
+
+        if n_micro <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain_like_params(grads, param_specs)
+        else:
+            def split(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads = constrain_like_params(grads, param_specs)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grad_acc, grads)), None
+
+            zeros = constrain_like_params(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params), param_specs)
+            (loss_sum, grads), _ = jax.lax.scan(accum, (0.0, zeros), micro)
+            loss = loss_sum / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        if tcfg.grad_compression and pod_axis is not None:
+            grads, opt_state = ef_allreduce_grads(grads, opt_state, pod_axis)
+
+        params, opt_state, metrics = opt_update(grads, opt_state, params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return opt_init, train_step

@@ -1,0 +1,57 @@
+"""Privacy accounting (Thm B.1) and calibration."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accountant import PrivacyLedger, advanced_composition, calibrate_eps0
+
+
+class TestComposition:
+    def test_matches_paper_formula(self):
+        eps0, k, dp = 0.1, 100, 1e-6
+        eps, delta = advanced_composition(eps0, 0.0, k, dp)
+        expected = eps0 * math.sqrt(2 * k * math.log(1 / dp)) + 2 * k * eps0 ** 2
+        assert math.isclose(eps, expected)
+        assert delta == dp
+
+    def test_tight_not_worse_for_small_eps(self):
+        loose, _ = advanced_composition(0.01, 0, 1000, 1e-9, tight=False)
+        tight, _ = advanced_composition(0.01, 0, 1000, 1e-9, tight=True)
+        assert tight <= loose
+
+    @given(st.floats(1e-4, 0.5), st.integers(1, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_monotone_in_k(self, eps0, k):
+        e1, _ = advanced_composition(eps0, 0, k, 1e-9)
+        e2, _ = advanced_composition(eps0, 0, k + 1, 1e-9)
+        assert e2 >= e1
+
+    def test_calibration_roundtrip(self):
+        """The paper's ε₀ = ε/√(T ln 1/δ) keeps composed ε near target."""
+        eps, delta, T = 1.0, 1e-3, 400
+        eps0 = calibrate_eps0(eps, delta, T, "mwem")
+        composed, _ = advanced_composition(eps0, 0, T, delta)
+        assert composed < 2.5 * eps  # same order as the target
+
+
+class TestLedger:
+    def test_grouping_and_slack(self):
+        led = PrivacyLedger(target_delta_prime=1e-9)
+        for _ in range(50):
+            led.record(0.05, 0.0, "em")
+        led.record_index_failure(1e-4)
+        led.record_approx_slack(0.01)
+        eps, delta = led.composed()
+        base, _ = advanced_composition(0.05, 0, 50, 1e-9)
+        assert math.isclose(eps, base + 0.02, rel_tol=1e-9)
+        assert delta >= 1e-4
+
+    def test_basic_composition(self):
+        led = PrivacyLedger()
+        led.record(0.1)
+        led.record(0.2)
+        eps, delta = led.basic()
+        assert math.isclose(eps, 0.3)
+        assert delta == 0.0

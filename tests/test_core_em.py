@@ -1,0 +1,165 @@
+"""Statistical + unit tests for the Gumbel / EM / LazyEM machinery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gumbel import gumbel, tail_prob, truncated_gumbel
+from repro.core.em import exact_em, em_scores
+from repro.core.lazy_em import lazy_em, lazy_em_from_topk, _complement_shift
+
+
+def _empirical_dist(sample_fn, n, trials, seed=0):
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, trials)
+    idx = jax.vmap(sample_fn)(keys)
+    counts = np.bincount(np.asarray(idx), minlength=n)
+    return counts / trials
+
+
+def _tv(p, q):
+    return 0.5 * np.abs(np.asarray(p) - np.asarray(q)).sum()
+
+
+class TestGumbel:
+    def test_tail_prob_matches_definition(self):
+        for B in [-2.0, 0.0, 1.0, 5.0, 12.0]:
+            expected = 1.0 - np.exp(-np.exp(-B))
+            assert np.isclose(float(tail_prob(jnp.float32(B))), expected, rtol=1e-5)
+
+    def test_tail_prob_stable_for_large_B(self):
+        # naive 1 - exp(-exp(-B)) rounds to 0 in f32 near B ~ 17
+        p = float(tail_prob(jnp.float32(20.0)))
+        assert p > 0
+        assert np.isclose(p, np.exp(-20.0), rtol=1e-4)
+
+    def test_truncated_gumbel_exceeds_threshold(self):
+        key = jax.random.PRNGKey(0)
+        for B in [-1.0, 0.0, 3.0, 10.0]:
+            g = truncated_gumbel(key, (20_000,), B)
+            assert bool(jnp.all(g > B)), f"B={B}"
+
+    def test_truncated_gumbel_matches_conditional_law(self):
+        # Compare with rejection sampling from the unconditional Gumbel.
+        B = 0.5
+        key = jax.random.PRNGKey(1)
+        g_trunc = np.asarray(truncated_gumbel(key, (200_000,), B))
+        raw = np.asarray(gumbel(jax.random.PRNGKey(2), (2_000_000,)))
+        g_rej = raw[raw > B][:200_000]
+        qs = np.linspace(0.01, 0.99, 25)
+        a, b = np.quantile(g_trunc, qs), np.quantile(g_rej, qs)
+        np.testing.assert_allclose(a, b, atol=0.05)
+
+
+class TestExactEM:
+    def test_gumbel_max_matches_softmax(self):
+        utilities = jnp.array([0.0, 1.0, 2.0, 0.5, -1.0])
+        eps, sens = 2.0, 1.0
+        x = em_scores(utilities, eps, sens)
+        target = np.asarray(jax.nn.softmax(x))
+        emp = _empirical_dist(lambda k: exact_em(k, utilities, eps, sens),
+                              5, 40_000)
+        assert _tv(emp, target) < 0.015
+
+
+class TestComplementShift:
+    @given(st.integers(2, 60), st.integers(1, 10), st.integers(0, 10_000))
+    @settings(max_examples=60, deadline=None)
+    def test_maps_to_complement(self, n, k, seed):
+        k = min(k, n - 1)
+        rng = np.random.default_rng(seed)
+        S = np.sort(rng.choice(n, size=k, replace=False)).astype(np.int32)
+        comp = np.setdiff1d(np.arange(n), S)
+        u = jnp.arange(n - k, dtype=jnp.int32)
+        mapped = np.asarray(_complement_shift(jnp.asarray(S), u))
+        np.testing.assert_array_equal(mapped, comp)
+
+
+class TestLazyEM:
+    def test_matches_exact_em_distribution(self):
+        scores = jnp.array([3.0, 2.5, 2.0, 1.0, 0.5, 0.0, -0.5, -1.0, -2.0, -3.0])
+        n = scores.shape[0]
+        target = np.asarray(jax.nn.softmax(scores))
+        emp = _empirical_dist(
+            lambda k: lazy_em(k, scores, k=3, tail_cap=8 * n).index, n, 60_000)
+        assert _tv(emp, target) < 0.015
+
+    def test_uniform_scores(self):
+        # worst case for the tail bound: everything survives the margin
+        n = 16
+        scores = jnp.zeros((n,))
+        emp = _empirical_dist(
+            lambda k: lazy_em(k, scores, k=4, tail_cap=8 * n).index, n, 40_000)
+        assert _tv(emp, np.full(n, 1 / n)) < 0.02
+
+    def test_tail_count_expectation(self):
+        # Mussmann et al.: E[C] ≤ n/k
+        n, k = 400, 20
+        key = jax.random.PRNGKey(0)
+        scores = jax.random.normal(key, (n,))
+        total = 0
+        trials = 300
+        for i in range(trials):
+            out = lazy_em(jax.random.PRNGKey(i + 1), scores, k=k, tail_cap=n)
+            total += int(out.tail_count)
+        assert total / trials <= 3.0 * n / k  # generous slack on the bound
+
+    def test_overflow_flag(self):
+        n = 100
+        scores = jnp.zeros((n,))  # uniform → C ≈ n
+        seen = False
+        for i in range(20):
+            out = lazy_em(jax.random.PRNGKey(i), scores, k=2, tail_cap=4)
+            seen = seen or bool(out.overflow)
+        assert seen
+
+    def test_alg6_margin_slack_preserves_distribution(self):
+        """Alg. 6: with a c-approximate top-k and B lowered by c, sampling is exact."""
+        scores = jnp.array([2.0, 1.9, 1.8, 1.2, 1.1, 0.4, 0.0, -0.7])
+        n = scores.shape[0]
+        # adversarial approximate top-3: misses the true #3 (1.8), has #4 (1.2)
+        approx_idx = jnp.array([0, 1, 3], dtype=jnp.int32)
+        approx_scores = scores[approx_idx]
+        c = 1.8 - 1.2 + 1e-6  # Def 3.4 margin of this S
+        target = np.asarray(jax.nn.softmax(scores))
+
+        def sample(k):
+            return lazy_em_from_topk(
+                k, approx_idx, approx_scores, n,
+                score_fn=lambda idx: scores[idx], tail_cap=8 * n,
+                margin_slack=c).index
+
+        emp = _empirical_dist(sample, n, 60_000)
+        assert _tv(emp, target) < 0.015
+
+    def test_alg5_ratio_bounds(self):
+        """Thm F.4: approximate top-k without slack stays within e^{±c}."""
+        scores = jnp.array([2.0, 1.9, 1.8, 1.2, 1.1, 0.4, 0.0, -0.7])
+        n = scores.shape[0]
+        approx_idx = jnp.array([0, 1, 3], dtype=jnp.int32)
+        c = 1.8 - 1.2
+        target = np.asarray(jax.nn.softmax(scores))
+
+        def sample(k):
+            return lazy_em_from_topk(
+                k, approx_idx, scores[approx_idx], n,
+                score_fn=lambda idx: scores[idx], tail_cap=8 * n,
+                margin_slack=0.0).index
+
+        emp = _empirical_dist(sample, n, 120_000)
+        ratio = emp / target
+        # generous statistical slack around [e^-c, e^c]
+        assert np.all(ratio < np.exp(c) * 1.15)
+        assert np.all(ratio > np.exp(-c) * 0.85)
+
+    @given(st.integers(4, 64), st.integers(1, 8), st.integers(0, 1000))
+    @settings(max_examples=30, deadline=None)
+    def test_winner_always_valid(self, n, k, seed):
+        k = min(k, n)
+        key = jax.random.PRNGKey(seed)
+        scores = jax.random.normal(key, (n,))
+        out = lazy_em(jax.random.PRNGKey(seed + 1), scores, k=k, tail_cap=4 * n)
+        assert 0 <= int(out.index) < n
+        assert int(out.n_scored) <= 5 * n + k

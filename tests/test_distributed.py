@@ -1,0 +1,197 @@
+"""Multi-device behaviour (run in subprocesses with forced host devices):
+int8 error-feedback all-reduce, distributed Fast-MWEM iteration, dry-run
+machinery on a small mesh."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = REPO_SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+class TestCompression:
+    def test_ring_allreduce_int8_matches_mean(self):
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from repro.train.compression import ring_allreduce_int8
+            mesh = jax.make_mesh((8,), ("pod",),
+                                 axis_types=(jax.sharding.AxisType.Auto,))
+            n = 4096
+            xs = jax.random.normal(jax.random.PRNGKey(0), (8, n))
+            f = shard_map(lambda x: ring_allreduce_int8(x[0], "pod")[None],
+                          mesh=mesh, in_specs=P("pod", None),
+                          out_specs=P("pod", None), check_rep=False)
+            got = np.asarray(f(xs))
+            want = np.asarray(xs.mean(0))
+            for i in range(8):
+                err = np.abs(got[i] - want)
+                rel = err.max() / (np.abs(want).max() + 1e-9)
+                assert rel < 0.02, rel   # int8 quantization noise only
+            print("OK")
+        """)
+        assert "OK" in out
+
+    def test_error_feedback_reduces_bias(self):
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from repro.train.compression import ef_allreduce_grads
+            mesh = jax.make_mesh((4,), ("pod",),
+                                 axis_types=(jax.sharding.AxisType.Auto,))
+            grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (4, 1000))}
+            def step(g, err):
+                out, st = ef_allreduce_grads({"w": g["w"][0]},
+                                             {"ef_error": err[0]}, "pod")
+                return out["w"][None], st["ef_error"][None]
+            f = shard_map(step, mesh=mesh,
+                          in_specs=(P("pod", None), P("pod", None)),
+                          out_specs=(P("pod", None), P("pod", None)),
+                          check_rep=False)
+            err = jnp.zeros((4, 1000))
+            acc_true = np.zeros(1000)
+            acc_comp = np.zeros(1000)
+            for t in range(20):
+                g = {"w": jax.random.normal(jax.random.PRNGKey(t), (4, 1000))}
+                out, err = f(g, err)
+                acc_true += np.asarray(g["w"]).mean(0)
+                acc_comp += np.asarray(out)[0]
+            # error feedback keeps the *accumulated* signal nearly unbiased
+            denom = np.abs(acc_true).mean() + 1e-9
+            assert np.abs(acc_comp - acc_true).mean() / denom < 0.05
+            print("OK")
+        """)
+        assert "OK" in out
+
+
+class TestDistributedMWEM:
+    def test_lazy_iteration_runs_and_selects(self):
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np, math
+            from repro.core.distributed import (build_distributed_mwem_cell,
+                                                make_mwem_iteration)
+            mesh = jax.make_mesh((4, 2), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            m, U = 1024, 64
+            n_data, m_loc = 4, 256
+            fn = make_mwem_iteration(mesh, m=m, U=U, nlist=32, cap=16,
+                                     nprobe=4, k_loc=16, tail_cap=64,
+                                     scale=20.0, eta=0.05, mode="lazy",
+                                     multi_pod=False)
+            rng = np.random.default_rng(0)
+            Q = jnp.asarray(rng.uniform(0, 1, (m, U)), jnp.float32)
+            # per-shard IVF stand-in: random centroids + cells
+            cents = jnp.asarray(rng.standard_normal((n_data, 32, U)), jnp.float32)
+            cells = jnp.asarray(rng.integers(0, m_loc, (n_data, 32, 16)), jnp.int32)
+            logw = jnp.zeros((U,))
+            h = jnp.asarray(rng.dirichlet(np.ones(U)), jnp.float32)
+            key = jax.random.PRNGKey(0)
+            with mesh:
+                logw2, stats = jax.jit(fn)(Q, cents, cells, logw, h,
+                                           jax.random.key_data(key))
+            assert logw2.shape == (U,)
+            assert 0 <= int(stats["winner"]) < m
+            assert np.isfinite(np.asarray(logw2)).all()
+            print("OK", int(stats["winner"]), float(stats["n_scored"]))
+        """)
+        assert "OK" in out
+
+    def test_exhaustive_vs_lazy_collective_volume(self):
+        """The lazy iteration must move far fewer collective bytes."""
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.core.distributed import make_mwem_iteration
+            from repro.analysis.hlo import analyze_hlo
+            mesh = jax.make_mesh((4, 2), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            # sublinearity needs m_loc ≫ √m_loc·probe width — use a scale
+            # where the exhaustive psum of m_loc scores dominates
+            m, U = 262144, 64
+            vols = {}
+            for mode in ("exhaustive", "lazy"):
+                fn = make_mwem_iteration(mesh, m=m, U=U, nlist=512, cap=256,
+                                         nprobe=4, k_loc=256, tail_cap=1024,
+                                         scale=20.0, eta=0.05, mode=mode,
+                                         multi_pod=False)
+                Q = jax.ShapeDtypeStruct((m, U), jnp.float32)
+                cents = jax.ShapeDtypeStruct((4, 512, U), jnp.float32)
+                cells = jax.ShapeDtypeStruct((4, 512, 256), jnp.int32)
+                w = jax.ShapeDtypeStruct((U,), jnp.float32)
+                key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+                with mesh:
+                    c = jax.jit(fn).lower(Q, cents, cells, w, w, key).compile()
+                vols[mode] = analyze_hlo(c.as_text()).collective_bytes
+            assert vols["lazy"] < vols["exhaustive"], vols
+            print("OK", vols)
+        """)
+        assert "OK" in out
+
+
+class TestDryRunMachinery:
+    def test_cell_builds_and_compiles_on_small_mesh(self):
+        out = _run("""
+            import jax, jax.numpy as jnp
+            import repro.launch.cells as C
+            C.MODEL_DEGREE = 2
+            from repro.configs import get_smoke_config
+            import repro.launch.cells as cells_mod
+            # monkeypatch get_config to the smoke config for a tiny compile
+            import repro.configs as cfgs
+            orig = cells_mod.get_config
+            cells_mod.get_config = lambda name: cfgs.get_smoke_config(name)
+            mesh = jax.make_mesh((2, 2), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            from repro.configs.base import SHAPES, ShapeConfig
+            SHAPES["train_4k"] = ShapeConfig("train_4k", 64, 8, "train")
+            cell = cells_mod.build_cell("llama3-8b", "train_4k", mesh, False)
+            with mesh:
+                compiled = jax.jit(cell.fn).lower(*cell.args).compile()
+            assert compiled.cost_analysis()["flops"] > 0
+            print("OK")
+        """, devices=4)
+        assert "OK" in out
+
+
+class TestMoEEP:
+    def test_ep_matches_dense_path(self):
+        out = _run("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs import get_smoke_config
+            from repro.models import mlp as M
+            from repro.models.common import sharding_ctx, ParamBuilder
+            from repro.configs.base import ShardingRules
+            cfg = get_smoke_config("qwen3-moe-30b-a3b").with_(
+                dtype="float32", moe_capacity_factor=8.0)
+            pb = ParamBuilder(jax.random.PRNGKey(0), dtype=jnp.float32)
+            M.init_mlp(pb, cfg, "mlp")
+            p = pb.params["mlp"]
+            x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+            y_dense = M.moe_mlp_dense(p, x, cfg)
+            mesh = jax.make_mesh((2, 4), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            rules = ShardingRules(batch="data", experts="model")
+            with mesh:
+                y_ep = jax.jit(lambda p, x: M.moe_mlp_ep(p, x, cfg, mesh,
+                                                         rules))(p, x)
+            # routing identical; combine order differs → fp tolerance
+            np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_ep),
+                                       rtol=2e-4, atol=2e-4)
+            print("OK")
+        """, devices=8)
+        assert "OK" in out

@@ -1,0 +1,102 @@
+"""Private LP solvers (paper §4, §5.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DualLPConfig, ScalarLPConfig,
+    solve_constraint_private_lp, solve_scalar_lp,
+)
+from repro.core.bregman import bregman_project_dense
+from repro.core.queries import random_feasible_lp, random_packing_lp
+from repro.mips import FlatIndex, IVFIndex
+
+
+class TestBregman:
+    @given(st.integers(4, 100), st.integers(1, 20), st.integers(0, 500))
+    @settings(max_examples=50, deadline=None)
+    def test_projection_is_dense_distribution(self, n, s, seed):
+        s = min(s, n)
+        a = np.abs(np.random.default_rng(seed).standard_normal(n)) + 1e-3
+        y = np.asarray(bregman_project_dense(jnp.asarray(a, jnp.float32), float(s)))
+        assert np.isclose(y.sum(), 1.0, atol=1e-4)
+        assert y.max() <= 1.0 / s + 1e-4
+
+    def test_lemma_a3_neighbor_stability(self):
+        """Lemma A.3: projections of A and A∪{a'} differ by ≤ 1/s in L1."""
+        rng = np.random.default_rng(7)
+        s = 8
+        for _ in range(20):
+            a = np.abs(rng.standard_normal(50)) + 1e-3
+            extra = abs(rng.standard_normal()) + 1e-3
+            a_ext = np.concatenate([a, [extra]])
+            y1 = np.asarray(bregman_project_dense(jnp.asarray(a, jnp.float32), s))
+            y2 = np.asarray(bregman_project_dense(jnp.asarray(a_ext, jnp.float32), s))
+            diff = np.abs(y1 - y2[:-1]).sum() + y2[-1]
+            assert diff <= 2.0 / s + 5e-2  # statement bound + numeric slack
+
+    def test_uniform_input_stays_uniform(self):
+        a = jnp.ones((10,))
+        y = np.asarray(bregman_project_dense(a, 5.0))
+        np.testing.assert_allclose(y, 0.1, atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def lp_instance():
+    A, b, x_star = random_feasible_lp(jax.random.PRNGKey(0), m=300, d=20)
+    return A, b, x_star
+
+
+class TestScalarLP:
+    def test_exact_solver_low_violations(self, lp_instance):
+        A, b, _ = lp_instance
+        cfg = ScalarLPConfig(T=300, alpha=0.5, mode="exact")
+        res = solve_scalar_lp(A, b, cfg, jax.random.PRNGKey(1))
+        assert res.violated_frac <= 0.15
+
+    def test_fast_matches_exact(self, lp_instance):
+        """Fig. 5: Fast solver ≈ exhaustive solver on violated fraction."""
+        A, b, _ = lp_instance
+        Ab = np.concatenate([np.asarray(A), np.asarray(b)[:, None]], axis=1)
+        index = FlatIndex(Ab, use_pallas="never")
+        exact = solve_scalar_lp(A, b, ScalarLPConfig(T=200, mode="exact"),
+                                jax.random.PRNGKey(2))
+        fast = solve_scalar_lp(A, b, ScalarLPConfig(T=200, mode="fast"),
+                               jax.random.PRNGKey(2), index=index)
+        assert abs(exact.violated_frac - fast.violated_frac) < 0.12
+        assert np.mean(fast.n_scored) < A.shape[0]
+
+    def test_solution_on_simplex(self, lp_instance):
+        A, b, _ = lp_instance
+        res = solve_scalar_lp(A, b, ScalarLPConfig(T=50, mode="exact"),
+                              jax.random.PRNGKey(3))
+        x = np.asarray(res.x_bar)
+        assert np.isclose(x.sum(), 1.0, atol=1e-4) and np.all(x >= 0)
+
+
+class TestDualLP:
+    def test_constraint_private_solver(self):
+        A, b, c = random_packing_lp(jax.random.PRNGKey(4), m=150, d=40)
+        # choose OPT so that K_OPT contains a near-feasible vertex mixture
+        x0 = jnp.full((40,), 1.0 / 40)
+        opt = float(c @ x0) * 0.5
+        cfg = DualLPConfig(T=150, s=12, alpha=1.0, mode="exact")
+        res = solve_constraint_private_lp(A, b, c, opt, cfg, jax.random.PRNGKey(5))
+        # mass of badly-violated constraints is controlled
+        assert res.n_violated <= A.shape[0] * 0.3
+        assert np.isclose(float(jnp.sum(res.x_bar * c)), opt, rtol=1e-3)
+
+    def test_fast_dual_with_index(self):
+        A, b, c = random_packing_lp(jax.random.PRNGKey(6), m=100, d=64)
+        x0 = jnp.full((64,), 1.0 / 64)
+        opt = float(c @ x0) * 0.5
+        N = np.asarray(-(opt / c)[:, None] * A.T)
+        index = FlatIndex(N, use_pallas="never")
+        cfg = DualLPConfig(T=100, s=10, alpha=1.0, mode="fast")
+        res = solve_constraint_private_lp(A, b, c, opt, cfg, jax.random.PRNGKey(7),
+                                          index=index)
+        assert res.n_violated <= A.shape[0] * 0.35
+        assert np.mean(res.n_scored) < 64

@@ -1,0 +1,115 @@
+"""Recall / exactness tests for the k-MIPS substrate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.mips import (
+    FlatIndex, FlatAbsIndex, IVFIndex, LSHIndex, NSWIndex,
+    augment_complement, build_index,
+)
+from repro.mips.transform import mips_to_knn_keys, mips_to_knn_query
+
+
+def _make_data(n=512, dim=32, seed=0):
+    rng = np.random.default_rng(seed)
+    V = rng.standard_normal((n, dim)).astype(np.float32)
+    q = rng.standard_normal((dim,)).astype(np.float32)
+    return V, q
+
+
+def _recall(idx, V, q, k):
+    truth = np.argsort(-(V @ q))[:k]
+    return len(set(np.asarray(idx).tolist()) & set(truth.tolist())) / k
+
+
+class TestTransform:
+    @given(st.integers(2, 50), st.integers(2, 16), st.integers(0, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_preserves_inner_products_and_norms(self, n, dim, seed):
+        rng = np.random.default_rng(seed)
+        V = rng.standard_normal((n, dim)).astype(np.float32)
+        q = rng.standard_normal((dim,)).astype(np.float32)
+        Vt, M = mips_to_knn_keys(V)
+        qt = mips_to_knn_query(q)
+        np.testing.assert_allclose(Vt @ qt, V @ q, rtol=1e-5, atol=1e-5)
+        norms = np.linalg.norm(Vt, axis=1)
+        np.testing.assert_allclose(norms, M, rtol=1e-4)
+
+
+class TestFlat:
+    def test_exact(self):
+        V, q = _make_data()
+        idx, scores = FlatIndex(V, use_pallas="never").query(q, 10)
+        assert _recall(idx, V, q, 10) == 1.0
+        np.testing.assert_allclose(np.asarray(scores), np.sort(V @ q)[::-1][:10],
+                                   rtol=1e-5)
+
+    def test_flat_abs_matches_augmented(self):
+        rng = np.random.default_rng(1)
+        Q = rng.uniform(0, 1, size=(100, 16)).astype(np.float32)
+        v = rng.standard_normal(16).astype(np.float32)
+        v = v - v.mean()  # Σv = 0 — the histogram-difference regime
+        aug = augment_complement(Q)
+        idx_a, s_a = FlatIndex(aug, use_pallas="never").query(v, 7)
+        idx_b, s_b = FlatAbsIndex(Q).query(v, 7)
+        np.testing.assert_allclose(np.asarray(s_a), np.asarray(s_b), rtol=2e-4, atol=2e-5)
+        assert set(np.asarray(idx_a).tolist()) == set(np.asarray(idx_b).tolist())
+
+
+class TestIVF:
+    def test_high_recall_on_clustered_data(self):
+        rng = np.random.default_rng(0)
+        centers = rng.standard_normal((16, 24)) * 4
+        V = (centers[rng.integers(0, 16, 2048)] +
+             rng.standard_normal((2048, 24)) * 0.3).astype(np.float32)
+        q = V[3] + rng.standard_normal(24).astype(np.float32) * 0.05
+        ix = IVFIndex(V, seed=0)
+        idx, _ = ix.query(q, 10)
+        assert _recall(idx, V, q, 10) >= 0.5
+        assert ix.query_cost(10) < V.shape[0]
+
+    def test_valid_ids_and_sorted_scores(self):
+        V, q = _make_data(700, 24, 2)
+        ix = IVFIndex(V, seed=1)
+        idx, scores = ix.query(q, 16)
+        s = np.asarray(scores)
+        assert np.all(np.diff(s) <= 1e-6)
+        assert np.all(np.asarray(idx) >= 0) and np.all(np.asarray(idx) < 700)
+
+
+class TestLSH:
+    def test_reasonable_recall(self):
+        V, q = _make_data(1024, 32, 3)
+        # make the true top item easy: plant a near-duplicate of the query
+        V[0] = q * 3.0
+        ix = LSHIndex(V, n_tables=16, seed=0)
+        idx, _ = ix.query(q, 8)
+        assert 0 in np.asarray(idx).tolist()
+
+
+class TestNSW:
+    def test_recall_against_exact(self):
+        V, q = _make_data(2048, 32, 4)
+        ix = NSWIndex(V, deg=16, ef=48, rounds=5, seed=0)
+        idx, _ = ix.query(q, 10)
+        assert _recall(idx, V, q, 10) >= 0.6
+
+    def test_tiny_dataset(self):
+        V, q = _make_data(10, 8, 5)
+        ix = NSWIndex(V, deg=4, ef=8, rounds=2, seed=0)
+        idx, scores = ix.query(q, 3)
+        assert _recall(idx, V, q, 3) == 1.0
+
+
+class TestFactory:
+    def test_build_index(self):
+        V, q = _make_data(256, 16, 6)
+        for kind in ("flat", "ivf", "lsh", "nsw"):
+            ix = build_index(kind, V)
+            idx, scores = ix.query(q, 4)
+            assert idx.shape == (4,)
+        with pytest.raises(ValueError):
+            build_index("bogus", V)

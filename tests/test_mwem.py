@@ -1,0 +1,94 @@
+"""End-to-end MWEM / Fast-MWEM behaviour (paper §3, §5.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MWEMConfig, run_mwem
+from repro.core.queries import gaussian_histogram, random_binary_queries, max_error
+from repro.mips import FlatAbsIndex, IVFIndex, augment_complement
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(0)
+    kh, kq = jax.random.split(key)
+    U, m, n = 128, 200, 500
+    h = gaussian_histogram(kh, n, U)
+    Q = random_binary_queries(kq, m, U)
+    return Q, h, n
+
+
+def test_exact_mwem_reduces_error(workload):
+    Q, h, n = workload
+    cfg = MWEMConfig(eps=1.0, delta=1e-3, T=150, mode="exact", n_records=n)
+    res = run_mwem(Q, h, cfg, jax.random.PRNGKey(1))
+    uniform_err = float(max_error(Q, h, jnp.full_like(h, 1 / h.shape[0])))
+    assert res.final_error < uniform_err * 0.8
+    assert len(res.selected) == 150
+
+
+def test_paper_literal_update_diverges(workload):
+    """Empirical support for the DESIGN.md faithfulness note: the literal
+    Alg. 1 update (sign-less downweighting) does not reduce error."""
+    Q, h, n = workload
+    hardt = run_mwem(Q, h, MWEMConfig(T=100, mode="exact", update_rule="hardt",
+                                      n_records=n), jax.random.PRNGKey(9))
+    lit = run_mwem(Q, h, MWEMConfig(T=100, mode="exact", update_rule="paper",
+                                    n_records=n), jax.random.PRNGKey(9))
+    assert hardt.final_error < lit.final_error
+
+
+def test_fast_matches_exact_error(workload):
+    """Fig. 2: |error(MWEM) − error(FastMWEM-flat)| ≈ 0."""
+    Q, h, n = workload
+    T = 80
+    exact = run_mwem(Q, h, MWEMConfig(T=T, mode="exact", n_records=n),
+                     jax.random.PRNGKey(2))
+    index = FlatAbsIndex(Q)
+    fast = run_mwem(Q, h, MWEMConfig(T=T, mode="fast", n_records=n),
+                    jax.random.PRNGKey(2), index=index)
+    assert abs(exact.final_error - fast.final_error) < 0.05
+    # sublinear scoring: mean evaluations well below m
+    assert np.mean(fast.n_scored) < Q.shape[0] * 0.9
+
+
+def test_fast_with_ivf_index(workload):
+    Q, h, n = workload
+    aug = augment_complement(np.asarray(Q))
+    index = IVFIndex(aug, seed=0)
+    cfg = MWEMConfig(T=40, mode="fast", n_records=n)
+    res = run_mwem(Q, h, cfg, jax.random.PRNGKey(3), index=index)
+    uniform_err = float(max_error(Q, h, jnp.full_like(h, 1 / h.shape[0])))
+    assert res.final_error < uniform_err  # still learns
+    eps, delta = res.ledger.composed()
+    assert delta >= 1.0 / aug.shape[0]  # Thm 3.3 failure mass recorded
+
+
+def test_update_rules(workload):
+    Q, h, n = workload
+    for rule in ("paper", "signed", "hardt"):
+        cfg = MWEMConfig(T=20, mode="exact", update_rule=rule, n_records=n)
+        res = run_mwem(Q, h, cfg, jax.random.PRNGKey(4))
+        assert np.isfinite(res.final_error)
+
+
+def test_privacy_ledger_totals(workload):
+    Q, h, n = workload
+    T = 16
+    cfg = MWEMConfig(eps=1.0, delta=1e-3, T=T, mode="exact",
+                     update_rule="hardt", n_records=n)
+    res = run_mwem(Q, h, cfg, jax.random.PRNGKey(5))
+    # 2 events per iteration (EM + Laplace)
+    assert len(res.ledger.events) == 2 * T
+    eps, delta = res.ledger.composed()
+    assert 0 < eps < 10
+    assert delta <= 1e-2
+
+
+def test_eval_every_records_errors(workload):
+    Q, h, n = workload
+    cfg = MWEMConfig(T=20, mode="exact", eval_every=5, n_records=n)
+    res = run_mwem(Q, h, cfg, jax.random.PRNGKey(6))
+    assert [t for t, _ in res.errors] == [5, 10, 15, 20]

@@ -1,0 +1,150 @@
+"""Training substrate: optimizers, grad accumulation, checkpointing, elastic."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.models import build_model
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import (ElasticController, StragglerWatchdog,
+                                 plan_mesh, shard_plan)
+from repro.train.optim import clip_by_global_norm, global_norm, make_optimizer
+from repro.train.trainer import make_train_step
+
+
+def _setup(arch="llama3.2-3b", **tkw):
+    cfg = get_smoke_config(arch).with_(dtype="float32")
+    model = build_model(cfg)
+    tcfg = TrainConfig(lr=1e-2, total_steps=50, warmup_steps=2,
+                       remat="none", **tkw)
+    opt_init, train_step = make_train_step(model, tcfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, opt_init, jax.jit(train_step), params
+
+
+def _batch(cfg, B=4, S=16, seed=0):
+    return {"tokens": jax.random.randint(jax.random.PRNGKey(seed), (B, S),
+                                         0, cfg.vocab_size)}
+
+
+class TestOptim:
+    @pytest.mark.parametrize("opt", ["adam", "adafactor"])
+    def test_loss_decreases(self, opt):
+        cfg, model, opt_init, train_step, params = _setup(optimizer=opt)
+        opt_state = opt_init(params)
+        batch = _batch(cfg)
+        losses = []
+        for _ in range(12):
+            params, opt_state, m = train_step(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+        assert np.isfinite(losses).all()
+
+    def test_grad_clip(self):
+        tree = {"a": jnp.full((10,), 100.0), "b": jnp.full((5,), -100.0)}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(global_norm(clipped)) <= 1.0 + 1e-5
+        assert float(norm) > 100
+
+
+class TestGradAccum:
+    def test_microbatch_equivalence(self):
+        """k microbatches ≈ the full-batch gradient step."""
+        cfg, model, opt_init1, step1, params = _setup(microbatches=1)
+        _, _, opt_init2, step2, _ = _setup(microbatches=4)
+        batch = _batch(cfg, B=8)
+        p1, s1, m1 = step1(params, opt_init1(params), batch)
+        p2, s2, m2 = step2(params, opt_init2(params), batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-5)
+        # Adam's 1/√ν amplifies f32 summation-order noise on tiny grads —
+        # compare post-update params with a tolerance reflecting that.
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-3, atol=5e-4)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        cfg, model, opt_init, train_step, params = _setup()
+        opt_state = opt_init(params)
+        mgr = CheckpointManager(str(tmp_path), keep_n=2)
+        mgr.save(10, {"params": params, "opt": opt_state}, block=True)
+        step, state = mgr.restore_latest({"params": params, "opt": opt_state})
+        assert step == 10
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_gc_keeps_newest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_n=2)
+        x = {"w": jnp.ones((3,))}
+        for s in (1, 2, 3, 4):
+            mgr.save(s, x, block=True)
+        assert mgr.list_steps() == [3, 4]
+
+    def test_resume_continues_training(self, tmp_path):
+        cfg, model, opt_init, train_step, params = _setup()
+        opt_state = opt_init(params)
+        mgr = CheckpointManager(str(tmp_path))
+        batch = _batch(cfg)
+        for _ in range(3):
+            params, opt_state, _ = train_step(params, opt_state, batch)
+        mgr.save(3, {"params": params, "opt": opt_state}, block=True)
+        # simulate a crash: fresh process state, restore, keep training
+        params2, _ = model.init(jax.random.PRNGKey(0))
+        step, state = mgr.restore_latest(
+            {"params": params2, "opt": opt_init(params2)})
+        assert step == 3
+        p, o, m = train_step(state["params"], state["opt"], batch)
+        assert np.isfinite(float(m["loss"]))
+
+    def test_torn_checkpoint_invisible(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        # a .tmp dir (crashed writer) must not be listed
+        os.makedirs(tmp_path / ".tmp_step_00000007")
+        assert mgr.list_steps() == []
+
+
+class TestElastic:
+    def test_plan_mesh_shrinks_data_axis(self):
+        shape, used = plan_mesh(512, model_degree=16, pods=2)
+        assert shape == (2, 16, 16) and used == 512
+        shape, used = plan_mesh(500, model_degree=16, pods=2)
+        assert shape == (2, 15, 16) and used == 480
+
+    def test_plan_mesh_raises_when_impossible(self):
+        with pytest.raises(RuntimeError):
+            plan_mesh(8, model_degree=16)
+
+    def test_shard_plan_deterministic_and_disjoint(self):
+        a = shard_plan(0, step=7, n_shards=4, shard=1, global_batch=64)
+        b = shard_plan(0, step=7, n_shards=4, shard=1, global_batch=64)
+        assert a == b
+        all_ids = sum((shard_plan(0, 7, 4, s, 64) for s in range(4)), [])
+        assert len(set(all_ids)) == 64  # disjoint cover
+
+    def test_watchdog_ejects_persistent_straggler(self):
+        wd = StragglerWatchdog(threshold=2.0, patience=3)
+        for i in range(3):
+            eject = wd.observe({0: 1.0, 1: 1.0, 2: 1.0, 3: 5.0})
+        assert eject == [3]
+
+    def test_watchdog_forgives_transient(self):
+        wd = StragglerWatchdog(threshold=2.0, patience=3)
+        wd.observe({0: 1.0, 1: 5.0})
+        eject = wd.observe({0: 1.0, 1: 1.0})
+        assert eject == []
+
+    def test_controller_fail_recover(self):
+        c = ElasticController(n_devices=512, model_degree=16, pods=2)
+        c.fail(range(10))
+        plan = c.current_plan()
+        assert plan["mesh_shape"] == (2, 15, 16)
+        c.recover(range(10))
+        assert c.current_plan()["mesh_shape"] == (2, 16, 16)
