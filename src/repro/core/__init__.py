@@ -2,14 +2,28 @@
 
 from repro.core.gumbel import gumbel, truncated_gumbel, tail_prob
 from repro.core.em import exact_em, em_scores, em_utility_bound
-from repro.core.lazy_em import LazyEMResult, lazy_em, lazy_em_from_topk
+from repro.core.lazy_em import (
+    LazyEMResult,
+    default_tail_cap,
+    lazy_em,
+    lazy_em_from_topk,
+)
 from repro.core.accountant import (
     PrivacyLedger,
     advanced_composition,
     calibrate_eps0,
 )
 from repro.core.bregman import bregman_project_dense
-from repro.core.mwem import MWEMConfig, MWEMState, run_mwem, mwem_iteration_counts
+from repro.core.mwem import (
+    MWEMBatchResult,
+    MWEMConfig,
+    MWEMResult,
+    MWEMState,
+    mwem_iteration_counts,
+    run_mwem,
+    run_mwem_batch,
+    run_mwem_fused,
+)
 from repro.core.lp_scalar import ScalarLPConfig, solve_scalar_lp
 from repro.core.lp_dual import DualLPConfig, solve_constraint_private_lp
 
@@ -21,15 +35,20 @@ __all__ = [
     "em_scores",
     "em_utility_bound",
     "LazyEMResult",
+    "default_tail_cap",
     "lazy_em",
     "lazy_em_from_topk",
     "PrivacyLedger",
     "advanced_composition",
     "calibrate_eps0",
     "bregman_project_dense",
+    "MWEMBatchResult",
     "MWEMConfig",
+    "MWEMResult",
     "MWEMState",
     "run_mwem",
+    "run_mwem_batch",
+    "run_mwem_fused",
     "mwem_iteration_counts",
     "ScalarLPConfig",
     "solve_scalar_lp",

@@ -22,12 +22,23 @@ elements two truncated Gumbels and bias the max upward by O(C²/n)).
 
 from __future__ import annotations
 
+import math
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.gumbel import gumbel, tail_prob, truncated_gumbel
+
+
+def default_tail_cap(n: int) -> int:
+    """4√n-sized tail buffer, clamped to [64, n] (DESIGN.md §2).
+
+    E[C] ≤ n/k ≈ √n for the default k = ⌈√n⌉, so a 4√n buffer overflows
+    with probability e^{-Ω(√n)}. Shared by the MWEM driver and the LP
+    solvers so the overflow-rate analysis holds everywhere.
+    """
+    return min(n, max(64, 4 * math.ceil(math.sqrt(n))))
 
 
 class LazyEMResult(NamedTuple):
@@ -138,7 +149,7 @@ def lazy_em(
     """
     n = scores.shape[0]
     if tail_cap is None:
-        tail_cap = min(n, max(64, 4 * int(n ** 0.5)))
+        tail_cap = default_tail_cap(n)
     topk_scores, topk_idx = jax.lax.top_k(scores, k)
     return lazy_em_from_topk(
         key,

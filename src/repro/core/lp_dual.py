@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from repro.core.accountant import PrivacyLedger
 from repro.core.bregman import bregman_project_dense
 from repro.core.gumbel import gumbel
-from repro.core.lazy_em import lazy_em_from_topk
+from repro.core.lazy_em import default_tail_cap, lazy_em_from_topk
 
 
 @dataclass(frozen=True)
@@ -85,7 +85,7 @@ def solve_constraint_private_lp(
     sensitivity = 3.0 * opt / (c_min * cfg.s)  # §G: y moves ≤ 2/s, one row add
     scale = float(eps_prime / (2.0 * sensitivity))
     k = cfg.k or max(1, math.ceil(math.sqrt(d)))
-    tail_cap = cfg.tail_cap or min(d, max(64, 4 * math.ceil(math.sqrt(d))))
+    tail_cap = cfg.tail_cap or default_tail_cap(d)
 
     res = DualLPResult(x_bar=None, violations=None, n_violated=-1,
                        ledger=ledger if ledger is not None else PrivacyLedger())

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.accountant import PrivacyLedger, calibrate_eps0
 from repro.core.gumbel import gumbel
-from repro.core.lazy_em import lazy_em_from_topk
+from repro.core.lazy_em import default_tail_cap, lazy_em_from_topk
 
 
 @dataclass(frozen=True)
@@ -83,7 +83,7 @@ def solve_scalar_lp(
     eps0 = calibrate_eps0(cfg.eps, cfg.delta, T, scheme="lp")
     scale = float(eps0 / (2.0 * cfg.delta_inf))
     k = cfg.k or max(1, math.ceil(math.sqrt(m)))
-    tail_cap = cfg.tail_cap or min(m, max(64, 4 * math.ceil(math.sqrt(m))))
+    tail_cap = cfg.tail_cap or default_tail_cap(m)
 
     res = ScalarLPResult(x_bar=None, violations=None, violated_frac=float("nan"),
                          ledger=ledger if ledger is not None else PrivacyLedger())

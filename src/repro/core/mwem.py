@@ -5,6 +5,21 @@ Fast-MWEM is the private-selection oracle — exhaustive EM vs LazyEM over a
 k-MIPS index — exactly the surface the paper modifies. Everything else
 (multiplicative-weights update, accounting, output averaging) is shared.
 
+Two drivers execute the same iteration (DESIGN.md §2):
+
+* **fused** (`run_mwem_fused`): the whole T-iteration loop is one jitted
+  `jax.lax.scan` — selection, the overflow fallback (`lax.cond` to the
+  exhaustive Gumbel-max), and the MW update all stay on device; per-iteration
+  traces come back as stacked scan outputs in a single transfer. Requires an
+  index whose `query(v, k)` is traceable (`supports_in_graph`).
+* **host** (`driver="host"`): the original Python loop, one dispatch per
+  step. Retained for indices whose search cannot be traced into a scan
+  (e.g. NSW beam search) and as the reference for equivalence tests.
+
+`run_mwem` routes between them (`MWEMConfig.driver`); `run_mwem_batch` vmaps
+the fused scan over a batch of seeds (and optionally histograms) for
+replicated/ensemble release.
+
 Implementation notes:
 * weights live in log-space (`log_w`); the multiplicative update is additive
   and `p = softmax(log_w)` — numerically stable for tens of thousands of
@@ -17,8 +32,13 @@ Implementation notes:
   DESIGN.md §1: Alg. 1 as printed omits the sign/measurement step; the
   default `"hardt"` is the original MWEM update. Comparisons always use the
   same rule on both sides so the EM-vs-LazyEM effect is isolated.
-* the LazyEM tail buffer can overflow (prob. ≈ e^{-Ω(√m)}); the driver falls
-  back to the exhaustive oracle for that iteration, preserving exactness.
+* the LazyEM tail buffer can overflow (prob. ≈ e^{-Ω(√m)}); both drivers
+  fall back to the exhaustive oracle for that iteration, preserving
+  exactness — the fused driver does so in-graph via `lax.cond`.
+* both drivers consume randomness through the identical split chain
+  (`key → (key, k_sel, k_meas)` per iteration; the fused driver pre-splits
+  the whole chain with a key-only scan), so on the same backend they make
+  the same selections up to float reassociation in XLA fusion.
 """
 
 from __future__ import annotations
@@ -27,14 +47,15 @@ import math
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.accountant import PrivacyLedger, calibrate_eps0
 from repro.core.gumbel import gumbel
-from repro.core.lazy_em import lazy_em_from_topk
+from repro.core.lazy_em import default_tail_cap, lazy_em_from_topk
 from repro.core.queries import max_error
 
 
@@ -45,6 +66,7 @@ class MWEMConfig:
     T: int = 100
     update_rule: str = "hardt"   # "paper" | "signed" | "hardt"
     mode: str = "fast"           # "exact" | "fast"
+    driver: str = "auto"         # "auto" | "fused" | "host"
     k: Optional[int] = None      # top-k size; default ceil(√m)
     tail_cap: Optional[int] = None
     margin_slack: float = 0.0    # c ≥ 0 → Alg. 6 privacy-preserving approx mode
@@ -80,6 +102,82 @@ class MWEMResult:
     ledger: PrivacyLedger = field(default_factory=PrivacyLedger)
 
 
+@dataclass
+class MWEMBatchResult:
+    """Stacked outputs of `run_mwem_batch` (leading axis = batch of seeds)."""
+
+    p_hat: jax.Array            # (B, U)
+    final_errors: np.ndarray    # (B,)
+    selected: np.ndarray        # (B, T)
+    n_scored: np.ndarray        # (B, T)
+    overflow_counts: np.ndarray  # (B,)
+    errors: Optional[np.ndarray] = None  # (B, n_evals) when eval_every set
+    eval_every: int = 0
+    total_seconds: float = 0.0
+    ledger: PrivacyLedger = field(default_factory=PrivacyLedger)  # per run
+
+    def unbatch(self) -> list:
+        """Materialize one MWEMResult per batch element (shared ledger).
+
+        Lanes execute concurrently under vmap, so each element's
+        ``iter_seconds`` is the whole batch's wall-clock over T — per-run
+        latency, not per-lane throughput.
+        """
+        B, T = self.selected.shape
+        out = []
+        for b in range(B):
+            errors = []
+            if self.errors is not None:
+                errors = [(t, float(e)) for t, e in
+                          zip(range(self.eval_every, T + 1, self.eval_every),
+                              self.errors[b])]
+            out.append(MWEMResult(
+                p_hat=self.p_hat[b],
+                final_error=float(self.final_errors[b]),
+                errors=errors,
+                selected=[int(s) for s in self.selected[b]],
+                n_scored=[int(s) for s in self.n_scored[b]],
+                overflow_count=int(self.overflow_counts[b]),
+                iter_seconds=[self.total_seconds / T] * T,
+                ledger=self.ledger,
+            ))
+        return out
+
+
+class _Calibration(NamedTuple):
+    eps_em: float
+    eps_meas: float
+    scale: float      # EM log-space factor ε₀/(2Δu)
+    lap_scale: float  # Laplace measurement noise scale
+    eta: float
+    k: int
+    tail_cap: int
+
+
+def _calibrate(cfg: MWEMConfig, m: int, U: int) -> _Calibration:
+    """Per-iteration budgets, noise scales and buffer sizes from the config."""
+    eps0 = calibrate_eps0(cfg.eps, cfg.delta, cfg.T, scheme="mwem")
+    if cfg.update_rule == "paper":
+        eps_em, eps_meas = eps0, 0.0
+    else:
+        eps_em = eps0 * (1.0 - cfg.measure_frac)
+        eps_meas = eps0 * cfg.measure_frac
+    # Δu = 1/n: changing one of the n records moves one histogram cell by 1/n,
+    # so each |⟨q, h−p⟩| utility moves by at most 1/n (q ∈ [0,1]^U).
+    if cfg.n_records is None:
+        raise ValueError("MWEMConfig.n_records (dataset size n) is required")
+    sensitivity = 1.0 / cfg.n_records
+    return _Calibration(
+        eps_em=eps_em,
+        eps_meas=eps_meas,
+        scale=float(eps_em / (2.0 * sensitivity)),
+        lap_scale=float(sensitivity / max(eps_meas, 1e-12)),
+        eta=float(cfg.eta if cfg.eta is not None else math.sqrt(math.log(U) / cfg.T)),
+        k=cfg.k or max(1, math.ceil(math.sqrt(m))),
+        tail_cap=cfg.tail_cap or default_tail_cap(2 * m),
+    )
+
+
 def _aug_score(Q: jax.Array, v: jax.Array, aug_idx: jax.Array) -> jax.Array:
     """Scores of augmented ids: ⟨q_{j%m}, v⟩ · sign(j<m) (== |·| at the top)."""
     m = Q.shape[0]
@@ -88,11 +186,26 @@ def _aug_score(Q: jax.Array, v: jax.Array, aug_idx: jax.Array) -> jax.Array:
     return (Q[base] @ v) * sign
 
 
-@partial(jax.jit, static_argnames=("rule", "eta", "scale", "lap_scale"))
-def _mwu_update(state: MWEMState, q_row: jax.Array, h: jax.Array, key: jax.Array,
-                rule: str, eta: float, scale: float, lap_scale: float) -> MWEMState:
-    """One multiplicative-weights update given the selected query row."""
-    p = jax.nn.softmax(state.log_w)
+def _gumbel_argmax(key: jax.Array, x: jax.Array) -> jax.Array:
+    g = gumbel(key, x.shape)
+    return jnp.argmax(x + g).astype(jnp.int32)
+
+
+def _exact_argmax(key: jax.Array, Q: jax.Array, v: jax.Array, scale: float) -> jax.Array:
+    """Exhaustive EM (Alg. 1 oracle): score all m queries, Gumbel-max."""
+    return _gumbel_argmax(key, jnp.abs(Q @ v) * scale)
+
+
+_exact_select = jax.jit(_exact_argmax, static_argnames=("scale",))
+
+
+def _mwu_step(state: MWEMState, p: jax.Array, q_row: jax.Array, h: jax.Array,
+              key: jax.Array, rule: str, eta: float, lap_scale: float) -> MWEMState:
+    """One multiplicative-weights update given the selected query row.
+
+    ``p = softmax(state.log_w)`` is passed in (every caller already has it
+    for the probe vector) rather than recomputed.
+    """
     if rule == "paper":
         log_w = state.log_w - eta * q_row
     else:
@@ -111,16 +224,395 @@ def _mwu_update(state: MWEMState, q_row: jax.Array, h: jax.Array, key: jax.Array
     return MWEMState(log_w=log_w, p_sum=state.p_sum + p_new)
 
 
-@partial(jax.jit, static_argnames=("scale",))
-def _exact_select(key: jax.Array, Q: jax.Array, h: jax.Array, log_w: jax.Array,
-                  scale: float):
-    """Exhaustive EM (Alg. 1 oracle): score all m queries, Gumbel-max."""
-    p = jax.nn.softmax(log_w)
-    v = h - p
-    u = jnp.abs(Q @ v)
-    x = u * scale
-    g = gumbel(key, x.shape)
-    return jnp.argmax(x + g), v
+_mwu_update = jax.jit(_mwu_step, static_argnames=("rule", "eta", "lap_scale"))
+
+
+def _record_iteration(ledger: PrivacyLedger, mode: str, rule: str,
+                      cal: _Calibration, c_idx: float, margin_slack: float) -> None:
+    """Ledger entries for one iteration — shared by both drivers so fused
+    and host runs compose to identical privacy totals."""
+    if mode == "exact":
+        ledger.record(cal.eps_em, 0.0, "em")
+    else:
+        ledger.record(cal.eps_em, 0.0, "lazy_em")
+        if c_idx > 0.0 and margin_slack == 0.0:
+            ledger.record_approx_slack(c_idx)  # Thm F.2 runtime mode
+    if rule != "paper":
+        ledger.record(cal.eps_meas, 0.0, "laplace")
+
+
+# ---------------------------------------------------------------------------
+# Fused on-device driver (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+_FUSED_STATICS = ("T", "mode", "rule", "eta", "scale", "lap_scale", "k",
+                  "tail_cap", "margin_slack", "eval_every")
+
+
+def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
+                *, query_fn: Optional[Callable], T: int, mode: str, rule: str,
+                eta: float, scale: float, lap_scale: float, k: int,
+                tail_cap: int, margin_slack: float, eval_every: int,
+                query_returns_scores: bool = False):
+    """The whole (Fast-)MWEM loop as one `lax.scan` — zero host round-trips.
+
+    Pre-splits the per-iteration key pairs with a key-only scan that walks
+    the exact chain the host loop uses (``key → key, k_sel, k_meas``), so
+    the two drivers are distributionally (and, modulo XLA float
+    reassociation, bitwise) interchangeable.
+
+    ``query_returns_scores``: the probe is exhaustive and hands back the
+    full (m,) signed score vector — tail scoring and the overflow fallback
+    become O(tail_cap)/O(m) lookups instead of re-touching Q.
+    """
+    m = Qm.shape[0]
+
+    def split_body(carry_key, _):
+        carry_key, k_sel, k_meas = jax.random.split(carry_key, 3)
+        return carry_key, (k_sel, k_meas)
+
+    _, (sel_keys, meas_keys) = jax.lax.scan(split_body, key, None, length=T)
+
+    def body(state, xs):
+        t, k_sel, k_meas = xs
+        p = jax.nn.softmax(state.log_w)
+        v = h - p
+        if mode == "exact":
+            sel = _exact_argmax(k_sel, Qm, v, scale)
+            n_scored = jnp.int32(m)
+            tail_count = jnp.int32(0)
+            overflow = jnp.bool_(False)
+        else:
+            if query_returns_scores:
+                aug_idx, raw, s_full = query_fn(v, k)
+                score_fn = lambda idx: jnp.where(  # noqa: E731
+                    idx < m, s_full[idx % m], -s_full[idx % m]) * scale
+                fallback = lambda _: _gumbel_argmax(  # noqa: E731
+                    k_sel, jnp.abs(s_full) * scale)
+            else:
+                aug_idx, raw = query_fn(v, k)
+                score_fn = lambda idx: _aug_score(Qm, v, idx) * scale  # noqa: E731
+                fallback = lambda _: _exact_argmax(k_sel, Qm, v, scale)  # noqa: E731
+            out = lazy_em_from_topk(
+                k_sel, aug_idx, raw * scale, 2 * m,
+                score_fn=score_fn,
+                tail_cap=tail_cap,
+                margin_slack=margin_slack * scale if margin_slack else 0.0,
+            )
+            # In-graph fallback: on tail-buffer overflow redo the step with
+            # the exhaustive Gumbel-max (same k_sel, mirroring the host
+            # driver). `lax.cond` keeps the heavy branch unexecuted on the
+            # non-overflow path of an unbatched run.
+            sel = jax.lax.cond(
+                out.overflow,
+                fallback,
+                lambda _: (out.index % m).astype(jnp.int32),
+                operand=None,
+            )
+            n_scored = jnp.where(out.overflow, jnp.int32(m), out.n_scored)
+            tail_count = out.tail_count
+            overflow = out.overflow
+        new_state = _mwu_step(state, p, Qm[sel], h, k_meas, rule=rule,
+                              eta=eta, lap_scale=lap_scale)
+        ys = (sel, n_scored, tail_count, overflow)
+        if eval_every:
+            # Gated on the eval schedule: the Θ(mU) error matmul would
+            # otherwise run every iteration and erase the sublinear win.
+            err = jax.lax.cond(
+                t % eval_every == 0,
+                lambda _: max_error(Qm, h, new_state.p_sum / t.astype(jnp.float32)),
+                lambda _: jnp.float32(jnp.nan),
+                operand=None,
+            )
+            ys = ys + (err,)
+        return new_state, ys
+
+    ts = jnp.arange(1, T + 1)
+    return jax.lax.scan(body, state0, (ts, sel_keys, meas_keys))
+
+
+_EXACT_DRIVER_CACHE: dict = {}
+
+
+def _fused_driver(index, statics: dict, batch_axes=None) -> Callable:
+    """Build (or fetch) the jitted fused driver for an (index, config) pair.
+
+    Compiled drivers are cached on the index instance (module-level for
+    ``mode="exact"``) so repeated runs with the same shapes re-dispatch the
+    cached executable. The carried `MWEMState` buffers are donated.
+    ``batch_axes`` is a vmap ``in_axes`` tuple over (Q, h, state0, key) for
+    the batched driver, or None for the single-run driver.
+    """
+    cache = (_EXACT_DRIVER_CACHE if index is None
+             else index.__dict__.setdefault("_fused_driver_cache", {}))
+    ck = (tuple(sorted(statics.items())), batch_axes)
+    entry = cache.get(ck)
+    if entry is None:
+        query_fn = None
+        if getattr(index, "has_full_scores", False):
+            query_fn = index.query_in_graph_with_scores
+            statics = dict(statics, query_returns_scores=True)
+        elif index is not None:
+            query_fn = index.query_in_graph
+        core = partial(_fused_core, query_fn=query_fn, **statics)
+        if batch_axes is not None:
+            core = jax.vmap(core, in_axes=batch_axes)
+        entry = (jax.jit(core, donate_argnums=(2,)), {})
+        cache[ck] = entry
+    return entry
+
+
+def _compiled_driver(entry, *args) -> Callable:
+    """AOT-compile the driver for these arg shapes (cached), so callers can
+    keep trace+compile out of the timed region — fused ``iter_seconds``
+    measures execution only."""
+    fn, exes = entry
+    skey = tuple((tuple(x.shape), str(x.dtype))
+                 for x in jax.tree_util.tree_leaves(args))
+    exe = exes.get(skey)
+    if exe is None:
+        exe = fn.lower(*args).compile()
+        exes[skey] = exe
+    return exe
+
+
+def _fused_statics(cfg: MWEMConfig, cal: _Calibration) -> dict:
+    return dict(T=cfg.T, mode=cfg.mode, rule=cfg.update_rule, eta=cal.eta,
+                scale=cal.scale, lap_scale=cal.lap_scale, k=cal.k,
+                tail_cap=cal.tail_cap, margin_slack=cfg.margin_slack,
+                eval_every=cfg.eval_every)
+
+
+def _check_fast_index(cfg: MWEMConfig, index, fused: bool) -> float:
+    if cfg.mode not in ("exact", "fast"):
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+    if cfg.mode != "fast":
+        return 0.0
+    if index is None:
+        raise ValueError("fast mode requires a k-MIPS index")
+    if fused and not getattr(index, "supports_in_graph", False):
+        raise ValueError(
+            f"{type(index).__name__} cannot be traced into the fused scan "
+            "(supports_in_graph=False); use driver='host'")
+    return float(getattr(index, "approx_margin", 0.0))
+
+
+def run_mwem_fused(
+    Q: jax.Array,
+    h: jax.Array,
+    cfg: MWEMConfig,
+    key: jax.Array,
+    index=None,
+    ledger: Optional[PrivacyLedger] = None,
+) -> MWEMResult:
+    """Run (Fast-)MWEM as a single fused scan dispatch.
+
+    Exactly one device→host transfer moves the stacked per-iteration traces
+    (`selected`, `n_scored`, `tail_count`, `overflow`, and the running error
+    when ``eval_every`` is set) back; `MWEMResult` is reconstructed from
+    them. ``iter_seconds`` holds the amortized *execution* wall-clock per
+    iteration (total / T): trace+compile happen outside the timed region
+    via a cached AOT executable, and individual steps are not observable
+    from the host.
+    """
+    m, U = Q.shape
+    cal = _calibrate(cfg, m, U)
+    c_idx = _check_fast_index(cfg, index, fused=True)
+
+    res = MWEMResult(p_hat=None, final_error=float("nan"),
+                     ledger=ledger if ledger is not None else PrivacyLedger())
+    if cfg.mode == "fast":
+        res.ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
+
+    entry = _fused_driver(index if cfg.mode == "fast" else None,
+                          _fused_statics(cfg, cal))
+    state0 = MWEMState(log_w=jnp.zeros((U,), jnp.float32),
+                       p_sum=jnp.zeros((U,), jnp.float32))
+    args = (jnp.asarray(Q, jnp.float32), jnp.asarray(h, jnp.float32),
+            state0, key)
+    driver = _compiled_driver(entry, *args)
+    t0 = time.perf_counter()
+    final_state, traces = driver(*args)
+    jax.block_until_ready(final_state.p_sum)
+    total = time.perf_counter() - t0
+
+    traces = jax.device_get(traces)
+    sel_t, n_scored_t, _tail_t, over_t = traces[:4]
+    res.selected = [int(s) for s in sel_t]
+    res.n_scored = [int(s) for s in n_scored_t]
+    res.overflow_count = int(np.sum(over_t))
+    res.iter_seconds = [total / cfg.T] * cfg.T
+    for _ in range(cfg.T):
+        _record_iteration(res.ledger, cfg.mode, cfg.update_rule, cal,
+                          c_idx, cfg.margin_slack)
+    if cfg.eval_every:
+        errs = traces[4]
+        res.errors = [(t, float(errs[t - 1]))
+                      for t in range(cfg.eval_every, cfg.T + 1, cfg.eval_every)]
+
+    res.p_hat = final_state.p_sum / cfg.T
+    res.final_error = float(max_error(Q, h, res.p_hat))
+    return res
+
+
+def run_mwem_batch(
+    Q: jax.Array,
+    h: jax.Array,
+    cfg: MWEMConfig,
+    keys: jax.Array,
+    index=None,
+) -> MWEMBatchResult:
+    """Vmapped fused scan over a batch of PRNG keys — replicated release.
+
+    Args:
+      keys: (B,)-stacked PRNG keys (e.g. ``jnp.stack([PRNGKey(s) for s in
+        seeds])``); each batch element reproduces exactly what
+        `run_mwem_fused` produces for that key.
+      h: shared ``(U,)`` histogram, or ``(B, U)`` for per-element data.
+
+    The privacy ledger is *per run* (each batch element composes the same
+    totals); serving B replicas spends B× the budget and the caller
+    accounts for the multiplicity.
+
+    Batching is fused-only (``driver="host"`` raises). Cost caveat: under
+    vmap the overflow-fallback `lax.cond` lowers to a select that executes
+    both branches every iteration, so for indices without full-score reuse
+    (IVF/LSH) each batched iteration pays the Θ(mU) exhaustive branch —
+    batch those through a Python loop over `run_mwem` if selection cost
+    matters more than dispatch (DESIGN.md §2).
+    """
+    if cfg.driver == "host":
+        raise ValueError("run_mwem_batch always uses the fused driver; "
+                         "loop run_mwem(..., driver='host') for host runs")
+    m, U = Q.shape
+    keys = jnp.asarray(keys)
+    B = keys.shape[0]
+    h = jnp.asarray(h, jnp.float32)
+    batched_h = h.ndim == 2
+    cal = _calibrate(cfg, m, U)
+    c_idx = _check_fast_index(cfg, index, fused=True)
+
+    entry = _fused_driver(index if cfg.mode == "fast" else None,
+                          _fused_statics(cfg, cal),
+                          batch_axes=(None, 0 if batched_h else None, 0, 0))
+    state0 = MWEMState(log_w=jnp.zeros((B, U), jnp.float32),
+                       p_sum=jnp.zeros((B, U), jnp.float32))
+    args = (jnp.asarray(Q, jnp.float32), h, state0, keys)
+    driver = _compiled_driver(entry, *args)
+    t0 = time.perf_counter()
+    final_state, traces = driver(*args)
+    jax.block_until_ready(final_state.p_sum)
+    total = time.perf_counter() - t0
+
+    p_hat = final_state.p_sum / cfg.T
+    final_errors = jnp.max(jnp.abs((h - p_hat) @ Q.T), axis=-1)
+
+    ledger = PrivacyLedger()
+    if cfg.mode == "fast":
+        ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
+    for _ in range(cfg.T):
+        _record_iteration(ledger, cfg.mode, cfg.update_rule, cal,
+                          c_idx, cfg.margin_slack)
+
+    traces = jax.device_get(traces)
+    errors = None
+    if cfg.eval_every:
+        eval_ts = range(cfg.eval_every, cfg.T + 1, cfg.eval_every)
+        errors = np.asarray(traces[4])[:, [t - 1 for t in eval_ts]]
+    return MWEMBatchResult(
+        p_hat=p_hat,
+        final_errors=np.asarray(final_errors),
+        selected=np.asarray(traces[0]),
+        n_scored=np.asarray(traces[1]),
+        overflow_counts=np.asarray(traces[3]).sum(axis=1),
+        errors=errors,
+        eval_every=cfg.eval_every,
+        total_seconds=total,
+        ledger=ledger,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-loop driver (reference / non-traceable indices)
+# ---------------------------------------------------------------------------
+
+def _run_mwem_host(
+    Q: jax.Array,
+    h: jax.Array,
+    cfg: MWEMConfig,
+    key: jax.Array,
+    index=None,
+    ledger: Optional[PrivacyLedger] = None,
+) -> MWEMResult:
+    """One jit dispatch per step; `bool(out.overflow)` syncs to the host."""
+    m, U = Q.shape
+    cal = _calibrate(cfg, m, U)
+    c_idx = _check_fast_index(cfg, index, fused=False)
+
+    res = MWEMResult(p_hat=None, final_error=float("nan"),
+                     ledger=ledger if ledger is not None else PrivacyLedger())
+    state = MWEMState(log_w=jnp.zeros((U,), jnp.float32),
+                      p_sum=jnp.zeros((U,), jnp.float32))
+
+    if cfg.mode == "fast":
+        res.ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
+
+        @jax.jit
+        def fast_select(key, topk_idx, topk_scores, Qm, v):
+            return lazy_em_from_topk(
+                key, topk_idx,
+                topk_scores * cal.scale,
+                2 * m,
+                score_fn=lambda idx: _aug_score(Qm, v, idx) * cal.scale,
+                tail_cap=cal.tail_cap,
+                margin_slack=cfg.margin_slack * cal.scale if cfg.margin_slack else 0.0,
+            )
+
+    for t in range(cfg.T):
+        key, k_sel, k_meas = jax.random.split(key, 3)
+        t0 = time.perf_counter()
+        p = jax.nn.softmax(state.log_w)
+        v = h - p
+        if cfg.mode == "exact":
+            sel = int(_exact_select(k_sel, Q, v, scale=cal.scale))
+            res.n_scored.append(m)
+        else:
+            aug_idx, raw = index.query(v, cal.k)
+            out = fast_select(k_sel, aug_idx, raw, Q, v)
+            if bool(out.overflow):
+                sel = int(_exact_select(k_sel, Q, v, scale=cal.scale))
+                res.overflow_count += 1
+                res.n_scored.append(m)
+            else:
+                sel = int(out.index) % m
+                res.n_scored.append(int(out.n_scored))
+        _record_iteration(res.ledger, cfg.mode, cfg.update_rule, cal,
+                          c_idx, cfg.margin_slack)
+        state = _mwu_update(state, p, Q[sel], h, k_meas, rule=cfg.update_rule,
+                            eta=cal.eta, lap_scale=cal.lap_scale)
+        jax.block_until_ready(state.log_w)
+        res.iter_seconds.append(time.perf_counter() - t0)
+        res.selected.append(sel)
+        if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
+            p_avg = state.p_sum / (t + 1)
+            res.errors.append((t + 1, float(max_error(Q, h, p_avg))))
+
+    p_hat = state.p_sum / cfg.T
+    res.p_hat = p_hat
+    res.final_error = float(max_error(Q, h, p_hat))
+    return res
+
+
+def _resolve_driver(cfg: MWEMConfig, index) -> str:
+    if cfg.driver not in ("auto", "fused", "host"):
+        raise ValueError(f"unknown driver {cfg.driver!r}")
+    if cfg.driver != "auto":
+        return cfg.driver
+    if cfg.mode == "exact":
+        return "fused"
+    if index is not None and getattr(index, "supports_in_graph", False):
+        return "fused"
+    return "host"
 
 
 def run_mwem(
@@ -137,88 +629,14 @@ def run_mwem(
       Q: (m, U) query matrix with entries in [0, 1].
       h: (U,) true normalized histogram.
       cfg: engine configuration. ``mode="fast"`` requires ``index``.
+        ``driver="auto"`` fuses the loop on-device whenever the index's
+        query is traceable (all flat/IVF/LSH indices); NSW and other
+        host-only indices fall back to the Python loop.
       key: PRNG key.
       index: a k-MIPS index over the complement-augmented queries
         (see repro.mips); must expose ``query(v, k) -> (aug_idx, raw_scores)``
         and attributes ``approx_margin`` (c ≥ 0) and ``failure_mass`` (γ).
     """
-    m, U = Q.shape
-    eps0 = calibrate_eps0(cfg.eps, cfg.delta, cfg.T, scheme="mwem")
-    if cfg.update_rule == "paper":
-        eps_em, eps_meas = eps0, 0.0
-    else:
-        eps_em = eps0 * (1.0 - cfg.measure_frac)
-        eps_meas = eps0 * cfg.measure_frac
-    # Δu = 1/n: changing one of the n records moves one histogram cell by 1/n,
-    # so each |⟨q, h−p⟩| utility moves by at most 1/n (q ∈ [0,1]^U).
-    if cfg.n_records is None:
-        raise ValueError("MWEMConfig.n_records (dataset size n) is required")
-    sensitivity = 1.0 / cfg.n_records
-    scale = float(eps_em / (2.0 * sensitivity))
-    lap_scale = float(sensitivity / max(eps_meas, 1e-12))
-    eta = cfg.eta if cfg.eta is not None else math.sqrt(math.log(U) / cfg.T)
-
-    k = cfg.k or max(1, math.ceil(math.sqrt(m)))
-    tail_cap = cfg.tail_cap or min(2 * m, max(64, 4 * math.ceil(math.sqrt(2 * m))))
-
-    res = MWEMResult(p_hat=None, final_error=float("nan"),
-                     ledger=ledger if ledger is not None else PrivacyLedger())
-    state = MWEMState(log_w=jnp.zeros((U,), jnp.float32),
-                      p_sum=jnp.zeros((U,), jnp.float32))
-
-    if cfg.mode == "fast":
-        if index is None:
-            raise ValueError("fast mode requires a k-MIPS index")
-        res.ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
-        c_idx = float(getattr(index, "approx_margin", 0.0))
-
-        @partial(jax.jit, static_argnames=())
-        def fast_select(key, topk_idx, topk_scores, Qm, v):
-            return lazy_em_from_topk(
-                key, topk_idx,
-                topk_scores * scale,
-                2 * m,
-                score_fn=lambda idx: _aug_score(Qm, v, idx) * scale,
-                tail_cap=tail_cap,
-                margin_slack=cfg.margin_slack * scale if cfg.margin_slack else 0.0,
-            )
-
-    for t in range(cfg.T):
-        key, k_sel, k_meas = jax.random.split(key, 3)
-        t0 = time.perf_counter()
-        p = jax.nn.softmax(state.log_w)
-        v = h - p
-        if cfg.mode == "exact":
-            sel, v = _exact_select(k_sel, Q, h, state.log_w, scale)
-            sel = int(sel)
-            res.n_scored.append(m)
-            res.ledger.record(eps_em, 0.0, "em")
-        else:
-            aug_idx, raw = index.query(v, k)
-            out = fast_select(k_sel, aug_idx, raw, Q, v)
-            if bool(out.overflow):
-                sel_arr, _ = _exact_select(k_sel, Q, h, state.log_w, scale)
-                sel = int(sel_arr)
-                res.overflow_count += 1
-                res.n_scored.append(m)
-            else:
-                sel = int(out.index) % m
-                res.n_scored.append(int(out.n_scored))
-            res.ledger.record(eps_em, 0.0, "lazy_em")
-            if c_idx > 0.0 and cfg.margin_slack == 0.0:
-                res.ledger.record_approx_slack(c_idx)  # Thm F.2 runtime mode
-        if cfg.update_rule != "paper":
-            res.ledger.record(eps_meas, 0.0, "laplace")
-        state = _mwu_update(state, Q[sel], h, k_meas, cfg.update_rule,
-                            float(eta), scale, lap_scale)
-        jax.block_until_ready(state.log_w)
-        res.iter_seconds.append(time.perf_counter() - t0)
-        res.selected.append(sel)
-        if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
-            p_avg = state.p_sum / (t + 1)
-            res.errors.append((t + 1, float(max_error(Q, h, p_avg))))
-
-    p_hat = state.p_sum / cfg.T
-    res.p_hat = p_hat
-    res.final_error = float(max_error(Q, h, p_hat))
-    return res
+    if _resolve_driver(cfg, index) == "fused":
+        return run_mwem_fused(Q, h, cfg, key, index=index, ledger=ledger)
+    return _run_mwem_host(Q, h, cfg, key, index=index, ledger=ledger)

@@ -1,4 +1,4 @@
-from repro.kernels.mips_topk.ops import mips_topk
+from repro.kernels.mips_topk.ops import mips_abs_topk, mips_topk
 from repro.kernels.mips_topk.ref import mips_topk_ref
 
-__all__ = ["mips_topk", "mips_topk_ref"]
+__all__ = ["mips_abs_topk", "mips_topk", "mips_topk_ref"]

@@ -37,3 +37,26 @@ def mips_topk(V: jax.Array, q: jax.Array, k: int, *, block_n: int = 512,
     qp = _pad_to(q, 0, block_d)
     return mips_topk_pallas(Vp, qp, k, block_n=block_n, block_d=block_d,
                             interpret=interpret, n_real=n)
+
+
+@partial(jax.jit, static_argnames=("k", "block_n", "block_d", "interpret"))
+def mips_abs_topk(V: jax.Array, q: jax.Array, k: int, *, block_n: int = 512,
+                  block_d: int = 512, interpret: bool | None = None):
+    """Top-k of ``|V @ q|`` as complement-augmented ids (paper §3.4).
+
+    Returned id ``j < n`` means ``+⟨v_j, q⟩``; ``j ≥ n`` means
+    ``−⟨v_{j−n}, q⟩`` (the complement row's score for zero-sum probes).
+    Runs the streaming kernel twice — once per sign of ``q`` — and merges
+    the 2k candidates with one ``top_k``; the 2n-row augmented matrix is
+    never materialized. For k ≤ n each base row contributes at most one of
+    its two signed scores to the top (the other is ≤ 0 ≤ the winner), so
+    this equals top-k over the full augmented set.
+    """
+    n = V.shape[0]
+    pos_i, pos_s = mips_topk(V, q, k, block_n=block_n, block_d=block_d,
+                             interpret=interpret)
+    neg_i, neg_s = mips_topk(V, -q, k, block_n=block_n, block_d=block_d,
+                             interpret=interpret)
+    ids = jnp.concatenate([pos_i, neg_i + n])
+    top_s, pos = jax.lax.top_k(jnp.concatenate([pos_s, neg_s]), k)
+    return ids[pos].astype(jnp.int32), top_s

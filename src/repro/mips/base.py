@@ -18,13 +18,25 @@ class MIPSIndex(Protocol):
         margin lowering of Alg. 6.
       failure_mass: γ — probability mass of the index answering incorrectly
         over a whole run (adds to δ per Thm 3.3).
+      supports_in_graph: whether ``query_in_graph`` is traceable — fixed
+        output shapes, no host syncs — so the fused MWEM driver can inline
+        the search into its ``lax.scan`` body (DESIGN.md §2).
     """
 
     approx_margin: float
     failure_mass: float
+    supports_in_graph: bool
 
     def query(self, v: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
         """Return (idx, scores): the (approximate) top-k inner products."""
+        ...
+
+    def query_in_graph(self, v: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+        """`query` accepting a traced probe, callable inside jit/scan/vmap.
+
+        Indices that cannot be traced (``supports_in_graph=False``) raise
+        NotImplementedError; the MWEM driver routes them to the host loop.
+        """
         ...
 
     def query_cost(self, k: int) -> int:

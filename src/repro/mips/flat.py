@@ -2,7 +2,8 @@
 
 On TPU this path is the `repro.kernels.mips_topk` Pallas kernel; on CPU the
 jnp reference executes the same math. Exact ⇒ approx_margin = 0,
-failure_mass = 0.
+failure_mass = 0. Both indices are fully traceable (`supports_in_graph`),
+so the fused MWEM driver inlines them into its scan body.
 """
 
 from __future__ import annotations
@@ -19,6 +20,7 @@ class FlatIndex:
 
     approx_margin = 0.0
     failure_mass = 0.0
+    supports_in_graph = True
 
     def __init__(self, vectors, use_pallas: str = "auto"):
         self._v = jnp.asarray(vectors, jnp.float32)
@@ -47,6 +49,9 @@ class FlatIndex:
     def query(self, v, k: int):
         return self._query_fn(self._v, jnp.asarray(v, jnp.float32), k)
 
+    def query_in_graph(self, v, k: int):
+        return self._query_fn(self._v, v, k)
+
     def query_cost(self, k: int) -> int:
         return self.n
 
@@ -55,29 +60,66 @@ class FlatAbsIndex:
     """Exact top-k of |⟨q_i, v⟩| without materializing the complement rows.
 
     Returns *augmented* ids (j < m ⇒ +⟨q_j, v⟩; j ≥ m ⇒ −⟨q_{j−m}, v⟩),
-    matching the convention of `augment_complement`.
+    matching the convention of `augment_complement`. On TPU the scan runs
+    through the streaming `mips_abs_topk` kernel (two signed passes, merged).
     """
 
     approx_margin = 0.0
     failure_mass = 0.0
+    supports_in_graph = True
 
-    def __init__(self, Q):
+    def __init__(self, Q, use_pallas: str = "auto"):
         self._q = jnp.asarray(Q, jnp.float32)
         self.m, self.dim = self._q.shape
         self.n = 2 * self.m
+        self._use_pallas = use_pallas
 
         @partial(jax.jit, static_argnames=("k",))
         def _query(Qm, v, k: int):
+            if self._resolve_pallas():
+                from repro.kernels.mips_topk import ops as topk_ops
+
+                return topk_ops.mips_abs_topk(Qm, v, k)
+            aug, top_a, _ = _query_scores(Qm, v, k)
+            return aug, top_a
+
+        @partial(jax.jit, static_argnames=("k",))
+        def _query_scores(Qm, v, k: int):
             s = Qm @ v
             a = jnp.abs(s)
             top_a, top_i = jax.lax.top_k(a, k)
             aug = jnp.where(s[top_i] >= 0, top_i, top_i + self.m)
-            return aug.astype(jnp.int32), top_a
+            return aug.astype(jnp.int32), top_a, s
 
         self._query_fn = _query
+        self._query_scores_fn = _query_scores
+
+    def _resolve_pallas(self) -> bool:
+        if self._use_pallas == "always":
+            return True
+        if self._use_pallas == "never":
+            return False
+        return jax.default_backend() == "tpu"
 
     def query(self, v, k: int):
         return self._query_fn(self._q, jnp.asarray(v, jnp.float32), k)
+
+    def query_in_graph(self, v, k: int):
+        return self._query_fn(self._q, v, k)
+
+    @property
+    def has_full_scores(self) -> bool:
+        """The fused driver prefers `query_in_graph_with_scores` when the
+        probe materializes the score vector anyway (the jnp path); the
+        streaming Pallas kernel exists precisely to avoid that, so on TPU
+        the plain probe + re-gather is the right trade."""
+        return not self._resolve_pallas()
+
+    def query_in_graph_with_scores(self, v, k: int):
+        """Exhaustive probe that also returns the full (m,) signed score
+        vector — the fused driver reuses it for tail scoring and the
+        overflow fallback instead of re-touching Q (DESIGN.md §2)."""
+        return self._query_scores_fn(self._q, v, k)
 
     def query_cost(self, k: int) -> int:
         return self.m

@@ -76,6 +76,8 @@ def _balanced_assign(V: np.ndarray, cents: np.ndarray, cap: int) -> np.ndarray:
 
 
 class IVFIndex:
+    supports_in_graph = True  # padded cells ⇒ fixed-shape, traceable search
+
     def __init__(self, vectors, nlist: int | None = None, nprobe: int | None = None,
                  cap_factor: float = 2.0, train_iters: int = 10, seed: int = 0,
                  approx_margin: float = 0.0, failure_mass: float | None = None):
@@ -109,6 +111,10 @@ class IVFIndex:
     def query(self, v, k: int):
         return self._query_fn(self._v, self._cents, self._cells,
                               jnp.asarray(v, jnp.float32), k, self.nprobe)
+
+    def query_in_graph(self, v, k: int):
+        return self._query_fn(self._v, self._cents, self._cells, v, k,
+                              self.nprobe)
 
     def query_cost(self, k: int) -> int:
         return self.nlist + self.nprobe * self.cap

@@ -20,6 +20,8 @@ from repro.mips.transform import mips_to_knn_keys, mips_to_knn_query
 
 
 class LSHIndex:
+    supports_in_graph = True  # padded buckets ⇒ fixed-shape, traceable search
+
     def __init__(self, vectors, n_tables: int = 8, n_bits: int | None = None,
                  cap_factor: float = 4.0, seed: int = 0,
                  approx_margin: float = 0.0, failure_mass: float | None = None):
@@ -76,6 +78,10 @@ class LSHIndex:
     def query(self, v, k: int):
         return self._query_fn(self._v, self._planes, self._buckets, self._weights,
                               jnp.asarray(v, jnp.float32), k)
+
+    def query_in_graph(self, v, k: int):
+        return self._query_fn(self._v, self._planes, self._buckets,
+                              self._weights, v, k)
 
     def query_cost(self, k: int) -> int:
         return self.g * self.cap

@@ -59,6 +59,12 @@ def _nn_descent(Vt: np.ndarray, deg: int, rounds: int, rng: np.random.Generator,
 
 
 class NSWIndex:
+    # The data-dependent-depth beam search (while_loop over an (n,) visited
+    # mask) is kept out of the fused scan: tracing it per iteration bloats
+    # the graph and serializes poorly under vmap. MWEM drives NSW through
+    # the host loop.
+    supports_in_graph = False
+
     def __init__(self, vectors, deg: int = 32, ef: int = 64, rounds: int = 6,
                  rand_frac: float = 0.25, max_steps: int | None = None, seed: int = 0,
                  approx_margin: float = 0.0, failure_mass: float | None = None):
@@ -127,6 +133,9 @@ class NSWIndex:
     def query(self, v, k: int):
         return self._query_fn(self._v, self._adj, self._seeds,
                               jnp.asarray(v, jnp.float32), k, self.max_steps)
+
+    def query_in_graph(self, v, k: int):
+        raise NotImplementedError("NSW beam search is host-loop only")
 
     def query_cost(self, k: int) -> int:
         # ~log-depth beam search: ef·deg scored rows per hop.

@@ -38,11 +38,18 @@ class ServeEngine:
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)
 
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
+    def _sample(self, logits: jax.Array, temperatures: np.ndarray) -> jax.Array:
+        """Per-request sampling: greedy rows (temp ≤ 0) and temperature rows
+        coexist in one wave."""
+        greedy = jnp.argmax(logits, axis=-1)
+        if (temperatures <= 0).all():
+            return greedy
         self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
+        temps = jnp.asarray(np.maximum(temperatures, 1e-6), logits.dtype)
+        temps = temps.reshape((-1,) + (1,) * (logits.ndim - 1))
+        sampled = jax.random.categorical(sub, logits / temps, axis=-1)
+        return jnp.where(jnp.asarray(temperatures <= 0).reshape(greedy.shape),
+                         greedy, sampled)
 
     def run(self, requests: List[Request]) -> List[Request]:
         """Serve a wave of requests (up to batch_size at a time)."""
@@ -61,8 +68,8 @@ class ServeEngine:
         logits, cache = self.model.prefill(self.params, batch,
                                            max_len=self.max_len)
         steps = max(r.max_new_tokens for r in wave)
-        temperature = wave[0].temperature
-        next_tok = self._sample(logits, temperature)
+        temperatures = np.array([r.temperature for r in wave], np.float32)
+        next_tok = self._sample(logits, temperatures)
         for i, r in enumerate(wave):
             r.out_tokens.append(int(next_tok[i]))
         pos = prompt_len
@@ -70,7 +77,7 @@ class ServeEngine:
             logits, cache = self._decode(self.params, cache,
                                          next_tok[:, None].astype(jnp.int32),
                                          jnp.int32(pos))
-            next_tok = self._sample(logits, temperature)
+            next_tok = self._sample(logits, temperatures)
             pos += 1
             for i, r in enumerate(wave):
                 if len(r.out_tokens) < r.max_new_tokens:

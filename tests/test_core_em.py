@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.gumbel import gumbel, tail_prob, truncated_gumbel
 from repro.core.em import exact_em, em_scores

@@ -1,0 +1,211 @@
+"""Fused `lax.scan` driver vs the host loop (DESIGN.md §2).
+
+The two drivers consume randomness through the identical split chain, so on
+one backend they should agree exactly (up to XLA float reassociation flipping
+rare near-ties); the statistical tests below are robust to those flips while
+still failing loudly on any systematic divergence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MWEMConfig, run_mwem, run_mwem_batch, run_mwem_fused
+from repro.core.queries import gaussian_histogram, max_error, random_binary_queries
+from repro.mips import FlatAbsIndex, NSWIndex, augment_complement
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(0)
+    kh, kq = jax.random.split(key)
+    U, m, n = 64, 128, 300
+    h = gaussian_histogram(kh, n, U)
+    Q = random_binary_queries(kq, m, U)
+    return Q, h, n
+
+
+@pytest.fixture(scope="module")
+def index(workload):
+    Q, _, _ = workload
+    return FlatAbsIndex(Q)
+
+
+def _tv(p, q):
+    return 0.5 * np.abs(np.asarray(p) - np.asarray(q)).sum()
+
+
+class TestEquivalence:
+    def test_routing(self, workload, index):
+        Q, h, n = workload
+        aug = augment_complement(np.asarray(Q))
+        nsw = NSWIndex(aug, deg=8, ef=16, rounds=2, seed=0)
+        from repro.core.mwem import _resolve_driver
+
+        assert _resolve_driver(MWEMConfig(n_records=n), index) == "fused"
+        assert _resolve_driver(MWEMConfig(n_records=n), nsw) == "host"
+        assert _resolve_driver(MWEMConfig(mode="exact", n_records=n), None) == "fused"
+        cfg = MWEMConfig(n_records=n, driver="fused")
+        with pytest.raises(ValueError, match="host"):
+            run_mwem(Q, h, cfg, jax.random.PRNGKey(0), index=nsw)
+
+    def test_selection_distributions_match(self, workload, index):
+        """TV distance between fused and host-loop selection frequencies
+        over many seeds is tiny (they share the PRNG chain)."""
+        Q, h, n = workload
+        m = Q.shape[0]
+        T, B = 6, 25
+        cfg = MWEMConfig(T=T, mode="fast", n_records=n)
+        cfg_host = MWEMConfig(T=T, mode="fast", n_records=n, driver="host")
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+        fused = run_mwem_batch(Q, h, cfg, keys, index=index)
+        host_sel = []
+        for s in range(B):
+            host_sel.extend(
+                run_mwem(Q, h, cfg_host, jax.random.PRNGKey(s), index=index).selected)
+        f = np.bincount(fused.selected.ravel(), minlength=m) / (B * T)
+        g = np.bincount(np.asarray(host_sel), minlength=m) / (B * T)
+        assert _tv(f, g) < 0.1
+
+    def test_identical_ledger_totals(self, workload, index):
+        Q, h, n = workload
+        for mode, idx in (("fast", index), ("exact", None)):
+            cfg = MWEMConfig(eps=1.0, delta=1e-3, T=16, mode=mode, n_records=n)
+            cfg_host = MWEMConfig(eps=1.0, delta=1e-3, T=16, mode=mode,
+                                  n_records=n, driver="host")
+            rf = run_mwem(Q, h, cfg, jax.random.PRNGKey(5), index=idx)
+            rh = run_mwem(Q, h, cfg_host, jax.random.PRNGKey(5), index=idx)
+            assert rf.ledger.composed() == rh.ledger.composed()
+            assert rf.ledger.basic() == rh.ledger.basic()
+            assert len(rf.ledger.events) == len(rh.ledger.events)
+
+    def test_fused_error_tracks_host(self, workload, index):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=60, mode="fast", n_records=n)
+        cfg_host = MWEMConfig(T=60, mode="fast", n_records=n, driver="host")
+        rf = run_mwem(Q, h, cfg, jax.random.PRNGKey(7), index=index)
+        rh = run_mwem(Q, h, cfg_host, jax.random.PRNGKey(7), index=index)
+        assert abs(rf.final_error - rh.final_error) < 0.05
+        uniform = float(max_error(Q, h, jnp.full_like(h, 1 / h.shape[0])))
+        assert rf.final_error < uniform
+
+    def test_eval_every_trace(self, workload, index):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=20, mode="fast", eval_every=5, n_records=n)
+        res = run_mwem(Q, h, cfg, jax.random.PRNGKey(6), index=index)
+        assert [t for t, _ in res.errors] == [5, 10, 15, 20]
+        assert all(np.isfinite(e) for _, e in res.errors)
+
+
+class TestOverflowFallback:
+    def test_tiny_tail_cap_falls_back_in_graph(self, workload, index):
+        """tail_cap=1 forces C > cap almost every step; the in-graph
+        `lax.cond` fallback must reproduce the host loop's exhaustive redo."""
+        Q, h, n = workload
+        cfg = MWEMConfig(T=12, mode="fast", n_records=n, tail_cap=1)
+        cfg_host = MWEMConfig(T=12, mode="fast", n_records=n, tail_cap=1,
+                              driver="host")
+        rf = run_mwem(Q, h, cfg, jax.random.PRNGKey(3), index=index)
+        rh = run_mwem(Q, h, cfg_host, jax.random.PRNGKey(3), index=index)
+        assert rf.overflow_count > 0
+        assert rf.overflow_count == rh.overflow_count
+        m = Q.shape[0]
+        assert all(0 <= sel < m for sel in rf.selected)
+        # fallback iterations score all m candidates, lazy ones ≤ k+1
+        assert sum(s == m for s in rf.n_scored) == rf.overflow_count
+        assert rf.n_scored == rh.n_scored
+        assert np.isfinite(rf.final_error)
+
+    def test_no_overflow_with_default_cap(self, workload, index):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=30, mode="fast", n_records=n)
+        res = run_mwem(Q, h, cfg, jax.random.PRNGKey(4), index=index)
+        assert res.overflow_count == 0
+        # sublinear scoring: mean evaluations well below m
+        assert np.mean(res.n_scored) < Q.shape[0] * 0.9
+
+
+class TestAbsTopKKernel:
+    def test_matches_jnp_abs_path(self):
+        """`mips_abs_topk` (two signed streaming passes, merged) returns the
+        same augmented-id top-k as the jnp abs path."""
+        from repro.kernels.mips_topk import mips_abs_topk
+
+        Q = jax.random.uniform(jax.random.PRNGKey(0), (200, 64))
+        v = jax.random.normal(jax.random.PRNGKey(1), (64,))
+        k = 15
+        aug_k, s_k = mips_abs_topk(Q, v, k, block_n=64, block_d=32,
+                                   interpret=True)
+        aug_j, s_j = FlatAbsIndex(Q).query(v, k)
+        assert set(np.asarray(aug_k).tolist()) == set(np.asarray(aug_j).tolist())
+        np.testing.assert_allclose(np.sort(np.asarray(s_k)),
+                                   np.sort(np.asarray(s_j)), atol=1e-5)
+
+
+class TestBatch:
+    def test_shapes_and_determinism(self, workload, index):
+        Q, h, n = workload
+        U, m = h.shape[0], Q.shape[0]
+        B, T = 5, 8
+        cfg = MWEMConfig(T=T, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+        r1 = run_mwem_batch(Q, h, cfg, keys, index=index)
+        r2 = run_mwem_batch(Q, h, cfg, keys, index=index)
+        assert r1.p_hat.shape == (B, U)
+        assert r1.selected.shape == (B, T)
+        assert r1.n_scored.shape == (B, T)
+        assert r1.final_errors.shape == (B,)
+        assert np.array_equal(r1.selected, r2.selected)
+        assert np.allclose(np.asarray(r1.p_hat), np.asarray(r2.p_hat))
+
+    def test_batch_lane_matches_single_run(self, workload, index):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=8, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(3)])
+        batch = run_mwem_batch(Q, h, cfg, keys, index=index)
+        single = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(1), index=index)
+        assert list(batch.selected[1]) == single.selected
+        assert abs(float(batch.final_errors[1]) - single.final_error) < 1e-4
+
+    def test_batched_histograms(self, workload, index):
+        Q, h, n = workload
+        B = 3
+        cfg = MWEMConfig(T=6, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+        hb = jnp.stack([h] * B)
+        shared = run_mwem_batch(Q, h, cfg, keys, index=index)
+        per = run_mwem_batch(Q, hb, cfg, keys, index=index)
+        assert np.array_equal(shared.selected, per.selected)
+        assert np.allclose(shared.final_errors, per.final_errors, atol=1e-5)
+
+    def test_host_driver_rejected(self, workload, index):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=4, mode="fast", n_records=n, driver="host")
+        keys = jnp.stack([jax.random.PRNGKey(0), jax.random.PRNGKey(1)])
+        with pytest.raises(ValueError, match="fused driver"):
+            run_mwem_batch(Q, h, cfg, keys, index=index)
+
+    def test_eval_every_trace_matches_single(self, workload, index):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=10, mode="fast", eval_every=5, n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(2)])
+        batch = run_mwem_batch(Q, h, cfg, keys, index=index)
+        single = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(1), index=index)
+        assert batch.errors.shape == (2, 2)
+        lane = batch.unbatch()[1].errors
+        assert [t for t, _ in lane] == [t for t, _ in single.errors]
+        np.testing.assert_allclose([e for _, e in lane],
+                                   [e for _, e in single.errors], atol=1e-5)
+
+    def test_unbatch(self, workload, index):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=6, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(2)])
+        batch = run_mwem_batch(Q, h, cfg, keys, index=index)
+        results = batch.unbatch()
+        assert len(results) == 2
+        for b, res in enumerate(results):
+            assert res.selected == list(batch.selected[b])
+            assert res.p_hat.shape == h.shape
+            assert np.isfinite(res.final_error)

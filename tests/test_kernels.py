@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.mips_topk.ops import mips_topk
 from repro.kernels.mips_topk.ref import mips_topk_ref
