@@ -1,0 +1,102 @@
+"""Release-service serving metrics: sustained answer QPS, wave throughput,
+and budget-rejection latency.
+
+Three regimes matter for a read-heavy private release tier:
+
+* ``answer_hot``   — repeat queries served from the zero-ε cache (dict
+  lookup, no histogram read): the hot path that post-processing makes free.
+* ``answer_cold``  — first-touch linear queries (one (U,) dot product).
+* ``reject``       — admission turning away an over-budget request: pure
+  ledger preview, no device work; its latency bounds how cheaply abusive
+  traffic is shed.
+* ``wave``         — release throughput: N admitted requests drained in
+  ⌈N/B⌉ fused `run_mwem_batch` dispatches.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import MWEMConfig
+from repro.core.queries import gaussian_histogram, random_binary_queries
+from repro.serve import ReleaseService
+
+
+def _med_us(samples) -> float:
+    return float(np.median(np.asarray(samples)) * 1e6)
+
+
+def run(quick: bool = True):
+    U = 256 if quick else 512
+    m = 1024 if quick else 8192
+    T = 10 if quick else 40
+    B = 4 if quick else 8
+    n_tenants = 8 if quick else 32
+    n_answers = 200 if quick else 2000
+    n = 500
+
+    key = jax.random.PRNGKey(0)
+    kh, kq = jax.random.split(key)
+    h = np.asarray(gaussian_histogram(kh, n, U))
+    Q = random_binary_queries(kq, m, U)
+    Qnp = np.asarray(Q)
+
+    cfg = MWEMConfig(eps=0.5, delta=1e-3, T=T, mode="fast")
+    svc = ReleaseService(Q, cfg, wave_size=B, auto_flush=False)
+    rows = []
+
+    # --- wave throughput: N tenants, ⌈N/B⌉ dispatches -----------------------
+    for i in range(n_tenants):
+        svc.create_session(f"t{i}", eps_budget=100.0, delta_budget=0.5,
+                           h=h, n_records=n)
+        svc.submit(f"t{i}")
+    svc.flush()  # warm-up: trace + compile the wave executable
+    for i in range(n_tenants):
+        svc.submit(f"t{i}")
+    t0 = time.perf_counter()
+    svc.flush()
+    wave_dt = time.perf_counter() - t0
+    rows.append(row(f"release_service/wave_B{B}",
+                    wave_dt / n_tenants * 1e6,
+                    f"releases_per_s={n_tenants / wave_dt:.1f}"
+                    f";dispatches={svc.stats.dispatches}"))
+
+    # --- answer path: cold (histogram dot) vs hot (zero-ε cache) ------------
+    qidx = np.arange(n_answers) % m
+    t0 = time.perf_counter()
+    for j in qidx:
+        svc.answer("t0", Qnp[j])
+    cold_dt = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for j in qidx:
+        svc.answer("t0", Qnp[j])
+    hot_dt = time.perf_counter() - t0
+    sess = svc.session("t0")
+    rows.append(row("release_service/answer_cold", cold_dt / n_answers * 1e6,
+                    f"qps={n_answers / cold_dt:.0f}"))
+    rows.append(row("release_service/answer_hot", hot_dt / n_answers * 1e6,
+                    f"qps={n_answers / hot_dt:.0f}"
+                    f";hit_rate={sess.cache.hits / (sess.cache.hits + sess.cache.misses):.2f}"))
+
+    # --- budget-rejection latency ------------------------------------------
+    svc.create_session("broke", eps_budget=1e-6, delta_budget=0.5,
+                       h=h, n_records=n)
+    lat = []
+    for _ in range(50 if quick else 500):
+        t0 = time.perf_counter()
+        ticket = svc.submit("broke")
+        lat.append(time.perf_counter() - t0)
+        assert ticket.status == "rejected"
+    rows.append(row("release_service/reject", _med_us(lat),
+                    f"rejected={svc.stats.rejected}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run(quick=True))

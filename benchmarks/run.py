@@ -21,7 +21,7 @@ def main() -> None:
 
     from benchmarks import (bench_error_parity, bench_linear_queries,
                             bench_lp, bench_margin, bench_n_ablation,
-                            roofline_report)
+                            bench_release_service, roofline_report)
     from benchmarks.common import print_rows
 
     benches = {
@@ -30,6 +30,7 @@ def main() -> None:
         "lp": bench_lp,
         "margin": bench_margin,
         "n_ablation": bench_n_ablation,
+        "release_service": bench_release_service,
         "roofline": roofline_report,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)

@@ -20,6 +20,7 @@ from repro.core.mwem import (
     MWEMResult,
     MWEMState,
     mwem_iteration_counts,
+    release_cost,
     run_mwem,
     run_mwem_batch,
     run_mwem_fused,
@@ -46,6 +47,7 @@ __all__ = [
     "MWEMConfig",
     "MWEMResult",
     "MWEMState",
+    "release_cost",
     "run_mwem",
     "run_mwem_batch",
     "run_mwem_fused",

@@ -62,21 +62,73 @@ class PrivacyLedger:
         """Thm F.2: a c-approximate top-k costs +2c in ε for that invocation."""
         self.approx_slack += 2.0 * c
 
+    def record_events(self, events, gamma: float = 0.0, slack: float = 0.0) -> None:
+        """Append a pre-computed cost bundle (the admitted counterpart of
+        `preview`): raw events, index failure mass γ, and *already-doubled*
+        approx slack Σ2c."""
+        self.events.extend((e0, d0, label) for e0, d0, label in events)
+        self.index_failure_mass += gamma
+        self.approx_slack += slack
+
     def composed(self, tight: bool = False) -> tuple[float, float]:
         """Total (ε, δ) over all events, plus index failure mass and slack.
 
         Events are grouped by their ε₀ (homogeneous composition within each
         group, basic composition across groups — a safe upper bound).
         """
+        return self.preview(tight=tight)
+
+    def preview(
+        self,
+        events=(),
+        gamma: float = 0.0,
+        slack: float = 0.0,
+        tight: bool = False,
+    ) -> tuple[float, float]:
+        """Composed (ε, δ) if ``events`` (plus ``gamma`` failure mass and
+        ``slack`` approx-ε) were appended — without mutating the ledger.
+
+        This is the admission-control primitive: a release's cost is a list
+        of (ε₀, δ₀, label) events (see `repro.core.mwem.release_cost`), and
+        the service asks "what would this ledger compose to with them?"
+        before spending anything.
+        """
         groups: dict[tuple[float, float], int] = {}
-        for e0, d0, _ in self.events:
+        for e0, d0, _ in list(self.events) + list(events):
             groups[(e0, d0)] = groups.get((e0, d0), 0) + 1
         eps_total, delta_total = 0.0, 0.0
         for (e0, d0), k in groups.items():
             e, d = advanced_composition(e0, d0, k, self.target_delta_prime, tight)
             eps_total += e
             delta_total += d
-        return eps_total + self.approx_slack, delta_total + self.index_failure_mass
+        return (eps_total + self.approx_slack + slack,
+                delta_total + self.index_failure_mass + gamma)
+
+    def remaining(
+        self, eps_target: float, delta_target: float, tight: bool = False
+    ) -> tuple[float, float]:
+        """Unspent (ε, δ) against a global budget: target − composed().
+
+        Negative components mean the ledger has already overshot the budget
+        (possible because advanced composition is superadditive across
+        heterogeneous event groups).
+        """
+        eps, delta = self.composed(tight=tight)
+        return eps_target - eps, delta_target - delta
+
+    def would_exceed(
+        self,
+        eps_target: float,
+        delta_target: float,
+        events=(),
+        gamma: float = 0.0,
+        slack: float = 0.0,
+        tight: bool = False,
+    ) -> bool:
+        """True iff appending ``events``/``gamma``/``slack`` would push the
+        composed totals past (eps_target, delta_target)."""
+        eps, delta = self.preview(events, gamma, slack, tight=tight)
+        return eps > eps_target or delta > delta_target
 
     def basic(self) -> tuple[float, float]:
         eps = sum(e for e, _, _ in self.events) + self.approx_slack

@@ -115,13 +115,17 @@ class MWEMBatchResult:
     eval_every: int = 0
     total_seconds: float = 0.0
     ledger: PrivacyLedger = field(default_factory=PrivacyLedger)  # per run
+    ledgers: Optional[list] = None  # per-lane ledgers when the caller passed them
 
     def unbatch(self) -> list:
-        """Materialize one MWEMResult per batch element (shared ledger).
+        """Materialize one MWEMResult per batch element.
 
-        Lanes execute concurrently under vmap, so each element's
-        ``iter_seconds`` is the whole batch's wall-clock over T — per-run
-        latency, not per-lane throughput.
+        Each element carries its own ledger when the caller passed per-lane
+        ledgers to `run_mwem_batch`; otherwise all elements share the
+        per-run ledger (and the B× composition is the caller's contract —
+        DESIGN.md §2). Lanes execute concurrently under vmap, so each
+        element's ``iter_seconds`` is the whole batch's wall-clock over T —
+        per-run latency, not per-lane throughput.
         """
         B, T = self.selected.shape
         out = []
@@ -139,7 +143,7 @@ class MWEMBatchResult:
                 n_scored=[int(s) for s in self.n_scored[b]],
                 overflow_count=int(self.overflow_counts[b]),
                 iter_seconds=[self.total_seconds / T] * T,
-                ledger=self.ledger,
+                ledger=self.ledgers[b] if self.ledgers is not None else self.ledger,
             ))
         return out
 
@@ -239,6 +243,28 @@ def _record_iteration(ledger: PrivacyLedger, mode: str, rule: str,
             ledger.record_approx_slack(c_idx)  # Thm F.2 runtime mode
     if rule != "paper":
         ledger.record(cal.eps_meas, 0.0, "laplace")
+
+
+def release_cost(cfg: MWEMConfig, m: int, U: int, index=None
+                 ) -> tuple[list, float, float]:
+    """The exact privacy-cost bundle one `run_mwem*` run records.
+
+    Returns ``(events, gamma, slack)`` — the (ε₀, δ₀, label) event list for
+    T iterations, the index failure mass γ (Thm 3.3), and the already-
+    doubled approx slack Σ2c (Thm F.2) — built through the same
+    `_calibrate`/`_record_iteration` path the drivers use, so an admission
+    controller previews *precisely* what execution will spend
+    (`PrivacyLedger.preview(*release_cost(...))` == post-run `composed()`).
+    """
+    cal = _calibrate(cfg, m, U)
+    c_idx = _check_fast_index(cfg, index, fused=False)
+    tmp = PrivacyLedger()
+    if cfg.mode == "fast":
+        tmp.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
+    for _ in range(cfg.T):
+        _record_iteration(tmp, cfg.mode, cfg.update_rule, cal,
+                          c_idx, cfg.margin_slack)
+    return list(tmp.events), tmp.index_failure_mass, tmp.approx_slack
 
 
 # ---------------------------------------------------------------------------
@@ -461,6 +487,7 @@ def run_mwem_batch(
     cfg: MWEMConfig,
     keys: jax.Array,
     index=None,
+    ledgers: Optional[list] = None,
 ) -> MWEMBatchResult:
     """Vmapped fused scan over a batch of PRNG keys — replicated release.
 
@@ -469,10 +496,16 @@ def run_mwem_batch(
         seeds])``); each batch element reproduces exactly what
         `run_mwem_fused` produces for that key.
       h: shared ``(U,)`` histogram, or ``(B, U)`` for per-element data.
+      ledgers: optional list of B `PrivacyLedger`s, one per lane — each
+        receives that lane's full event bundle (`release_cost`), which is
+        how a multi-tenant caller (repro.serve) charges each tenant's
+        session for its own slot in the wave. ``None`` entries skip a lane
+        (padding slots).
 
-    The privacy ledger is *per run* (each batch element composes the same
-    totals); serving B replicas spends B× the budget and the caller
-    accounts for the multiplicity.
+    The privacy ledger on the result is *per run* (each batch element
+    composes the same totals); serving B replicas spends B× the budget and
+    the caller accounts for the multiplicity — either manually or by
+    passing per-lane ``ledgers``.
 
     Batching is fused-only (``driver="host"`` raises). Cost caveat: under
     vmap the overflow-fallback `lax.cond` lowers to a select that executes
@@ -487,6 +520,9 @@ def run_mwem_batch(
     m, U = Q.shape
     keys = jnp.asarray(keys)
     B = keys.shape[0]
+    if ledgers is not None and len(ledgers) != B:
+        raise ValueError(f"ledgers must have one entry per lane "
+                         f"({len(ledgers)} != {B})")
     h = jnp.asarray(h, jnp.float32)
     batched_h = h.ndim == 2
     cal = _calibrate(cfg, m, U)
@@ -513,6 +549,11 @@ def run_mwem_batch(
     for _ in range(cfg.T):
         _record_iteration(ledger, cfg.mode, cfg.update_rule, cal,
                           c_idx, cfg.margin_slack)
+    if ledgers is not None:
+        for lane in ledgers:
+            if lane is not None:
+                lane.record_events(ledger.events, ledger.index_failure_mass,
+                                   ledger.approx_slack)
 
     traces = jax.device_get(traces)
     errors = None
@@ -529,6 +570,7 @@ def run_mwem_batch(
         eval_every=cfg.eval_every,
         total_seconds=total,
         ledger=ledger,
+        ledgers=list(ledgers) if ledgers is not None else None,
     )
 
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MWEMConfig, run_mwem
+from repro.core import MWEMConfig, release_cost, run_mwem
 from repro.core.accountant import PrivacyLedger
 from repro.core.queries import ngram_marginal_queries
 from repro.mips import FlatAbsIndex, IVFIndex, augment_complement
@@ -59,6 +59,43 @@ class PrivateDataPipeline:
         res = run_mwem(jnp.asarray(Q), jnp.asarray(h), cfg, krun, index=index,
                        ledger=self.ledger)
         self.p_hat = res.p_hat
+        return self
+
+    def fit_via_service(self, tokens: np.ndarray, service, tenant_id: str = "pipeline",
+                        eps_budget: Optional[float] = None,
+                        delta_budget: Optional[float] = None) -> "PrivateDataPipeline":
+        """Release through a shared `repro.serve.ReleaseService` instead of a
+        standalone run: the pipeline becomes one tenant among many, its
+        release rides a cross-tenant wave, and its privacy spend lands on
+        the service session's ledger (adopted as ``self.ledger``).
+
+        Default budgets admit exactly one release (the projected composed
+        cost of this request); pass explicit budgets to leave headroom for
+        later releases on the same session.
+        """
+        if service.U != self.vocab_size:
+            raise ValueError(f"service domain U={service.U} != "
+                             f"vocab_size={self.vocab_size}")
+        tokens = np.asarray(tokens).reshape(-1)
+        if eps_budget is None or delta_budget is None:
+            cfg = service._group_cfg(tokens.size)
+            # preview in the service's composition mode, or the sized-to-fit
+            # budget could be rejected by a tight-mode admission check
+            cost = PrivacyLedger().preview(
+                *release_cost(cfg, service.m, service.U, index=service.index),
+                tight=service.admission.tight)
+            eps_budget = cost[0] if eps_budget is None else eps_budget
+            delta_budget = cost[1] if delta_budget is None else delta_budget
+        sess = service.create_session(tenant_id, tokens=tokens,
+                                      eps_budget=eps_budget,
+                                      delta_budget=delta_budget)
+        ticket = service.submit(tenant_id, seed=self.seed)
+        if ticket.status == "rejected":
+            raise RuntimeError(f"release rejected: {ticket.decision.reason}")
+        if ticket.status != "done":
+            service.flush()
+        self.p_hat = jnp.asarray(ticket.release.p_hat)
+        self.ledger = sess.ledger
         return self
 
     def privacy_spent(self):

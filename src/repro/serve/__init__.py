@@ -1,5 +1,42 @@
-"""Serving substrate: batched request engine over prefill/decode steps."""
+"""Serving substrate.
+
+Two serving tiers live here (DESIGN.md §5):
+
+* `engine` — the LM tier: batched prefill/decode waves with slot-level
+  continuous batching (`ServeEngine`).
+* `release_service` / `session` / `admission` — the private query-release
+  tier: multi-tenant sessions with (ε, δ) budgets, ledger-preview admission
+  control, cross-tenant fixed-size release waves through one
+  `run_mwem_batch` dispatch, and a zero-ε answer cache over released
+  synthetic histograms.
+"""
 
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.admission import AdmissionController, AdmissionDecision
+from repro.serve.release_service import (
+    ReleaseService,
+    ReleaseTicket,
+    ServiceStats,
+)
+from repro.serve.session import (
+    Answer,
+    AnswerCache,
+    ReleasedHistogram,
+    TenantSession,
+    query_fingerprint,
+)
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "AdmissionController",
+    "AdmissionDecision",
+    "ReleaseService",
+    "ReleaseTicket",
+    "ServiceStats",
+    "Answer",
+    "AnswerCache",
+    "ReleasedHistogram",
+    "TenantSession",
+    "query_fingerprint",
+]

@@ -1,0 +1,91 @@
+"""Budget admission control for release requests.
+
+A release's privacy cost is fully determined before execution: the drivers
+record a fixed event schedule (T × {EM, Laplace} events plus index failure
+mass — `repro.core.mwem.release_cost`). Admission therefore *previews* the
+tenant ledger with that bundle appended (`PrivacyLedger.preview`) and
+rejects any request whose composed (ε, δ) would exceed the session budget —
+nothing is spent until the wave actually executes, and the projected totals
+reported on rejection are exactly what execution would have composed to.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.mwem import MWEMConfig, release_cost
+from repro.serve.session import TenantSession
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    admitted: bool
+    tenant_id: str
+    eps_projected: float     # composed ε if this release were executed
+    delta_projected: float   # composed δ if this release were executed
+    eps_budget: float
+    delta_budget: float
+    eps_cost: float          # this release's marginal composed ε
+    delta_cost: float        # this release's marginal composed δ
+    reason: str = ""
+
+
+class AdmissionController:
+    """Stateless check: would this (session, release config) overspend?
+
+    ``tight`` selects the composition mode used for the budget comparison
+    (Thm B.1 as printed vs the Dwork–Rothblum–Vadhan tail) — the same flag
+    the ledger exposes, so admission and post-hoc accounting agree.
+    """
+
+    def __init__(self, tight: bool = False):
+        self.tight = tight
+
+    def check_release(self, session: TenantSession, cfg: MWEMConfig, m: int,
+                      U: int, index=None) -> AdmissionDecision:
+        """Convenience wrapper: derive the cost bundle, then `check`."""
+        return self.check(session, release_cost(cfg, m, U, index=index))
+
+    def check(self, session: TenantSession, cost_bundle,
+              reserved=None) -> AdmissionDecision:
+        """Decide on a request whose cost is the pre-computed
+        ``cost_bundle = (events, gamma, slack)``.
+
+        ``reserved`` is an equally-shaped bundle of the tenant's
+        queued-but-unexecuted requests: those already count against the
+        budget, so two requests that individually fit but jointly overspend
+        cannot both be admitted.
+        """
+        events, gamma, slack = cost_bundle
+        if reserved is not None:
+            r_events, r_gamma, r_slack = reserved
+            events = list(r_events) + list(events)
+            gamma += r_gamma
+            slack += r_slack
+            # marginal cost baseline includes the reservations, so
+            # eps_cost/delta_cost report only *this* request's share
+            spent_eps, spent_delta = session.ledger.preview(
+                r_events, r_gamma, r_slack, tight=self.tight)
+        else:
+            spent_eps, spent_delta = session.ledger.composed(tight=self.tight)
+        proj_eps, proj_delta = session.ledger.preview(
+            events, gamma, slack, tight=self.tight)
+        admitted = (proj_eps <= session.eps_budget
+                    and proj_delta <= session.delta_budget)
+        if admitted:
+            reason = "within budget"
+        else:
+            reason = (f"composed (ε={proj_eps:.4f}, δ={proj_delta:.2e}) "
+                      f"exceeds budget (ε={session.eps_budget:.4f}, "
+                      f"δ={session.delta_budget:.2e})")
+        return AdmissionDecision(
+            admitted=admitted,
+            tenant_id=session.tenant_id,
+            eps_projected=proj_eps,
+            delta_projected=proj_delta,
+            eps_budget=session.eps_budget,
+            delta_budget=session.delta_budget,
+            eps_cost=proj_eps - spent_eps,
+            delta_cost=proj_delta - spent_delta,
+            reason=reason,
+        )

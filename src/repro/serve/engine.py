@@ -1,9 +1,12 @@
 """Batched serving engine.
 
 Drives a `repro.models.LM` through prefill → decode with a shared batched
-cache. Requests are padded into fixed (batch, max_len) slots (continuous
-batching at the slot level: a finished request's slot is refillable —
-`free_slots`). Sampling: greedy or temperature.
+cache. Requests are padded into fixed (batch, max_len) slots — continuous
+batching at the slot level: when a request finishes mid-wave its slot is
+freed (`free_slots`) and refilled from the queue by prefilling the new
+prompt alone and scattering its cache row into the batched cache, so the
+wave keeps decoding at full width instead of draining to its slowest
+member. Sampling: greedy or temperature.
 
 The per-token compute path is exactly the `serve_step` the dry-run lowers;
 this module adds the request bookkeeping around it.
@@ -11,8 +14,9 @@ this module adds the request bookkeeping around it.
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +41,9 @@ class ServeEngine:
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)
+        # slot indices currently free inside the active wave (refillable)
+        self.free_slots: List[int] = []
+        self.refill_count = 0  # requests served via mid-wave slot reuse
 
     def _sample(self, logits: jax.Array, temperatures: np.ndarray) -> jax.Array:
         """Per-request sampling: greedy rows (temp ≤ 0) and temperature rows
@@ -52,35 +59,86 @@ class ServeEngine:
                          greedy, sampled)
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a wave of requests (up to batch_size at a time)."""
-        for wave_start in range(0, len(requests), self.batch_size):
-            wave = requests[wave_start:wave_start + self.batch_size]
-            self._run_wave(wave)
+        """Serve all requests; waves refill freed slots from the queue."""
+        queue: Deque[Request] = deque(requests)
+        while queue:
+            wave = [queue.popleft()
+                    for _ in range(min(self.batch_size, len(queue)))]
+            self._run_wave(wave, queue)
         return requests
 
-    def _run_wave(self, wave: List[Request]):
-        B = len(wave)
+    def _left_pad(self, prompts: List[List[int]], width: int) -> jax.Array:
+        tokens = np.zeros((len(prompts), width), np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, width - len(p):] = p
+        return jnp.asarray(tokens)
+
+    def _can_refill(self, req: Request, pos: int) -> bool:
+        """A queued request fits the running wave iff its prompt left-pads
+        to the wave's current position and its decode budget fits the
+        remaining cache length."""
+        return (len(req.prompt) <= pos
+                and pos + req.max_new_tokens <= self.max_len)
+
+    def _refill_slot(self, cache, slot: int, req: Request, pos: int):
+        """Prefill `req` alone (left-padded to the wave position) and
+        scatter its cache row into the batched cache at `slot`.
+
+        Cache leaves are stacked over layer units — (n_units, batch, ...) —
+        so the batch axis is axis 1 on every leaf.
+        """
+        tokens = self._left_pad([req.prompt], pos)
+        logits1, cache1 = self.model.prefill(self.params, {"tokens": tokens},
+                                             max_len=self.max_len)
+        cache = jax.tree_util.tree_map(
+            lambda c, c1: c.at[:, slot].set(c1[:, 0]), cache, cache1)
+        first = self._sample(logits1, np.array([req.temperature], np.float32))
+        self.refill_count += 1
+        return cache, int(first[0])
+
+    def _run_wave(self, wave: List[Request], queue: Optional[Deque[Request]] = None):
         prompt_len = max(len(r.prompt) for r in wave)
-        tokens = np.zeros((B, prompt_len), np.int32)
-        for i, r in enumerate(wave):
-            tokens[i, prompt_len - len(r.prompt):] = r.prompt  # left-pad
-        batch = {"tokens": jnp.asarray(tokens)}
+        batch = {"tokens": self._left_pad([r.prompt for r in wave], prompt_len)}
         logits, cache = self.model.prefill(self.params, batch,
                                            max_len=self.max_len)
-        steps = max(r.max_new_tokens for r in wave)
+        slots: List[Optional[Request]] = list(wave)
         temperatures = np.array([r.temperature for r in wave], np.float32)
         next_tok = self._sample(logits, temperatures)
-        for i, r in enumerate(wave):
+        for i, r in enumerate(slots):
             r.out_tokens.append(int(next_tok[i]))
         pos = prompt_len
-        for _ in range(steps - 1):
+        self.free_slots = []
+        while True:
+            # retire finished requests → their slots become refillable
+            for i, r in enumerate(slots):
+                if r is not None and len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    slots[i] = None
+                    self.free_slots.append(i)
+            # mid-wave refill: freed slots pick up queued requests that fit
+            while (queue and self.free_slots
+                   and self._can_refill(queue[0], pos)):
+                slot = self.free_slots.pop(0)
+                req = queue.popleft()
+                cache, first = self._refill_slot(cache, slot, req, pos)
+                req.out_tokens.append(first)
+                temperatures[slot] = req.temperature
+                next_tok = next_tok.at[slot].set(first)
+                slots[slot] = req
+            if all(r is None for r in slots):
+                break  # wave drained (leftover queue starts a fresh wave)
+            if pos >= self.max_len:
+                # cache exhausted: truncate the stragglers at max_len
+                for r in slots:
+                    if r is not None:
+                        r.done = True
+                break
             logits, cache = self._decode(self.params, cache,
                                          next_tok[:, None].astype(jnp.int32),
                                          jnp.int32(pos))
             next_tok = self._sample(logits, temperatures)
             pos += 1
-            for i, r in enumerate(wave):
-                if len(r.out_tokens) < r.max_new_tokens:
+            for i, r in enumerate(slots):
+                if r is not None and len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(next_tok[i]))
-        for r in wave:
-            r.done = True
+        self.free_slots = []

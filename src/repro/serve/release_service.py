@@ -1,0 +1,282 @@
+"""Multi-tenant private query-release service.
+
+The serving tier the Fast-MWEM paper makes economical: selection is
+Θ(√m) per iteration, the whole T-iteration run is one fused scan, and the
+vmapped batch driver releases B synthetic histograms per dispatch — so the
+service coalesces pending release requests *across tenants* into fixed-size
+waves (padding short waves with replica slots, like the LM engine pads
+request slots) and answers read traffic from already-released histograms at
+zero additional ε (post-processing).
+
+Flow (DESIGN.md §5):
+
+  submit ──► AdmissionController.check (ledger preview, nothing spent)
+     │            │
+     │ rejected ──┴──► ReleaseTicket(status="rejected", decision)
+     ▼
+  pending queue, grouped by n_records (a compile-time static)
+     ▼ wave of exactly `wave_size` slots
+  run_mwem_batch (one dispatch; per-lane ledgers charge each tenant)
+     ▼
+  TenantSession.releases ──► answer()/AnswerCache (zero-ε reads)
+
+Budget reservations: a queued-but-unexecuted request already counts against
+its tenant's budget at admission time (its cost bundle is held as a
+reservation and previewed together with the ledger), so two requests that
+individually fit but jointly overspend cannot both be admitted.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accountant import PrivacyLedger
+from repro.core.mwem import MWEMConfig, release_cost, run_mwem_batch
+from repro.mips import FlatAbsIndex, IVFIndex, LSHIndex, augment_complement
+from repro.serve.admission import AdmissionController, AdmissionDecision
+from repro.serve.session import Answer, ReleasedHistogram, TenantSession
+
+
+@dataclass
+class ReleaseTicket:
+    """Handle returned by `submit`; resolved by the wave that executes it."""
+
+    ticket_id: int
+    tenant_id: str
+    seed: int
+    status: str                      # "queued" | "rejected" | "done"
+    decision: AdmissionDecision
+    cost_bundle: tuple = ()          # (events, gamma, slack) reservation
+    release: Optional[ReleasedHistogram] = None
+    final_error: float = float("nan")
+
+
+@dataclass
+class ServiceStats:
+    dispatches: int = 0
+    released: int = 0
+    rejected: int = 0
+    padded_slots: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(dispatches=self.dispatches, released=self.released,
+                    rejected=self.rejected, padded_slots=self.padded_slots)
+
+
+class ReleaseService:
+    """Coalescing, budget-admitted front end over `run_mwem_batch`.
+
+    One service owns one query workload Q (m × U) and one k-MIPS index over
+    it — tenants share the compiled wave executable and differ only in
+    their histogram lane, PRNG key, and ledger. Release parameters
+    (per-release ε, δ, T, mode) are fixed at construction so every wave is
+    one `run_mwem_batch` dispatch of exactly ``wave_size`` lanes; requests
+    from datasets of different sizes (``n_records`` is a compile-time
+    static through the noise scales) batch in separate per-size groups.
+    """
+
+    def __init__(self, Q, cfg: MWEMConfig, wave_size: int = 8,
+                 index_kind: str = "flat", seed: int = 0,
+                 tight_composition: bool = False, auto_flush: bool = True):
+        self.Q = jnp.asarray(Q, jnp.float32)
+        self.m, self.U = self.Q.shape
+        self.cfg = cfg
+        self.wave_size = int(wave_size)
+        self.auto_flush = auto_flush
+        self.admission = AdmissionController(tight=tight_composition)
+        self.sessions: Dict[str, TenantSession] = {}
+        self.stats = ServiceStats()
+        self._pending: "OrderedDict[int, List[ReleaseTicket]]" = OrderedDict()
+        self._next_ticket = 0
+        self._next_release = 0
+        self._next_seed = seed
+        if cfg.mode == "fast":
+            if index_kind == "flat":
+                self.index = FlatAbsIndex(self.Q)
+            elif index_kind == "ivf":
+                self.index = IVFIndex(augment_complement(np.asarray(self.Q)),
+                                      seed=seed)
+            elif index_kind == "lsh":
+                self.index = LSHIndex(augment_complement(np.asarray(self.Q)),
+                                      seed=seed)
+            else:
+                raise ValueError(f"unknown index kind {index_kind!r}")
+        else:
+            self.index = None
+
+    # ------------------------------------------------------------ sessions
+    def create_session(self, tenant_id: str, *, eps_budget: float,
+                       delta_budget: float, tokens=None, h=None,
+                       n_records: Optional[int] = None) -> TenantSession:
+        """Register a tenant: histogram from raw ``tokens`` (binned over the
+        service domain U) or a pre-built normalized ``h`` + ``n_records``."""
+        if tenant_id in self.sessions:
+            raise ValueError(f"session {tenant_id!r} already exists")
+        if tokens is not None:
+            sess = TenantSession.from_tokens(tenant_id, tokens, self.U,
+                                             eps_budget, delta_budget)
+        else:
+            if h is None or n_records is None:
+                raise ValueError("provide tokens=, or h= with n_records=")
+            h = np.asarray(h, np.float32)
+            if h.shape != (self.U,):
+                raise ValueError(f"h must have shape ({self.U},), got {h.shape}")
+            sess = TenantSession(tenant_id=tenant_id, h=h,
+                                 n_records=int(n_records),
+                                 eps_budget=eps_budget,
+                                 delta_budget=delta_budget)
+        self.sessions[tenant_id] = sess
+        return sess
+
+    def session(self, tenant_id: str) -> TenantSession:
+        return self.sessions[tenant_id]
+
+    # ------------------------------------------------------------- submit
+    def _group_cfg(self, n_records: int) -> MWEMConfig:
+        return replace(self.cfg, n_records=n_records)
+
+    def _reserved(self, tenant_id: str):
+        """Cost bundles of this tenant's queued-but-unexecuted tickets."""
+        events: list = []
+        gamma = slack = 0.0
+        for group in self._pending.values():
+            for t in group:
+                if t.tenant_id == tenant_id:
+                    ev, g, s = t.cost_bundle
+                    events.extend(ev)
+                    gamma += g
+                    slack += s
+        return events, gamma, slack
+
+    def submit(self, tenant_id: str,
+               seed: Optional[int] = None) -> ReleaseTicket:
+        """Request one release for a tenant.
+
+        Admission previews the tenant ledger with the release's exact cost
+        bundle (plus any still-queued reservations) appended; over-budget
+        requests are rejected *before* anything is spent, with the
+        projected composed (ε, δ) reported on the decision.
+        """
+        sess = self.sessions[tenant_id]
+        cfg = self._group_cfg(sess.n_records)
+        bundle = release_cost(cfg, self.m, self.U, index=self.index)
+        decision = self.admission.check(sess, bundle,
+                                        reserved=self._reserved(tenant_id))
+        ticket = ReleaseTicket(
+            ticket_id=self._next_ticket, tenant_id=tenant_id,
+            seed=self._next_seed if seed is None else seed,
+            status="queued" if decision.admitted else "rejected",
+            decision=decision, cost_bundle=bundle,
+        )
+        self._next_ticket += 1
+        if seed is None:
+            self._next_seed += 1
+        if not decision.admitted:
+            sess.rejected_count += 1
+            self.stats.rejected += 1
+            return ticket
+        self._pending.setdefault(sess.n_records, []).append(ticket)
+        if self.auto_flush and len(self._pending[sess.n_records]) >= self.wave_size:
+            self._run_wave(sess.n_records)
+        return ticket
+
+    # -------------------------------------------------------------- waves
+    def pending_count(self) -> int:
+        return sum(len(g) for g in self._pending.values())
+
+    def flush(self) -> List[ReleaseTicket]:
+        """Drain every pending group through fixed-size waves."""
+        done: List[ReleaseTicket] = []
+        for n_records in list(self._pending):
+            while self._pending.get(n_records):
+                done.extend(self._run_wave(n_records))
+        return done
+
+    def _run_wave(self, n_records: int) -> List[ReleaseTicket]:
+        """Execute one wave: exactly ``wave_size`` lanes, one dispatch.
+
+        Short waves are padded by replicating the first slot (same
+        histogram/key shapes keep the compiled executable; pad lanes carry
+        no ledger and their outputs are dropped) — the slot-reuse trick the
+        LM engine uses for ragged request batches.
+        """
+        queue = self._pending[n_records]
+        wave = queue[:self.wave_size]
+        del queue[:self.wave_size]
+        if not queue:
+            del self._pending[n_records]
+        B = self.wave_size
+        n_pad = B - len(wave)
+        self.stats.padded_slots += n_pad
+        pad = [wave[0]] * n_pad
+        lanes = wave + pad
+        cfg = self._group_cfg(n_records)
+        h_stack = jnp.asarray(
+            np.stack([self.sessions[t.tenant_id].h for t in lanes]))
+        keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in lanes])
+        ledgers: List[Optional[PrivacyLedger]] = [
+            self.sessions[t.tenant_id].ledger for t in wave
+        ] + [None] * n_pad
+        # pre-dispatch ledger snapshots, for per-ticket marginal costs
+        snaps = {t.tenant_id: (list(self.sessions[t.tenant_id].ledger.events),
+                               self.sessions[t.tenant_id].ledger.index_failure_mass,
+                               self.sessions[t.tenant_id].ledger.approx_slack)
+                 for t in wave}
+        result = run_mwem_batch(self.Q, h_stack, cfg, keys,
+                                index=self.index, ledgers=ledgers)
+        self.stats.dispatches += 1
+        p_hat = np.asarray(result.p_hat)
+        per_run = result.ledger  # one lane's event bundle
+        lanes_seen: Dict[str, int] = {}
+        tight = self.admission.tight
+        for i, ticket in enumerate(wave):
+            sess = self.sessions[ticket.tenant_id]
+            # marginal cost of *this* lane: replay the snapshot plus this
+            # tenant's earlier lanes in the wave, then preview one more —
+            # a plain before/after ledger diff would double-count when one
+            # tenant holds several lanes
+            k = lanes_seen.get(ticket.tenant_id, 0)
+            lanes_seen[ticket.tenant_id] = k + 1
+            ev0, g0, s0 = snaps[ticket.tenant_id]
+            scratch = PrivacyLedger(
+                target_delta_prime=sess.ledger.target_delta_prime)
+            scratch.events = ev0 + list(per_run.events) * k
+            scratch.index_failure_mass = g0 + k * per_run.index_failure_mass
+            scratch.approx_slack = s0 + k * per_run.approx_slack
+            before = scratch.composed(tight=tight)
+            after = scratch.preview(per_run.events,
+                                    per_run.index_failure_mass,
+                                    per_run.approx_slack, tight=tight)
+            rel = ReleasedHistogram(
+                release_id=self._next_release,
+                p_hat=p_hat[i],
+                final_error=float(result.final_errors[i]),
+                eps_cost=after[0] - before[0],
+                delta_cost=after[1] - before[1],
+                seed=ticket.seed,
+            )
+            self._next_release += 1
+            sess.add_release(rel)
+            ticket.release = rel
+            ticket.final_error = rel.final_error
+            ticket.status = "done"
+            self.stats.released += 1
+        return wave
+
+    # ------------------------------------------------------------- answers
+    def answer(self, tenant_id: str, q,
+               release_id: Optional[int] = None) -> Answer:
+        """Answer a linear query from the tenant's released histogram(s) —
+        post-processing, zero additional ε; repeats served from the cache."""
+        return self.sessions[tenant_id].answer(q, release_id=release_id)
+
+    def answer_derived(self, tenant_id: str, coeffs,
+                       release_id: Optional[int] = None) -> Optional[Answer]:
+        return self.sessions[tenant_id].answer_derived(coeffs,
+                                                       release_id=release_id)

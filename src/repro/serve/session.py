@@ -1,0 +1,166 @@
+"""Per-tenant release sessions and the zero-ε answer cache.
+
+A `TenantSession` owns one private dataset histogram, a global (ε, δ)
+budget, and a `PrivacyLedger` charged for every release executed on the
+tenant's behalf. Released synthetic histograms are retained as
+`ReleasedHistogram`s; answering linear queries against them is
+post-processing (Hardt–Ligett–McSherry) and costs no additional privacy —
+the `AnswerCache` makes the repeat-query hot path a dict lookup that never
+touches the ledger and returns the stored float bitwise.
+
+Derivability: any linear combination of already-answered queries is itself
+answerable from the cache alone (⟨Σ cᵢ qᵢ, p̂⟩ = Σ cᵢ ⟨qᵢ, p̂⟩), so
+`AnswerCache.derive` serves aggregate/rollup queries without re-reading the
+histogram — still zero ε.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.accountant import PrivacyLedger
+
+
+def query_fingerprint(q) -> str:
+    """Stable content hash of a linear query vector (float32 bytes)."""
+    return hashlib.sha1(
+        np.ascontiguousarray(np.asarray(q, np.float32)).tobytes()
+    ).hexdigest()
+
+
+@dataclass(frozen=True)
+class ReleasedHistogram:
+    """One synthetic histogram released for a tenant (post-processing-safe)."""
+
+    release_id: int
+    p_hat: np.ndarray          # (U,) synthetic distribution
+    final_error: float         # ‖Q(p̂−h)‖_∞ on the service workload
+    eps_cost: float            # composed ε this release added to the ledger
+    delta_cost: float          # composed δ this release added to the ledger
+    seed: int = 0
+
+
+@dataclass
+class Answer:
+    value: float
+    cached: bool
+    release_id: int
+    fingerprint: str
+
+
+class AnswerCache:
+    """(release_id, query fingerprint) → float answer, plus hit statistics."""
+
+    def __init__(self):
+        self._store: Dict[tuple, float] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def lookup(self, release_id: int, fp: str) -> Optional[float]:
+        got = self._store.get((release_id, fp))
+        if got is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return got
+
+    def insert(self, release_id: int, fp: str, value: float) -> None:
+        self._store[(release_id, fp)] = value
+
+    def derive(self, release_id: int, coeffs: Dict[str, float]) -> Optional[float]:
+        """Answer Σ cᵢ qᵢ by linearity of ⟨·, p̂⟩ — cache-only, no histogram
+        read. Returns None unless *every* component is cached."""
+        total = 0.0
+        for fp, c in coeffs.items():
+            got = self._store.get((release_id, fp))
+            if got is None:
+                self.misses += 1
+                return None
+            total += c * got
+        self.hits += 1
+        return total
+
+
+@dataclass
+class TenantSession:
+    """One tenant's standing state inside a `ReleaseService`."""
+
+    tenant_id: str
+    h: np.ndarray                  # (U,) normalized private histogram
+    n_records: int                 # dataset size n → sensitivity Δu = 1/n
+    eps_budget: float
+    delta_budget: float
+    ledger: PrivacyLedger = field(default_factory=PrivacyLedger)
+    releases: List[ReleasedHistogram] = field(default_factory=list)
+    cache: AnswerCache = field(default_factory=AnswerCache)
+    rejected_count: int = 0
+
+    @classmethod
+    def from_tokens(cls, tenant_id: str, tokens, domain_size: int,
+                    eps_budget: float, delta_budget: float) -> "TenantSession":
+        """Build the histogram from a raw token/record array."""
+        tokens = np.asarray(tokens).reshape(-1)
+        h = np.bincount(tokens, minlength=domain_size).astype(np.float32)
+        h /= tokens.size
+        return cls(tenant_id=tenant_id, h=h, n_records=int(tokens.size),
+                   eps_budget=eps_budget, delta_budget=delta_budget)
+
+    def spent(self, tight: bool = False) -> tuple:
+        return self.ledger.composed(tight=tight)
+
+    def remaining(self, tight: bool = False) -> tuple:
+        return self.ledger.remaining(self.eps_budget, self.delta_budget,
+                                     tight=tight)
+
+    @property
+    def latest(self) -> Optional[ReleasedHistogram]:
+        return self.releases[-1] if self.releases else None
+
+    def add_release(self, rel: ReleasedHistogram) -> None:
+        self.releases.append(rel)
+
+    def _release(self, release_id: Optional[int]) -> ReleasedHistogram:
+        if not self.releases:
+            raise LookupError(f"tenant {self.tenant_id!r} has no releases yet")
+        if release_id is None:
+            return self.releases[-1]
+        for rel in self.releases:
+            if rel.release_id == release_id:
+                return rel
+        raise LookupError(f"unknown release {release_id} for {self.tenant_id!r}")
+
+    def answer(self, q, release_id: Optional[int] = None) -> Answer:
+        """⟨q, p̂⟩ from a released histogram — zero additional ε.
+
+        Repeat queries hit the cache and return the stored float bitwise;
+        the session ledger is never touched on this path (asserted by
+        `tests/test_release_service.py`).
+        """
+        rel = self._release(release_id)
+        fp = query_fingerprint(q)
+        got = self.cache.lookup(rel.release_id, fp)
+        if got is not None:
+            return Answer(got, cached=True, release_id=rel.release_id,
+                          fingerprint=fp)
+        value = float(np.asarray(q, np.float32) @ np.asarray(rel.p_hat,
+                                                            np.float32))
+        self.cache.insert(rel.release_id, fp, value)
+        return Answer(value, cached=False, release_id=rel.release_id,
+                      fingerprint=fp)
+
+    def answer_derived(self, coeffs: Dict[str, float],
+                       release_id: Optional[int] = None) -> Optional[Answer]:
+        """Linear combination of cached answers (rollups) — cache-only."""
+        rel = self._release(release_id)
+        value = self.cache.derive(rel.release_id, coeffs)
+        if value is None:
+            return None
+        return Answer(value, cached=True, release_id=rel.release_id,
+                      fingerprint="+".join(sorted(coeffs)))

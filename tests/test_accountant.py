@@ -55,3 +55,54 @@ class TestLedger:
         eps, delta = led.basic()
         assert math.isclose(eps, 0.3)
         assert delta == 0.0
+
+
+class TestBudgetHelpers:
+    """`remaining` / `would_exceed` / `preview` — the admission-control
+    surface — checked against `advanced_composition` directly in both the
+    default and tight composition modes."""
+
+    @pytest.mark.parametrize("tight", [False, True])
+    def test_remaining_matches_advanced_composition(self, tight):
+        led = PrivacyLedger(target_delta_prime=1e-9)
+        for _ in range(40):
+            led.record(0.02, 1e-8, "em")
+        spent, spent_d = advanced_composition(0.02, 1e-8, 40, 1e-9, tight)
+        eps_rem, delta_rem = led.remaining(2.0, 1e-4, tight=tight)
+        assert math.isclose(eps_rem, 2.0 - spent, rel_tol=1e-12)
+        assert math.isclose(delta_rem, 1e-4 - spent_d, rel_tol=1e-9)
+
+    @pytest.mark.parametrize("tight", [False, True])
+    def test_preview_is_pure_and_matches_record(self, tight):
+        led = PrivacyLedger(target_delta_prime=1e-9)
+        led.record(0.05, 0.0, "em")
+        events = [(0.05, 0.0, "em")] * 9 + [(0.01, 0.0, "laplace")] * 10
+        before = list(led.events)
+        previewed = led.preview(events, gamma=1e-5, slack=0.002, tight=tight)
+        assert led.events == before  # no mutation
+        led.record_events(events, gamma=1e-5, slack=0.002)
+        assert led.composed(tight=tight) == previewed
+        # cross-check against advanced_composition per homogeneous group
+        e1, d1 = advanced_composition(0.05, 0.0, 10, 1e-9, tight)
+        e2, d2 = advanced_composition(0.01, 0.0, 10, 1e-9, tight)
+        assert math.isclose(previewed[0], e1 + e2 + 0.002, rel_tol=1e-12)
+        assert math.isclose(previewed[1], d1 + d2 + 1e-5, rel_tol=1e-12)
+
+    @pytest.mark.parametrize("tight", [False, True])
+    def test_would_exceed_threshold(self, tight):
+        led = PrivacyLedger(target_delta_prime=1e-9)
+        events = [(0.1, 0.0, "em")] * 5
+        eps_cost, delta_cost = led.preview(events, tight=tight)
+        assert not led.would_exceed(eps_cost * 1.01, delta_cost * 1.01,
+                                    events, tight=tight)
+        assert led.would_exceed(eps_cost * 0.99, delta_cost * 1.01,
+                                events, tight=tight)
+        # δ overflow alone also rejects
+        assert led.would_exceed(eps_cost * 1.01, delta_cost * 0.5,
+                                events, gamma=delta_cost, tight=tight)
+
+    def test_remaining_can_go_negative(self):
+        led = PrivacyLedger()
+        led.record(1.0)
+        eps_rem, _ = led.remaining(0.5, 1e-3)
+        assert eps_rem < 0.0

@@ -57,6 +57,43 @@ class TestPrivatePipeline:
         assert mass_low > 0.2  # uniform would give 0.125; measured ≈ 0.28
 
 
+class TestPipelineViaService:
+    def test_fit_via_service_and_sample(self):
+        """The LM data pipeline can source its DP histogram from a shared
+        multi-tenant ReleaseService (sampling is post-processing)."""
+        from repro.core import MWEMConfig
+        from repro.core.queries import ngram_marginal_queries
+        from repro.serve import ReleaseService
+
+        V = 128
+        Q = ngram_marginal_queries(jax.random.PRNGKey(0), 64, V, arity=32)
+        svc = ReleaseService(Q, MWEMConfig(eps=2.0, delta=1e-3, T=20,
+                                           mode="fast"), wave_size=2)
+        rng = np.random.default_rng(0)
+        tokens = rng.integers(0, V, size=10_000)
+        pipe = PrivateDataPipeline(vocab_size=V, eps=2.0, T=20, seed=0)
+        pipe.fit_via_service(tokens, svc)
+        assert pipe.p_hat is not None
+        eps, delta = pipe.privacy_spent()
+        assert 0 < eps < 10 and 0 < delta < 0.1
+        # the pipeline's ledger IS the tenant session's ledger
+        assert pipe.ledger is svc.session("pipeline").ledger
+        batch = pipe.sample_batch(0, 0, 4, 16)
+        assert batch.shape == (4, 16)
+        assert int(batch.max()) < V
+
+    def test_fit_via_service_domain_mismatch(self):
+        from repro.core import MWEMConfig
+        from repro.core.queries import ngram_marginal_queries
+        from repro.serve import ReleaseService
+
+        Q = ngram_marginal_queries(jax.random.PRNGKey(0), 32, 64, arity=16)
+        svc = ReleaseService(Q, MWEMConfig(eps=1.0, T=5, mode="fast"))
+        pipe = PrivateDataPipeline(vocab_size=256)
+        with pytest.raises(ValueError, match="vocab_size"):
+            pipe.fit_via_service(np.zeros(100, np.int64), svc)
+
+
 class TestServeEngine:
     def test_batched_waves(self):
         cfg = get_smoke_config("llama3.2-3b").with_(dtype="float32")
@@ -68,6 +105,36 @@ class TestServeEngine:
         assert all(r.done for r in reqs)
         assert all(len(r.out_tokens) == 5 for r in reqs)
         assert all(0 <= t < cfg.padded_vocab for r in reqs for t in r.out_tokens)
+
+    def test_mid_wave_slot_refill(self):
+        """A short request frees its slot mid-wave and a queued request
+        refills it (`free_slots`) instead of waiting for a fresh wave."""
+        cfg = get_smoke_config("llama3.2-3b").with_(dtype="float32")
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        engine = ServeEngine(model, params, batch_size=2, max_len=48)
+        reqs = [Request(prompt=[1, 2, 3], max_new_tokens=2),   # frees early
+                Request(prompt=[4, 5, 6], max_new_tokens=10),
+                Request(prompt=[7, 8], max_new_tokens=4)]      # refills slot 0
+        engine.run(reqs)
+        assert all(r.done for r in reqs)
+        assert [len(r.out_tokens) for r in reqs] == [2, 10, 4]
+        assert engine.refill_count == 1  # req 3 rode the running wave
+
+    def test_refill_on_recurrent_cache(self):
+        """Slot refill also scatters correctly into SSM recurrent caches
+        (leaves with no sequence axis)."""
+        cfg = get_smoke_config("mamba2-130m").with_(dtype="float32")
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        engine = ServeEngine(model, params, batch_size=1, max_len=32)
+        first = Request(prompt=[2, 4, 6], max_new_tokens=3)
+        refilled = Request(prompt=[9, 3, 1], max_new_tokens=4)
+        engine.run([first, refilled])
+        assert engine.refill_count == 1
+        assert first.done and len(first.out_tokens) == 3
+        assert refilled.done and len(refilled.out_tokens) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in refilled.out_tokens)
 
     def test_greedy_deterministic(self):
         cfg = get_smoke_config("mamba2-130m").with_(dtype="float32")

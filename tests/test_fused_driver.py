@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import MWEMConfig, run_mwem, run_mwem_batch, run_mwem_fused
+from repro.core.accountant import PrivacyLedger
 from repro.core.queries import gaussian_histogram, max_error, random_binary_queries
 from repro.mips import FlatAbsIndex, NSWIndex, augment_complement
 
@@ -209,3 +210,89 @@ class TestBatch:
             assert res.selected == list(batch.selected[b])
             assert res.p_hat.shape == h.shape
             assert np.isfinite(res.final_error)
+
+    def test_unbatch_full_trace_fields(self, workload, index):
+        """unbatch() must reproduce every per-lane trace field of a
+        standalone fused run — n_scored, overflow_count, iter_seconds
+        length, and the shared-ledger default."""
+        Q, h, n = workload
+        B, T = 3, 8
+        cfg = MWEMConfig(T=T, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+        batch = run_mwem_batch(Q, h, cfg, keys, index=index)
+        results = batch.unbatch()
+        single = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(2), index=index)
+        assert results[2].selected == single.selected
+        assert results[2].n_scored == single.n_scored
+        assert results[2].overflow_count == single.overflow_count
+        np.testing.assert_allclose(np.asarray(results[2].p_hat),
+                                   np.asarray(single.p_hat), atol=1e-6)
+        for res in results:
+            assert len(res.iter_seconds) == T
+            assert res.ledger is batch.ledger  # shared per-run ledger
+        # amortized batch wall-clock, not per-lane throughput
+        assert sum(results[0].iter_seconds) == pytest.approx(
+            batch.total_seconds, rel=1e-9)
+
+
+class TestBatchLedgerContract:
+    """DESIGN.md §2 'Batched replication': the result ledger is per *run*;
+    releasing B replicas composes B× the budget — the caller's contract,
+    asserted here, and discharged by the per-lane `ledgers` plumbing."""
+
+    def test_per_run_ledger_equals_single_run(self, workload, index):
+        Q, h, n = workload
+        cfg = MWEMConfig(eps=1.0, delta=1e-3, T=10, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(4)])
+        batch = run_mwem_batch(Q, h, cfg, keys, index=index)
+        single = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(0), index=index)
+        # the batch ledger records ONE run's events, not 4×
+        assert batch.ledger.composed() == single.ledger.composed()
+        assert batch.ledger.basic() == single.ledger.basic()
+        assert len(batch.ledger.events) == len(single.ledger.events)
+
+    def test_b_replica_composition_is_b_times(self, workload, index):
+        """Charging one consumer ledger for all B lanes composes exactly
+        B× the per-run event multiset (B× under basic composition; the
+        √B-ish advanced-composition total matches an explicit preview)."""
+        Q, h, n = workload
+        B = 3
+        cfg = MWEMConfig(eps=1.0, delta=1e-3, T=10, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+        consumer = PrivacyLedger()
+        batch = run_mwem_batch(Q, h, cfg, keys, index=index,
+                               ledgers=[consumer] * B)
+        per_run = batch.ledger
+        assert len(consumer.events) == B * len(per_run.events)
+        eps_b, delta_b = consumer.basic()
+        eps_1, delta_1 = per_run.basic()
+        assert eps_b == pytest.approx(B * eps_1, rel=1e-12)
+        assert delta_b == pytest.approx(B * delta_1, rel=1e-12)
+        # advanced composition of the B× multiset, cross-checked via preview
+        expected = PrivacyLedger().preview(
+            list(per_run.events) * B,
+            gamma=B * per_run.index_failure_mass,
+            slack=B * per_run.approx_slack)
+        assert consumer.composed() == expected
+
+    def test_per_lane_ledgers_reach_unbatch(self, workload, index):
+        Q, h, n = workload
+        B = 3
+        cfg = MWEMConfig(T=6, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+        lanes = [PrivacyLedger(), None, PrivacyLedger()]
+        batch = run_mwem_batch(Q, h, cfg, keys, index=index, ledgers=lanes)
+        for lane in (lanes[0], lanes[2]):
+            assert lane.composed() == batch.ledger.composed()
+        results = batch.unbatch()
+        assert results[0].ledger is lanes[0]
+        assert results[1].ledger is None  # skipped lane carries no ledger
+        assert results[2].ledger is lanes[2]
+
+    def test_ledgers_length_mismatch_raises(self, workload, index):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=4, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(2)])
+        with pytest.raises(ValueError, match="one entry per lane"):
+            run_mwem_batch(Q, h, cfg, keys, index=index,
+                           ledgers=[PrivacyLedger()])

@@ -1,0 +1,314 @@
+"""Multi-tenant release service: admission, waves, zero-ε answer cache."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MWEMConfig, release_cost, run_mwem_fused
+from repro.core.accountant import PrivacyLedger
+from repro.core.queries import gaussian_histogram, random_binary_queries
+from repro.serve import ReleaseService
+import repro.serve.release_service as rs_mod
+
+
+U, M, N_RECORDS = 64, 128, 300
+
+
+def make_workload():
+    key = jax.random.PRNGKey(0)
+    kh, kq = jax.random.split(key)
+    h = gaussian_histogram(kh, N_RECORDS, U)
+    Q = random_binary_queries(kq, M, U)
+    return Q, np.asarray(h)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return make_workload()
+
+
+def make_service(Q, wave_size=2, T=6, auto_flush=True, **kw):
+    cfg = MWEMConfig(eps=0.5, delta=1e-3, T=T, mode="fast")
+    return ReleaseService(Q, cfg, wave_size=wave_size,
+                          auto_flush=auto_flush, **kw)
+
+
+def add_tenant(svc, h, name, eps_budget=50.0, delta_budget=0.5):
+    return svc.create_session(name, eps_budget=eps_budget,
+                              delta_budget=delta_budget, h=h,
+                              n_records=N_RECORDS)
+
+
+class TestAdmission:
+    def test_over_budget_rejected_with_correct_composed_cost(self, workload):
+        """Acceptance (a): rejection reports exactly the composed (ε, δ)
+        execution would have spent."""
+        Q, h = workload
+        svc = make_service(Q)
+        sess = add_tenant(svc, h, "tiny", eps_budget=1e-4, delta_budget=0.5)
+        ticket = svc.submit("tiny")
+        assert ticket.status == "rejected"
+        assert not ticket.decision.admitted
+        assert svc.pending_count() == 0
+        assert len(sess.ledger.events) == 0  # nothing was spent
+        # independent recomputation of the projected cost
+        cfg = svc._group_cfg(N_RECORDS)
+        events, gamma, slack = release_cost(cfg, M, U, index=svc.index)
+        exp_eps, exp_delta = PrivacyLedger().preview(events, gamma, slack)
+        assert ticket.decision.eps_projected == pytest.approx(exp_eps, rel=1e-12)
+        assert ticket.decision.delta_projected == pytest.approx(exp_delta, rel=1e-12)
+        assert ticket.decision.eps_projected > 1e-4  # genuinely over budget
+        assert "exceeds budget" in ticket.decision.reason
+
+    def test_within_budget_admitted_and_charged_as_projected(self, workload):
+        """Admission preview equals what execution actually composes to."""
+        Q, h = workload
+        svc = make_service(Q, auto_flush=False)
+        sess = add_tenant(svc, h, "t0")
+        ticket = svc.submit("t0")
+        assert ticket.status == "queued"
+        svc.flush()
+        assert ticket.status == "done"
+        spent = sess.ledger.composed()
+        assert spent[0] == pytest.approx(ticket.decision.eps_projected, rel=1e-12)
+        assert spent[1] == pytest.approx(ticket.decision.delta_projected, rel=1e-12)
+        assert ticket.release.eps_cost == pytest.approx(spent[0], rel=1e-12)
+
+    def test_queued_reservation_blocks_joint_overspend(self, workload):
+        """Two requests that individually fit but jointly exceed the budget
+        cannot both be admitted."""
+        Q, h = workload
+        svc = make_service(Q, auto_flush=False)
+        cfg = svc._group_cfg(N_RECORDS)
+        one_eps, _ = PrivacyLedger().preview(*release_cost(cfg, M, U,
+                                                           index=svc.index))
+        # two releases compose sublinearly (≈ √2× one release), so a budget
+        # of 1.05× one release admits the first and must reject the second
+        add_tenant(svc, h, "t0", eps_budget=1.05 * one_eps)
+        first = svc.submit("t0")
+        second = svc.submit("t0")
+        assert first.status == "queued"
+        assert second.status == "rejected"
+        svc.flush()
+        assert first.status == "done"
+
+    def test_budget_recovers_nothing_rejection_is_sticky(self, workload):
+        Q, h = workload
+        svc = make_service(Q)
+        sess = add_tenant(svc, h, "t0", eps_budget=1e-4)
+        svc.submit("t0")
+        svc.submit("t0")
+        assert sess.rejected_count == 2
+        assert svc.stats.rejected == 2
+
+
+class TestWaves:
+    def test_n_requests_ceil_n_over_b_dispatches(self, workload, monkeypatch):
+        """Acceptance (b): N requests from distinct tenants → ⌈N/B⌉
+        `run_mwem_batch` dispatches, every wave exactly B lanes."""
+        Q, h = workload
+        calls = []
+        orig = rs_mod.run_mwem_batch
+
+        def counting(Qm, hs, cfg, keys, **kw):
+            calls.append(int(keys.shape[0]))
+            return orig(Qm, hs, cfg, keys, **kw)
+
+        monkeypatch.setattr(rs_mod, "run_mwem_batch", counting)
+        B, N = 2, 5
+        svc = make_service(Q, wave_size=B)
+        for i in range(N):
+            add_tenant(svc, h, f"t{i}")
+            svc.submit(f"t{i}")
+        svc.flush()
+        assert len(calls) == -(-N // B)  # ⌈N/B⌉
+        assert all(c == B for c in calls)  # fixed-size (padded) waves
+        assert svc.stats.dispatches == len(calls)
+        assert svc.stats.released == N
+        assert svc.stats.padded_slots == len(calls) * B - N
+        for i in range(N):
+            sess = svc.session(f"t{i}")
+            assert len(sess.releases) == 1
+            assert np.isfinite(sess.releases[0].final_error)
+
+    def test_wave_lane_matches_single_fused_run(self, workload):
+        """A tenant's released histogram is exactly what a standalone fused
+        run with the same key would produce — wave packing is invisible."""
+        Q, h = workload
+        svc = make_service(Q, wave_size=3, auto_flush=False)
+        for i in range(3):
+            add_tenant(svc, h, f"t{i}")
+            svc.submit(f"t{i}", seed=100 + i)
+        svc.flush()
+        cfg = svc._group_cfg(N_RECORDS)
+        for i in range(3):
+            rel = svc.session(f"t{i}").latest
+            solo = run_mwem_fused(Q, jnp.asarray(h), cfg,
+                                  jax.random.PRNGKey(100 + i), index=svc.index)
+            np.testing.assert_allclose(rel.p_hat, np.asarray(solo.p_hat),
+                                       atol=1e-6)
+
+    def test_padded_wave_single_request(self, workload):
+        Q, h = workload
+        svc = make_service(Q, wave_size=4, auto_flush=False)
+        sess = add_tenant(svc, h, "solo")
+        svc.submit("solo")
+        done = svc.flush()
+        assert [t.status for t in done] == ["done"]
+        assert svc.stats.dispatches == 1
+        assert svc.stats.padded_slots == 3
+        # pad lanes charged nothing anywhere: only this tenant's ledger grew
+        assert len(sess.ledger.events) > 0
+        assert len(sess.releases) == 1
+
+    def test_auto_flush_fires_on_full_wave(self, workload):
+        Q, h = workload
+        svc = make_service(Q, wave_size=2, auto_flush=True)
+        add_tenant(svc, h, "a")
+        add_tenant(svc, h, "b")
+        t1 = svc.submit("a")
+        assert t1.status == "queued"
+        t2 = svc.submit("b")  # fills the wave → dispatch
+        assert t1.status == "done" and t2.status == "done"
+        assert svc.stats.dispatches == 1
+
+    def test_same_tenant_multi_lane_costs_sum_to_spend(self, workload):
+        """Per-release marginal costs must sum to the tenant's total spend
+        even when both lanes land in ONE wave (a naive before/after ledger
+        diff double-counts)."""
+        Q, h = workload
+        svc = make_service(Q, wave_size=2, auto_flush=False)
+        sess = add_tenant(svc, h, "t0")
+        svc.submit("t0")
+        svc.submit("t0")
+        svc.flush()
+        assert svc.stats.dispatches == 1  # both lanes in the same wave
+        total = sess.spent()[0]
+        costs = [r.eps_cost for r in sess.releases]
+        assert sum(costs) == pytest.approx(total, rel=1e-9)
+        # second lane's marginal cost is smaller (advanced composition)
+        assert costs[1] < costs[0]
+
+    def test_decision_cost_is_marginal_under_reservations(self, workload):
+        """With a request already queued, the next decision's eps_cost
+        reports only that request's marginal share, not queue + request."""
+        Q, h = workload
+        svc = make_service(Q, auto_flush=False)
+        add_tenant(svc, h, "t0")
+        first = svc.submit("t0")
+        second = svc.submit("t0")
+        assert second.decision.eps_cost < first.decision.eps_cost
+        assert second.decision.eps_projected == pytest.approx(
+            first.decision.eps_projected + second.decision.eps_cost, rel=1e-9)
+        svc.flush()
+
+    def test_mixed_dataset_sizes_batch_separately(self, workload):
+        Q, h = workload
+        svc = make_service(Q, wave_size=2, T=4, auto_flush=False)
+        add_tenant(svc, h, "small")
+        svc.create_session("big", eps_budget=50.0, delta_budget=0.5,
+                           h=h, n_records=10 * N_RECORDS)
+        svc.submit("small")
+        svc.submit("big")
+        svc.flush()
+        assert svc.stats.dispatches == 2  # n_records is a compile-time static
+        assert svc.session("small").latest is not None
+        assert svc.session("big").latest is not None
+
+
+class TestAnswerCache:
+    def test_repeat_query_cached_bitwise_zero_ledger_delta(self, workload):
+        """Acceptance (c): a repeated query is answered from the cache,
+        bitwise-equal to the fresh answer, with zero ledger delta."""
+        Q, h = workload
+        svc = make_service(Q, wave_size=2)
+        sess = add_tenant(svc, h, "t0")
+        svc.submit("t0")
+        svc.flush()
+        q = np.asarray(Q)[7]
+        events_before = list(sess.ledger.events)
+        gamma_before = sess.ledger.index_failure_mass
+        fresh = svc.answer("t0", q)
+        again = svc.answer("t0", q)
+        assert not fresh.cached and again.cached
+        assert again.value == fresh.value  # bitwise: the stored float
+        assert sess.ledger.events == events_before  # zero-ε read path
+        assert sess.ledger.index_failure_mass == gamma_before
+        assert sess.cache.hits == 1 and sess.cache.misses == 1
+        # and the answer is the post-processed histogram's, as promised
+        assert fresh.value == pytest.approx(
+            float(q @ np.asarray(sess.latest.p_hat)), abs=1e-6)
+
+    def test_derived_combination_from_cache_only(self, workload):
+        Q, h = workload
+        svc = make_service(Q, wave_size=2)
+        add_tenant(svc, h, "t0")
+        svc.submit("t0")
+        svc.flush()
+        Qnp = np.asarray(Q)
+        a1 = svc.answer("t0", Qnp[0])
+        a2 = svc.answer("t0", Qnp[1])
+        combo = svc.answer_derived("t0", {a1.fingerprint: 2.0,
+                                          a2.fingerprint: -1.0})
+        assert combo is not None
+        assert combo.value == pytest.approx(2 * a1.value - a2.value, abs=1e-9)
+        # missing component → not derivable, no histogram touch
+        assert svc.answer_derived("t0", {"deadbeef": 1.0}) is None
+
+    def test_answer_before_any_release_raises(self, workload):
+        Q, h = workload
+        svc = make_service(Q)
+        add_tenant(svc, h, "t0")
+        with pytest.raises(LookupError):
+            svc.answer("t0", np.asarray(Q)[0])
+
+    def test_tenant_isolation(self, workload):
+        """Different tenants' caches and releases never alias."""
+        Q, h = workload
+        h2 = np.roll(h, 7)
+        svc = make_service(Q, wave_size=2, auto_flush=False)
+        add_tenant(svc, h, "a")
+        svc.create_session("b", eps_budget=50.0, delta_budget=0.5, h=h2,
+                           n_records=N_RECORDS)
+        svc.submit("a", seed=1)
+        svc.submit("b", seed=2)
+        svc.flush()
+        q = np.asarray(Q)[3]
+        ans_a = svc.answer("a", q)
+        ans_b = svc.answer("b", q)
+        assert not ans_b.cached  # b's cache is its own
+        assert svc.session("a").latest.release_id != svc.session("b").latest.release_id
+
+
+class TestSessions:
+    def test_from_tokens(self, workload):
+        Q, _ = workload
+        svc = make_service(Q)
+        rng = np.random.default_rng(0)
+        tokens = rng.integers(0, U, size=2000)
+        sess = svc.create_session("tok", eps_budget=50.0, delta_budget=0.5,
+                                  tokens=tokens)
+        assert sess.n_records == 2000
+        assert sess.h.shape == (U,)
+        assert sess.h.sum() == pytest.approx(1.0, abs=1e-5)
+
+    def test_remaining_tracks_budget(self, workload):
+        Q, h = workload
+        svc = make_service(Q, wave_size=2)
+        sess = add_tenant(svc, h, "t0", eps_budget=10.0)
+        eps_rem0, _ = sess.remaining()
+        assert eps_rem0 == pytest.approx(10.0)
+        svc.submit("t0")
+        svc.flush()
+        eps_rem1, _ = sess.remaining()
+        assert eps_rem1 < eps_rem0
+        assert eps_rem1 == pytest.approx(10.0 - sess.spent()[0], rel=1e-12)
+
+    def test_duplicate_session_rejected(self, workload):
+        Q, h = workload
+        svc = make_service(Q)
+        add_tenant(svc, h, "t0")
+        with pytest.raises(ValueError, match="already exists"):
+            add_tenant(svc, h, "t0")
