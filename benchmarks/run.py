@@ -19,9 +19,10 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from benchmarks import (bench_error_parity, bench_linear_queries,
-                            bench_lp, bench_margin, bench_n_ablation,
-                            bench_release_service, roofline_report)
+    from benchmarks import (bench_distributed, bench_error_parity,
+                            bench_linear_queries, bench_lp, bench_margin,
+                            bench_n_ablation, bench_release_service,
+                            roofline_report)
     from benchmarks.common import print_rows
 
     benches = {
@@ -31,6 +32,7 @@ def main() -> None:
         "margin": bench_margin,
         "n_ablation": bench_n_ablation,
         "release_service": bench_release_service,
+        "distributed": bench_distributed,
         "roofline": roofline_report,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)

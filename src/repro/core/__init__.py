@@ -25,6 +25,7 @@ from repro.core.mwem import (
     run_mwem_batch,
     run_mwem_fused,
 )
+from repro.core.distributed import run_mwem_sharded, run_mwem_sharded_batch
 from repro.core.lp_scalar import ScalarLPConfig, solve_scalar_lp
 from repro.core.lp_dual import DualLPConfig, solve_constraint_private_lp
 
@@ -51,6 +52,8 @@ __all__ = [
     "run_mwem",
     "run_mwem_batch",
     "run_mwem_fused",
+    "run_mwem_sharded",
+    "run_mwem_sharded_batch",
     "mwem_iteration_counts",
     "ScalarLPConfig",
     "solve_scalar_lp",

@@ -70,6 +70,13 @@ class PrivacyLedger:
         self.index_failure_mass += gamma
         self.approx_slack += slack
 
+    def bundle(self) -> tuple[list, float, float]:
+        """Snapshot of the ledger's raw cost state ``(events, γ, Σ2c)`` —
+        the triple `record_events`/`preview` consume, so a bundle taken
+        here can be replayed into a scratch ledger (marginal-cost
+        accounting) or held as a reservation (admission control)."""
+        return list(self.events), self.index_failure_mass, self.approx_slack
+
     def composed(self, tight: bool = False) -> tuple[float, float]:
         """Total (ε, δ) over all events, plus index failure mass and slack.
 

@@ -60,6 +60,47 @@ def _complement_shift(sorted_s: jax.Array, u: jax.Array) -> jax.Array:
     return u + shift.astype(u.dtype)
 
 
+def draw_distinct_tail(
+    key: jax.Array,
+    topk_idx: jax.Array,
+    n: int,
+    tail_cap: int,
+    C: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Draw ``C`` *distinct* uniform indices from ``[n] \\ S`` into a
+    ``tail_cap``-sized buffer (Alg. 4 l.7, fixed-shape form).
+
+    ``tail_cap`` i.i.d. complement-space draws are mapped around the sorted
+    top-k set by `_complement_shift`; duplicates are rejected by a
+    sort-and-mask pass and the first ``C`` uniques kept — by exchangeability
+    a uniform C-subset. A with-replacement draw would hand some elements two
+    truncated Gumbels and bias the max upward by O(C²/n), which is why every
+    tail consumer (single-device LazyEM, the sharded driver) goes through
+    this one helper.
+
+    Entries of ``topk_idx`` that are ≥ n act as sentinels that exclude
+    nothing below ``n`` (callers with padded/invalid top-k slots map them to
+    ``n + j`` with distinct ``j`` so the shift stays monotone).
+
+    Returns ``(tail_idx, active, overflow)``: the buffer of candidate
+    indices, the mask of slots that are live (first-occurrence uniques
+    within the first C), and the overflow flag (``C`` exceeded the buffer
+    or the unique stream ran dry — the caller must redo the step exactly).
+    """
+    k = topk_idx.shape[0]
+    u = jax.random.randint(key, (tail_cap,), 0, max(n - k, 1))
+    sorted_s = jnp.sort(topk_idx.astype(jnp.int32))
+    tail_idx = _complement_shift(sorted_s, u)
+    order = jnp.argsort(u)  # stable → first occurrence keeps earliest slot
+    su = u[order]
+    dup_sorted = jnp.concatenate([jnp.array([False]), su[1:] == su[:-1]])
+    first_occ = ~dup_sorted[jnp.argsort(order)]
+    n_unique_before = jnp.cumsum(first_occ)
+    active = first_occ & (n_unique_before <= C)
+    overflow = (C > tail_cap) | (jnp.sum(active) < C)
+    return tail_idx, active, overflow
+
+
 def lazy_em_from_topk(
     key: jax.Array,
     topk_idx: jax.Array,
@@ -99,21 +140,10 @@ def lazy_em_from_topk(
     p = tail_prob(B)
     C = jax.random.binomial(key_c, n - k, p).astype(jnp.int32)
 
-    # Step 4 (l.7): C *distinct* uniform indices from [n] \ S. We draw
-    # tail_cap i.i.d. indices and keep the first C unique ones — by
-    # exchangeability the first-C-distinct set of an i.i.d. uniform stream is
-    # a uniform C-subset. If the stream yields fewer than C uniques (or
-    # C > tail_cap) we flag overflow and the caller redoes the step exactly.
-    u = jax.random.randint(key_t, (tail_cap,), 0, max(n - k, 1))
-    sorted_s = jnp.sort(topk_idx.astype(jnp.int32))
-    tail_idx = _complement_shift(sorted_s, u)
-    order = jnp.argsort(u)  # stable → first occurrence keeps earliest slot
-    su = u[order]
-    dup_sorted = jnp.concatenate([jnp.array([False]), su[1:] == su[:-1]])
-    first_occ = ~dup_sorted[jnp.argsort(order)]
-    n_unique_before = jnp.cumsum(first_occ)
-    active = first_occ & (n_unique_before <= C)
-    overflow = (C > tail_cap) | (jnp.sum(active) < C)
+    # Step 4 (l.7): C *distinct* uniform indices from [n] \ S (see
+    # `draw_distinct_tail` for the dedup/overflow contract).
+    tail_idx, active, overflow = draw_distinct_tail(key_t, topk_idx, n,
+                                                    tail_cap, C)
 
     # Step 5 (l.8): truncated Gumbels for the tail.
     g_t = truncated_gumbel(key_g, (tail_cap,), B)

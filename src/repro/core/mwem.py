@@ -15,6 +15,11 @@ Two drivers execute the same iteration (DESIGN.md §2):
 * **host** (`driver="host"`): the original Python loop, one dispatch per
   step. Retained for indices whose search cannot be traced into a scan
   (e.g. NSW beam search) and as the reference for equivalence tests.
+* **sharded** (`repro.core.distributed.run_mwem_sharded`, DESIGN.md §4):
+  the same scan shard-mapped over a device mesh — Q rows over the data
+  axes, the weight state over "model", per-shard IVF selection. Selected
+  automatically when more than one device is visible and the workload can
+  shard.
 
 `run_mwem` routes between them (`MWEMConfig.driver`); `run_mwem_batch` vmaps
 the fused scan over a batch of seeds (and optionally histograms) for
@@ -66,7 +71,7 @@ class MWEMConfig:
     T: int = 100
     update_rule: str = "hardt"   # "paper" | "signed" | "hardt"
     mode: str = "fast"           # "exact" | "fast"
-    driver: str = "auto"         # "auto" | "fused" | "host"
+    driver: str = "auto"         # "auto" | "fused" | "host" | "sharded"
     k: Optional[int] = None      # top-k size; default ceil(√m)
     tail_cap: Optional[int] = None
     margin_slack: float = 0.0    # c ≥ 0 → Alg. 6 privacy-preserving approx mode
@@ -267,6 +272,24 @@ def release_cost(cfg: MWEMConfig, m: int, U: int, index=None
     return list(tmp.events), tmp.index_failure_mass, tmp.approx_slack
 
 
+def split_chain(key: jax.Array, T: int):
+    """Pre-split the per-iteration key pairs by walking the host loop's
+    exact chain (``key → key, k_sel, k_meas``) as one key-only scan.
+
+    This is THE key chain: the host loop consumes it step by step, the
+    fused and sharded drivers pre-split it through this helper — one point
+    of truth, so cross-driver bitwise selection parity cannot drift.
+    Returns ``(sel_keys, meas_keys)``, each (T,)-stacked.
+    """
+
+    def body(carry_key, _):
+        carry_key, k_sel, k_meas = jax.random.split(carry_key, 3)
+        return carry_key, (k_sel, k_meas)
+
+    _, keys = jax.lax.scan(body, key, None, length=T)
+    return keys
+
+
 # ---------------------------------------------------------------------------
 # Fused on-device driver (DESIGN.md §2)
 # ---------------------------------------------------------------------------
@@ -292,12 +315,7 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
     become O(tail_cap)/O(m) lookups instead of re-touching Q.
     """
     m = Qm.shape[0]
-
-    def split_body(carry_key, _):
-        carry_key, k_sel, k_meas = jax.random.split(carry_key, 3)
-        return carry_key, (k_sel, k_meas)
-
-    _, (sel_keys, meas_keys) = jax.lax.scan(split_body, key, None, length=T)
+    sel_keys, meas_keys = split_chain(key, T)
 
     def body(state, xs):
         t, k_sel, k_meas = xs
@@ -645,11 +663,51 @@ def _run_mwem_host(
     return res
 
 
-def _resolve_driver(cfg: MWEMConfig, index) -> str:
-    if cfg.driver not in ("auto", "fused", "host"):
+def _sharded_fits(index, mesh, shape) -> bool:
+    """Whether (m, U) actually divides over the mesh (or the default driver
+    mesh) and the index's shard count matches — auto-routing must not pick
+    a driver that will refuse the workload."""
+    if shape is None:
+        return True  # no workload in hand (introspection) — assume fits
+    m, U = shape
+    sharded_index = getattr(index, "supports_sharded", False)
+    if mesh is not None:
+        from repro.core.distributed import _data_shards
+
+        n_data = _data_shards(mesh)[1]
+        n_model = mesh.shape["model"]
+    else:
+        # default make_driver_mesh(): all devices on "data", model degree 1
+        n_data, n_model = jax.device_count(), 1
+    if sharded_index and index.n_shards != n_data:
+        return False
+    return m % n_data == 0 and U % n_model == 0
+
+
+def _resolve_driver(cfg: MWEMConfig, index, mesh=None, shape=None) -> str:
+    if cfg.driver not in ("auto", "fused", "host", "sharded"):
         raise ValueError(f"unknown driver {cfg.driver!r}")
     if cfg.driver != "auto":
         return cfg.driver
+    # the sharded driver kicks in when there is real device parallelism (or
+    # the caller handed us a mesh, or the index only works sharded) and the
+    # workload can shard: exact mode always can; fast mode needs a
+    # per-shard index structure
+    sharded_ok = (cfg.mode == "exact"
+                  or getattr(index, "supports_sharded", False))
+    sharded_only = (getattr(index, "supports_sharded", False)
+                    and not getattr(index, "supports_in_graph", False))
+    want = mesh is not None or jax.device_count() > 1 or sharded_only
+    if sharded_ok and want and _sharded_fits(index, mesh, shape):
+        return "sharded"
+    if sharded_only:
+        # a per-shard-only index has no host/fused query path — surface the
+        # mismatch instead of crashing mid-run in the host loop
+        raise ValueError(
+            f"{type(index).__name__} only runs on the sharded driver, but "
+            "the workload/mesh/shard counts do not line up "
+            "(m must divide over the data shards, U over the model shards, "
+            "and index.n_shards must equal the mesh's data extent)")
     if cfg.mode == "exact":
         return "fused"
     if index is not None and getattr(index, "supports_in_graph", False):
@@ -664,21 +722,34 @@ def run_mwem(
     key: jax.Array,
     index=None,
     ledger: Optional[PrivacyLedger] = None,
+    mesh=None,
 ) -> MWEMResult:
     """Run (Fast-)MWEM for ``cfg.T`` iterations.
 
     Args:
       Q: (m, U) query matrix with entries in [0, 1].
       h: (U,) true normalized histogram.
-      cfg: engine configuration. ``mode="fast"`` requires ``index``.
-        ``driver="auto"`` fuses the loop on-device whenever the index's
-        query is traceable (all flat/IVF/LSH indices); NSW and other
-        host-only indices fall back to the Python loop.
+      cfg: engine configuration. ``mode="fast"`` requires ``index``
+        (``driver="sharded"`` builds a per-shard one when ``index=None``).
+        ``driver="auto"`` shards the run across devices when more than one
+        is visible (or a ``mesh`` is passed) and the index has a per-shard
+        structure (`ShardedIVFIndex`); otherwise it fuses the loop
+        on-device whenever the index's query is traceable (all
+        flat/IVF/LSH indices); NSW and other host-only indices fall back
+        to the Python loop.
       key: PRNG key.
       index: a k-MIPS index over the complement-augmented queries
         (see repro.mips); must expose ``query(v, k) -> (aug_idx, raw_scores)``
         and attributes ``approx_margin`` (c ≥ 0) and ``failure_mass`` (γ).
+      mesh: device mesh for the sharded driver (forces ``driver="auto"``
+        routing onto it; ignored by the fused/host drivers).
     """
-    if _resolve_driver(cfg, index) == "fused":
+    driver = _resolve_driver(cfg, index, mesh=mesh, shape=Q.shape)
+    if driver == "sharded":
+        from repro.core.distributed import run_mwem_sharded
+
+        return run_mwem_sharded(Q, h, cfg, key, mesh=mesh, index=index,
+                                ledger=ledger)
+    if driver == "fused":
         return run_mwem_fused(Q, h, cfg, key, index=index, ledger=ledger)
     return _run_mwem_host(Q, h, cfg, key, index=index, ledger=ledger)

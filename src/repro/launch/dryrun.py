@@ -100,11 +100,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
 
 def run_paper_cell(multi_pod: bool, out_dir: str, force: bool = False,
-                   mode: str = "lazy") -> dict:
-    """Distributed Fast-MWEM iteration — the paper-representative cell.
+                   mode: str = "lazy", scan_steps: int = 1) -> dict:
+    """Distributed Fast-MWEM cell — the paper-representative lowering.
 
+    The cell is `make_mwem_scan`, i.e. the *same* shard-mapped scan
+    `run_mwem_sharded` dispatches (specs cannot drift from execution).
     ``mode="exhaustive"`` lowers the Θ(m) baseline; ``"lazy"`` the paper's
-    Θ(√m) LazyEM — the pair is the §Perf comparison.
+    Θ(√m) LazyEM — the pair is the §Perf comparison. ``scan_steps`` is the
+    scan's T (1 keeps the recorded numbers per-iteration comparable).
     """
     import jax
 
@@ -115,15 +118,19 @@ def run_paper_cell(multi_pod: bool, out_dir: str, force: bool = False,
 
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
     os.makedirs(out_dir, exist_ok=True)
+    # T is part of the cell identity: a T=8 scan must not alias (or be
+    # served from) the per-iteration T=1 record
+    cell_tag = "iteration" if scan_steps == 1 else f"scan{scan_steps}"
     out_path = os.path.join(out_dir,
-                            f"fastmwem-dist-{mode}__iteration__{mesh_tag}.json")
+                            f"fastmwem-dist-{mode}__{cell_tag}__{mesh_tag}.json")
     if os.path.exists(out_path) and not force:
         with open(out_path) as f:
             return json.load(f)
 
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
-    fn, args, meta = build_distributed_mwem_cell(mesh, multi_pod, mode=mode)
+    fn, args, meta = build_distributed_mwem_cell(mesh, multi_pod, mode=mode,
+                                                 T=scan_steps)
     with mesh:
         lowered = jax.jit(fn).lower(*args)
         compiled = lowered.compile()
@@ -157,6 +164,9 @@ def main():
     ap.add_argument("--shape")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--paper-cell", action="store_true")
+    ap.add_argument("--scan-steps", type=int, default=1,
+                    help="T of the paper cell's fused scan (per-iteration "
+                         "numbers at 1)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
@@ -168,7 +178,8 @@ def main():
     if args.paper_cell:
         for mp in meshes:
             for mode in ("exhaustive", "lazy"):
-                rec = run_paper_cell(mp, args.out, args.force, mode=mode)
+                rec = run_paper_cell(mp, args.out, args.force, mode=mode,
+                                     scan_steps=args.scan_steps)
                 r = rec["roofline"]
                 print(f"fastmwem-dist[{mode}] × "
                       f"{'2x16x16' if mp else '16x16'}: "

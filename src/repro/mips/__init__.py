@@ -9,7 +9,7 @@ pointer chasing — see DESIGN.md §3 for the hardware adaptation rationale.
 
 from repro.mips.base import MIPSIndex, augment_complement
 from repro.mips.flat import FlatIndex, FlatAbsIndex
-from repro.mips.ivf import IVFIndex
+from repro.mips.ivf import IVFIndex, ShardedIVFIndex
 from repro.mips.lsh import LSHIndex
 from repro.mips.nsw import NSWIndex
 from repro.mips.transform import mips_to_knn_keys, mips_to_knn_query
@@ -37,6 +37,7 @@ __all__ = [
     "FlatIndex",
     "FlatAbsIndex",
     "IVFIndex",
+    "ShardedIVFIndex",
     "LSHIndex",
     "NSWIndex",
     "mips_to_knn_keys",

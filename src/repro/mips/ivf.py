@@ -118,3 +118,56 @@ class IVFIndex:
 
     def query_cost(self, k: int) -> int:
         return self.nlist + self.nprobe * self.cap
+
+
+class ShardedIVFIndex:
+    """Per-data-shard IVF structure for the sharded MWEM driver.
+
+    The vector set is split row-wise into ``n_shards`` contiguous chunks —
+    the exact layout `run_mwem_sharded` shards Q over the mesh's data axes —
+    and an independent IVF (k-means centroids + balanced padded cell table)
+    is built per chunk, offline in numpy. Cell ids are *local* row ids in
+    ``[0, n_loc)``; shard ``s``'s global rows are ``s·n_loc + local``. The
+    stacked ``cents (n_shards, nlist, dim)`` / ``cells (n_shards, nlist,
+    cap)`` arrays device_put directly onto the mesh (centroid columns
+    model-sharded, cell tables replicated over "model") — the structure is
+    never gathered.
+
+    Not a host-query index: searches only make sense inside the shard_map
+    body (``supports_sharded``), where each shard probes its own cells and
+    candidates meet at the all-gather.
+    """
+
+    supports_in_graph = False
+    supports_sharded = True
+
+    def __init__(self, vectors, n_shards: int, nlist: int | None = None,
+                 nprobe: int | None = None, cap_factor: float = 2.0,
+                 train_iters: int = 10, seed: int = 0,
+                 approx_margin: float = 0.0,
+                 failure_mass: float | None = None):
+        V = np.asarray(vectors, np.float32)
+        self.n, self.dim = V.shape
+        if self.n % n_shards:
+            raise ValueError(f"n={self.n} must divide over {n_shards} shards")
+        self.n_shards = int(n_shards)
+        self.n_loc = self.n // self.n_shards
+        self.nlist = min(nlist or max(int(2 * math.sqrt(self.n_loc)), 8),
+                         self.n_loc)
+        self.nprobe = nprobe or max(1, min(self.nlist // 4, 10))
+        self.cap = max(4, math.ceil(cap_factor * self.n_loc / self.nlist))
+        rng = np.random.default_rng(seed)
+        cents = np.empty((self.n_shards, self.nlist, self.dim), np.float32)
+        cells = np.empty((self.n_shards, self.nlist, self.cap), np.int32)
+        for s in range(self.n_shards):
+            Vs = V[s * self.n_loc:(s + 1) * self.n_loc]
+            cents[s] = _kmeans(Vs, self.nlist, train_iters, rng)
+            cells[s] = _balanced_assign(Vs, cents[s], self.cap)
+        self.cents = jnp.asarray(cents)
+        self.cells = jnp.asarray(cells)
+        self.approx_margin = approx_margin
+        self.failure_mass = (1.0 / self.n) if failure_mass is None else failure_mass
+
+    def query_cost(self, k: int) -> int:
+        """Scored rows per iteration across all shards (excluding the tail)."""
+        return self.n_shards * (self.nlist + self.nprobe * self.cap)

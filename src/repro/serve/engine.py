@@ -14,6 +14,7 @@ this module adds the request bookkeeping around it.
 
 from __future__ import annotations
 
+import contextlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, List, Optional
@@ -34,16 +35,22 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, batch_size: int, max_len: int,
-                 seed: int = 0):
+                 seed: int = 0, mesh=None):
         self.model = model
         self.params = params
         self.batch_size = batch_size
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
+        # waves dispatch under the mesh context when one is given, so
+        # models whose shardings name mesh axes lower onto it
+        self.mesh = mesh
         self._decode = jax.jit(model.decode_step)
         # slot indices currently free inside the active wave (refillable)
         self.free_slots: List[int] = []
         self.refill_count = 0  # requests served via mid-wave slot reuse
+
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
     def _sample(self, logits: jax.Array, temperatures: np.ndarray) -> jax.Array:
         """Per-request sampling: greedy rows (temp ≤ 0) and temperature rows
@@ -88,8 +95,10 @@ class ServeEngine:
         so the batch axis is axis 1 on every leaf.
         """
         tokens = self._left_pad([req.prompt], pos)
-        logits1, cache1 = self.model.prefill(self.params, {"tokens": tokens},
-                                             max_len=self.max_len)
+        with self._mesh_ctx():
+            logits1, cache1 = self.model.prefill(self.params,
+                                                 {"tokens": tokens},
+                                                 max_len=self.max_len)
         cache = jax.tree_util.tree_map(
             lambda c, c1: c.at[:, slot].set(c1[:, 0]), cache, cache1)
         first = self._sample(logits1, np.array([req.temperature], np.float32))
@@ -99,8 +108,9 @@ class ServeEngine:
     def _run_wave(self, wave: List[Request], queue: Optional[Deque[Request]] = None):
         prompt_len = max(len(r.prompt) for r in wave)
         batch = {"tokens": self._left_pad([r.prompt for r in wave], prompt_len)}
-        logits, cache = self.model.prefill(self.params, batch,
-                                           max_len=self.max_len)
+        with self._mesh_ctx():
+            logits, cache = self.model.prefill(self.params, batch,
+                                               max_len=self.max_len)
         slots: List[Optional[Request]] = list(wave)
         temperatures = np.array([r.temperature for r in wave], np.float32)
         next_tok = self._sample(logits, temperatures)
@@ -133,9 +143,10 @@ class ServeEngine:
                     if r is not None:
                         r.done = True
                 break
-            logits, cache = self._decode(self.params, cache,
-                                         next_tok[:, None].astype(jnp.int32),
-                                         jnp.int32(pos))
+            with self._mesh_ctx():
+                logits, cache = self._decode(
+                    self.params, cache,
+                    next_tok[:, None].astype(jnp.int32), jnp.int32(pos))
             next_tok = self._sample(logits, temperatures)
             pos += 1
             for i, r in enumerate(slots):

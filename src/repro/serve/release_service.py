@@ -37,8 +37,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accountant import PrivacyLedger
+from repro.core.distributed import _data_shards, run_mwem_sharded_batch
 from repro.core.mwem import MWEMConfig, release_cost, run_mwem_batch
-from repro.mips import FlatAbsIndex, IVFIndex, LSHIndex, augment_complement
+from repro.mips import (FlatAbsIndex, IVFIndex, LSHIndex, ShardedIVFIndex,
+                        augment_complement)
 from repro.serve.admission import AdmissionController, AdmissionDecision
 from repro.serve.session import Answer, ReleasedHistogram, TenantSession
 
@@ -79,16 +81,26 @@ class ReleaseService:
     one `run_mwem_batch` dispatch of exactly ``wave_size`` lanes; requests
     from datasets of different sizes (``n_records`` is a compile-time
     static through the noise scales) batch in separate per-size groups.
+
+    Passing a ``mesh`` puts the service on a device mesh: the index becomes
+    a per-shard `ShardedIVFIndex` and waves drain through
+    `run_mwem_sharded_batch` — one mesh-wide scan dispatch per lane, the
+    compiled executable shared across lanes, the same per-lane ledger
+    charging. Admission, sessions, and the answer cache are unchanged.
     """
 
     def __init__(self, Q, cfg: MWEMConfig, wave_size: int = 8,
                  index_kind: str = "flat", seed: int = 0,
-                 tight_composition: bool = False, auto_flush: bool = True):
+                 tight_composition: bool = False, auto_flush: bool = True,
+                 mesh=None):
         self.Q = jnp.asarray(Q, jnp.float32)
         self.m, self.U = self.Q.shape
         self.cfg = cfg
         self.wave_size = int(wave_size)
         self.auto_flush = auto_flush
+        # a mesh routes waves through the sharded driver (one mesh-wide
+        # scan dispatch per lane) instead of the vmapped fused batch
+        self.mesh = mesh
         self.admission = AdmissionController(tight=tight_composition)
         self.sessions: Dict[str, TenantSession] = {}
         self.stats = ServiceStats()
@@ -97,7 +109,13 @@ class ReleaseService:
         self._next_release = 0
         self._next_seed = seed
         if cfg.mode == "fast":
-            if index_kind == "flat":
+            if mesh is not None:
+                # the sharded driver needs the per-shard structure, whatever
+                # single-device kind was asked for
+                self.index = ShardedIVFIndex(self.Q,
+                                             n_shards=_data_shards(mesh)[1],
+                                             seed=seed)
+            elif index_kind == "flat":
                 self.index = FlatAbsIndex(self.Q)
             elif index_kind == "ivf":
                 self.index = IVFIndex(augment_complement(np.asarray(self.Q)),
@@ -211,11 +229,11 @@ class ReleaseService:
         del queue[:self.wave_size]
         if not queue:
             del self._pending[n_records]
-        B = self.wave_size
-        n_pad = B - len(wave)
+        # sharded lanes dispatch sequentially (no vmap), so padding a short
+        # wave would burn a whole extra mesh run per pad slot — skip it
+        n_pad = 0 if self.mesh is not None else self.wave_size - len(wave)
         self.stats.padded_slots += n_pad
-        pad = [wave[0]] * n_pad
-        lanes = wave + pad
+        lanes = wave + [wave[0]] * n_pad
         cfg = self._group_cfg(n_records)
         h_stack = jnp.asarray(
             np.stack([self.sessions[t.tenant_id].h for t in lanes]))
@@ -224,12 +242,15 @@ class ReleaseService:
             self.sessions[t.tenant_id].ledger for t in wave
         ] + [None] * n_pad
         # pre-dispatch ledger snapshots, for per-ticket marginal costs
-        snaps = {t.tenant_id: (list(self.sessions[t.tenant_id].ledger.events),
-                               self.sessions[t.tenant_id].ledger.index_failure_mass,
-                               self.sessions[t.tenant_id].ledger.approx_slack)
+        snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
                  for t in wave}
-        result = run_mwem_batch(self.Q, h_stack, cfg, keys,
-                                index=self.index, ledgers=ledgers)
+        if self.mesh is not None:
+            result = run_mwem_sharded_batch(self.Q, h_stack, cfg, keys,
+                                            mesh=self.mesh, index=self.index,
+                                            ledgers=ledgers)
+        else:
+            result = run_mwem_batch(self.Q, h_stack, cfg, keys,
+                                    index=self.index, ledgers=ledgers)
         self.stats.dispatches += 1
         p_hat = np.asarray(result.p_hat)
         per_run = result.ledger  # one lane's event bundle

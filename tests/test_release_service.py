@@ -218,6 +218,64 @@ class TestWaves:
         assert svc.session("big").latest is not None
 
 
+class TestMeshWaves:
+    """Waves on a device mesh route through the sharded driver. A 1-device
+    mesh exercises the full routing/charging path inside the normal suite;
+    the multi-device variant lives in tests/test_distributed.py."""
+
+    def test_wave_parity_and_charging_on_mesh(self, workload):
+        from repro.core import run_mwem_sharded
+        from repro.core.accountant import PrivacyLedger
+        from repro.launch.mesh import make_driver_mesh
+        from repro.mips import ShardedIVFIndex
+
+        Q, h = workload
+        mesh = make_driver_mesh(1)
+        svc = make_service(Q, wave_size=2, auto_flush=False)
+        svc_mesh = ReleaseService(Q, svc.cfg, wave_size=2, auto_flush=False,
+                                  mesh=mesh)
+        assert isinstance(svc_mesh.index, ShardedIVFIndex)
+        sess = add_tenant(svc_mesh, h, "t0")
+        ticket = svc_mesh.submit("t0", seed=7)
+        assert ticket.status == "queued"
+        done = svc_mesh.flush()
+        assert [t.status for t in done] == ["done"]
+        # short wave, no pad lanes: sharded lanes dispatch one by one
+        assert svc_mesh.stats.padded_slots == 0
+        assert svc_mesh.stats.dispatches == 1
+        # the released histogram is exactly a standalone sharded run
+        cfg = svc_mesh._group_cfg(N_RECORDS)
+        solo = run_mwem_sharded(Q, jnp.asarray(h), cfg,
+                                jax.random.PRNGKey(7), mesh=mesh,
+                                index=svc_mesh.index)
+        np.testing.assert_allclose(np.asarray(sess.latest.p_hat),
+                                   np.asarray(solo.p_hat), atol=1e-6)
+        # admission preview == executed spend, same contract as off-mesh
+        spent = sess.ledger.composed()
+        assert spent[0] == pytest.approx(ticket.decision.eps_projected,
+                                         rel=1e-12)
+        exp = PrivacyLedger().preview(*release_cost(cfg, M, U,
+                                                    index=svc_mesh.index))
+        assert spent == exp
+
+    def test_mesh_answers_are_post_processing(self, workload):
+        from repro.launch.mesh import make_driver_mesh
+
+        Q, h = workload
+        svc = ReleaseService(Q, make_service(Q).cfg, wave_size=2,
+                             auto_flush=False, mesh=make_driver_mesh(1))
+        sess = add_tenant(svc, h, "t0")
+        svc.submit("t0")
+        svc.flush()
+        events_before = list(sess.ledger.events)
+        q = np.asarray(Q)[5]
+        fresh = svc.answer("t0", q)
+        again = svc.answer("t0", q)
+        assert not fresh.cached and again.cached
+        assert again.value == fresh.value
+        assert sess.ledger.events == events_before  # zero-ε reads
+
+
 class TestAnswerCache:
     def test_repeat_query_cached_bitwise_zero_ledger_delta(self, workload):
         """Acceptance (c): a repeated query is answered from the cache,
