@@ -1,0 +1,98 @@
+"""IVF probe microbench: the per-iteration kNN hot path, single and waved.
+
+Times one probe dispatch through each route of `mips.IVFIndex`:
+
+* ``xla``         — gather → dense matvec → top_k (the old path; the
+                    gathered (nprobe·cap, dim) matrix round-trips HBM).
+* ``kernel``      — the fused `kernels.ivf_probe` route as `use_pallas=
+                    "auto"` resolves it: the Pallas stream on TPU, the
+                    same XLA probe off-TPU (the automatic fallback —
+                    recorded either way, with the resolved path in the
+                    derived column).
+* ``batch``       — a wave of B probes through `query_in_graph_batch`
+                    (cells probed by several lanes read once on the kernel
+                    route) vs B sequential single probes.
+
+Also prints the analytic roofline rows (`analysis.roofline.
+ivf_probe_roofline`): HBM bytes touched by the kernelized stream vs the
+full-gather lowering — the bytes ratio is the speedup ceiling on a
+bandwidth-bound part.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.analysis.roofline import ivf_probe_roofline
+from repro.core.queries import random_binary_queries
+from repro.mips import IVFIndex, augment_complement
+
+
+def _time_call(fn, reps: int) -> float:
+    fn()  # warm-up: trace + compile
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples) * 1e6)
+
+
+def run(quick: bool = True):
+    U = 128 if quick else 256
+    ms = [4096] if quick else [8192, 32768]
+    B = 8
+    reps = 20 if quick else 50
+    rows = []
+    kq = jax.random.PRNGKey(0)
+    for m in ms:
+        Q = random_binary_queries(kq, m, U)
+        aug = augment_complement(np.asarray(Q))
+        k = int(np.ceil(np.sqrt(m)))
+        ix_xla = IVFIndex(aug, seed=0, train_iters=4, use_pallas="never")
+        ix_ker = IVFIndex(aug, seed=0, train_iters=4, use_pallas="auto")
+        path = "pallas" if ix_ker._resolve_pallas() else "xla_ref"
+        v = jax.random.normal(jax.random.PRNGKey(1), (U,), jnp.float32)
+        v = v - v.mean()  # zero-sum probe, the histogram-difference regime
+        Vb = jax.random.normal(jax.random.PRNGKey(2), (B, U), jnp.float32)
+        Vb = Vb - Vb.mean(axis=1, keepdims=True)
+
+        us_xla = _time_call(lambda: ix_xla.query_in_graph(v, k), reps)
+        us_ker = _time_call(lambda: ix_ker.query_in_graph(v, k), reps)
+        rows.append(row(f"ivf_probe/m{m}/single_xla", us_xla,
+                        f"rows_scored={ix_xla.query_cost(k)}"))
+        rows.append(row(f"ivf_probe/m{m}/single_kernel", us_ker,
+                        f"path={path};vs_xla={us_xla / us_ker:.2f}x"))
+
+        us_seq = _time_call(
+            lambda: [ix_xla.query_in_graph(Vb[b], k) for b in range(B)], reps)
+        us_wave = _time_call(lambda: ix_ker.query_in_graph_batch(Vb, k), reps)
+        rows.append(row(f"ivf_probe/m{m}/wave_B{B}", us_wave,
+                        f"path={path};per_lane_us={us_wave / B:.1f}"
+                        f";vs_sequential={us_seq / us_wave:.2f}x"
+                        f";waves_per_s={1e6 / us_wave:.1f}"))
+
+        for kernelized in (True, False):
+            rf = ivf_probe_roofline(nlist=ix_ker.nlist, nprobe=ix_ker.nprobe,
+                                    cap=ix_ker.cap, dim=U, batch=B,
+                                    kernelized=kernelized)
+            tag = "kernel" if kernelized else "full_gather"
+            rows.append(row(
+                f"ivf_probe/m{m}/roofline_{tag}",
+                rf["step_lower_bound_s"] * 1e6,
+                f"hbm_bytes={rf['hbm_bytes']:.3g}"
+                f";rows_scored={rf['rows_scored']}"
+                f";bottleneck={rf['bottleneck']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run(quick=True))

@@ -10,6 +10,12 @@ The flat path is measured under both drivers (DESIGN.md §2):
 overhead the fused driver removes. All other per-index speedups are
 reported relative to the fused flat scan so they measure selection work,
 not dispatch latency.
+
+The IVF probe is measured under both routes (DESIGN.md §3): ``ivf`` pins
+``use_pallas="never"`` (the XLA gather probe), ``ivf_pallas`` lets
+``use_pallas="auto"`` resolve — the fused `kernels.ivf_probe` stream on
+TPU, the same XLA probe off-TPU (recorded either way; the derived column
+carries the resolved path and the ratio against the pinned-XLA row).
 """
 
 from __future__ import annotations
@@ -38,11 +44,18 @@ def run(quick: bool = True):
         Qnp = np.asarray(Q)
         aug = augment_complement(Qnp)
         flat_us = None
-        for kind in ("flat_host", "flat", "ivf", "lsh", "nsw"):
+        ivf_us = None
+        for kind in ("flat_host", "flat", "ivf", "ivf_pallas", "lsh", "nsw"):
             if kind in ("flat_host", "flat"):
                 index = FlatAbsIndex(Q)
             elif kind == "ivf":
-                index = IVFIndex(aug, seed=0, train_iters=4)
+                index = IVFIndex(aug, seed=0, train_iters=4,
+                                 use_pallas="never")
+            elif kind == "ivf_pallas":
+                # identical structure (the numpy k-means build is
+                # seed-deterministic), kernel-routed probe
+                index = IVFIndex(aug, seed=0, train_iters=4,
+                                 use_pallas="auto")
             elif kind == "lsh":
                 index = LSHIndex(aug, n_tables=8, seed=0)
             else:
@@ -72,6 +85,12 @@ def run(quick: bool = True):
                 derived = (f"speedup={speedup:.2f}x"
                            f";err={res.final_error:.4f}"
                            f";scored={int(np.mean(res.n_scored))}")
+            if kind == "ivf":
+                ivf_us = us
+            elif kind == "ivf_pallas":
+                path = "pallas" if index._resolve_pallas() else "xla_ref"
+                derived += (f";path={path}"
+                            f";vs_ivf_xla={ivf_us / us:.2f}x")
             rows.append(row(f"linear_queries/m{m}/{kind}", us, derived))
     return rows
 

@@ -1,12 +1,18 @@
 """Benchmark runner — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the paper-scale
-sweeps; the default quick mode keeps the whole suite CPU-friendly.
+Prints ``name,us_per_call,derived`` CSV and writes a ``BENCH_results.json``
+artifact (per-bench rows — iter/call microseconds plus the derived column
+carrying rows_scored / wave-throughput / speedup metrics — and wall-clock),
+which CI uploads so the perf trajectory is tracked across PRs. ``--full``
+runs the paper-scale sweeps; the default quick mode keeps the whole suite
+CPU-friendly.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -16,13 +22,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma-separated bench names to run")
+    ap.add_argument("--json", default="BENCH_results.json",
+                    help="path of the results artifact ('' disables)")
     args, _ = ap.parse_known_args()
     quick = not args.full
 
     from benchmarks import (bench_distributed, bench_error_parity,
-                            bench_linear_queries, bench_lp, bench_margin,
-                            bench_n_ablation, bench_release_service,
-                            roofline_report)
+                            bench_ivf_probe, bench_linear_queries, bench_lp,
+                            bench_margin, bench_n_ablation,
+                            bench_release_service, roofline_report)
     from benchmarks.common import print_rows
 
     benches = {
@@ -33,10 +41,12 @@ def main() -> None:
         "n_ablation": bench_n_ablation,
         "release_service": bench_release_service,
         "distributed": bench_distributed,
+        "ivf_probe": bench_ivf_probe,
         "roofline": roofline_report,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)
 
+    results: dict = {}
     print("name,us_per_call,derived")
     for name in selected:
         mod = benches[name]
@@ -44,10 +54,38 @@ def main() -> None:
         try:
             rows = mod.run(quick=quick)
             print_rows(rows)
-            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+            dt = time.time() - t0
+            results[name] = {"rows": rows, "seconds": round(dt, 2)}
+            print(f"# {name}: {len(rows)} rows in {dt:.1f}s",
                   file=sys.stderr)
-        except Exception as e:  # keep the suite running
+        except Exception as e:  # keep the suite running; fail at the end
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            results[name] = {"rows": [], "seconds": round(time.time() - t0, 2),
+                             "error": f"{type(e).__name__}: {e}"}
+
+    if args.json:
+        import jax
+
+        artifact = {
+            "schema": 1,
+            "quick": quick,
+            "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "platform": platform.platform(),
+            "benches": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+    failed = [n for n, r in results.items() if "error" in r]
+    if failed:
+        # every selected bench ran (errors don't stop the suite), but a
+        # crashed bench must still fail the invocation — CI would otherwise
+        # go green with zero coverage of the section it smoke-tests
+        print(f"# FAILED benches: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

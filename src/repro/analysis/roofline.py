@@ -48,3 +48,51 @@ def model_flops(n_params: int, n_tokens: int, active_params: int | None = None,
     n = active_params if active_params is not None else n_params
     per_tok = 6.0 * n if kind == "train" else 2.0 * n
     return per_tok * n_tokens
+
+
+def ivf_probe_roofline(*, nlist: int, nprobe: int, cap: int, dim: int,
+                       batch: int = 1, unique_cells: int | None = None,
+                       dtype_bytes: int = 4, kernelized: bool = True,
+                       chip: Chip = V5E) -> dict:
+    """Roofline of one IVF probe (wave) — the per-iteration kNN hot path.
+
+    The kernelized probe (`repro.kernels.ivf_probe`) touches exactly
+    ``nlist·dim`` centroid bytes plus each streamed cell's ``cap·dim`` rows
+    once (HBM→VMEM, double-buffered; the gathered candidate matrix never
+    exists in HBM). A batched wave streams the ``unique_cells`` of the
+    lanes' union (default: no overlap, ``batch·nprobe``; the masked
+    duplicate tail revisits the resident block). The XLA lowering instead
+    materializes the per-lane (nprobe·cap, dim) gather: rows cross the HBM
+    bus ~3× (gather read + gather write + matvec read), per lane.
+
+    FLOPs are the routes' real op counts, not the useful per-lane work:
+    the batched kernel scores *every* streamed tile against the whole wave
+    (lanes that did not probe the cell are masked after the matmul), so
+    its compute term carries the full B× — the dedup shares HBM reads, not
+    MXU work, and the trade only pays while the probe stays
+    bandwidth-bound.
+
+    Returns the `roofline_terms` dict extended with ``hbm_bytes`` /
+    ``flops`` / ``rows_scored`` (valid per-lane candidates, the useful
+    work) so benches can report bytes-touched directly.
+    """
+    if unique_cells is None:
+        unique_cells = batch * nprobe
+    unique_cells = min(unique_cells, nlist, batch * nprobe)
+    row_bytes = cap * dim * dtype_bytes
+    id_bytes = cap * 4
+    rows_scored = batch * nprobe * cap
+    if kernelized:
+        hbm = (nlist * dim * dtype_bytes            # centroids, streamed once
+               + unique_cells * (row_bytes + id_bytes))
+        # every grid slot (B·nprobe of them) matmuls against all B lanes
+        flops = 2.0 * dim * batch * (nlist + batch * nprobe * cap)
+    else:
+        hbm = (nlist * dim * dtype_bytes
+               + batch * nprobe * (3 * row_bytes + id_bytes))
+        flops = 2.0 * dim * (batch * nlist + rows_scored)
+    out = roofline_terms(flops, float(hbm), 0.0, chip)
+    out.update({"hbm_bytes": float(hbm), "flops": float(flops),
+                "rows_scored": rows_scored, "unique_cells": unique_cells,
+                "kernelized": kernelized})
+    return out

@@ -95,11 +95,20 @@ def _make_iteration_body(mesh, *, m: int, U: int, nlist: int, cap: int,
                          nprobe: int, k_loc: int, tail_cap: int,
                          scale: float, eta: float, lap_scale: float,
                          rule: str, mode: str, multi_pod: bool,
-                         fallback: bool = True):
+                         fallback: bool = True, use_pallas: bool = False,
+                         interpret: bool = True):
     """Returns ``(body, data_axes)`` where ``body`` is the per-shard
-    iteration ``(Q, cents, cells, h, logw, p_sum, k_sel, k_meas) →
-    (logw', p_sum', stats)`` run inside shard_map. All array arguments are
-    the *local* shards; keys are replicated raw key data."""
+    iteration ``(Q, cents, cells, cell_rows, h, logw, p_sum, k_sel, k_meas)
+    → (logw', p_sum', stats)`` run inside shard_map. All array arguments
+    are the *local* shards; keys are replicated raw key data.
+
+    ``use_pallas`` swaps the lazy probe's gather → matvec → top_k for the
+    fused `kernels.ivf_probe` kernel (valid only when "model" has extent 1 —
+    the kernel fuses dot+top-k, so the partial-dot psum of a model-sharded
+    probe cannot interpose; `run_mwem_sharded` gates this). ``cell_rows``
+    is the per-shard (nlist, cap, U_loc) cell-grouped copy of Q the kernel
+    streams from, built once per dispatch by the scan wrapper (a dummy
+    (1, 1, U_loc) when the XLA path runs)."""
     data_axes = ("pod", "data") if multi_pod else ("data",)
     n_data = math.prod(mesh.shape[a] for a in data_axes)
     m_loc = m // n_data
@@ -134,23 +143,38 @@ def _make_iteration_body(mesh, *, m: int, U: int, nlist: int, cap: int,
         cand_pert = cand_pert.at[0].set(pert[best])
         return cand_gids, cand_pert, jnp.float32(m_loc)
 
-    def _lazy_candidates(Q, cents, cells, v, k_sel, shard_id):
+    def _lazy_candidates(Q, cents, cells, cell_rows, v, k_sel, shard_id):
         """IVF-pruned top-k plus the thinned Gumbel tail, per shard.
         Returns the candidate buffer and this shard's overflow flag."""
         k1 = _fold_axes(k_sel, data_axes)                  # per-shard stream
         kg, kc, kt, kg2 = jax.random.split(k1, 4)
 
-        # ---- IVF pruning: pick nprobe cells by centroid score ----
-        cscores = jax.lax.psum(cents[0] @ v, "model")      # (nlist,)
-        _, probe = jax.lax.top_k(jnp.abs(cscores), nprobe)
-        cand = cells[0][probe].reshape(-1)                 # (nprobe·cap,)
-        valid = cand >= 0
-        rows = Q[jnp.clip(cand, 0)]                        # (cand, U_loc)
-        cscore = jax.lax.psum(rows @ v, "model")
-        x_cand = jnp.where(valid, jnp.abs(cscore) * scale, -jnp.inf)
-        top_x, top_pos = jax.lax.top_k(x_cand, k_loc)
-        top_ids = cand[top_pos]
-        top_valid = top_ids >= 0
+        if use_pallas:
+            # ---- fused kernel probe (model extent 1, no psums needed):
+            # centroid top-nprobe + scalar-prefetched cell streaming, the
+            # gathered candidate matrix never materialized (kernels/ivf_probe)
+            from repro.kernels.ivf_probe import ivf_probe_topk
+
+            top_ids, top_abs, n_valid = ivf_probe_topk(
+                cents[0], cell_rows, cells[0], v, k_loc, nprobe,
+                interpret=interpret, absolute=True)
+            top_x = top_abs * scale                        # -inf pads survive
+            top_valid = top_ids >= 0
+            n_probe_scored = jnp.float32(nlist) + n_valid.astype(jnp.float32)
+        else:
+            # ---- IVF pruning: pick nprobe cells by centroid score ----
+            cscores = jax.lax.psum(cents[0] @ v, "model")  # (nlist,)
+            _, probe = jax.lax.top_k(jnp.abs(cscores), nprobe)
+            cand = cells[0][probe].reshape(-1)             # (nprobe·cap,)
+            valid = cand >= 0
+            rows = Q[jnp.clip(cand, 0)]                    # (cand, U_loc)
+            cscore = jax.lax.psum(rows @ v, "model")
+            x_cand = jnp.where(valid, jnp.abs(cscore) * scale, -jnp.inf)
+            top_x, top_pos = jax.lax.top_k(x_cand, k_loc)
+            top_ids = cand[top_pos]
+            top_valid = top_ids >= 0
+            n_probe_scored = (jnp.float32(nlist)
+                              + jnp.sum(valid).astype(jnp.float32))
 
         # ---- lazy Gumbel over the shard's top-k ----
         g = jax.random.gumbel(kg, (k_loc,))
@@ -187,12 +211,10 @@ def _make_iteration_body(mesh, *, m: int, U: int, nlist: int, cap: int,
         cand_pert = jnp.concatenate([pert_top, pert_tail])
         # scored work: centroid scan + *valid* probed rows (padded -1 slots
         # are masked — they cost no FLOPs) + live tail draws
-        n_scored = (jnp.float32(nlist)
-                    + jnp.sum(valid).astype(jnp.float32)
-                    + jnp.sum(active).astype(jnp.float32))
+        n_scored = n_probe_scored + jnp.sum(active).astype(jnp.float32)
         return cand_gids, cand_pert, n_scored, overflow
 
-    def body(Q, cents, cells, h, logw, p_sum, k_sel, k_meas):
+    def body(Q, cents, cells, cell_rows, h, logw, p_sum, k_sel, k_meas):
         p = _global_softmax(logw)
         v = h - p                                          # (U_loc,)
         shard_id = _shard_id()
@@ -202,7 +224,8 @@ def _make_iteration_body(mesh, *, m: int, U: int, nlist: int, cap: int,
                 Q, v, k_sel, shard_id)
             overflow = jnp.bool_(False)
         elif mode == "lazy":
-            lazy = _lazy_candidates(Q, cents, cells, v, k_sel, shard_id)
+            lazy = _lazy_candidates(Q, cents, cells, cell_rows, v, k_sel,
+                                    shard_id)
             # any shard overflowing redoes the *whole* iteration
             # exhaustively (the fallback must cover every shard's rows, and
             # the predicate must be replicated for the collectives inside
@@ -267,11 +290,28 @@ def _make_iteration_body(mesh, *, m: int, U: int, nlist: int, cap: int,
 _STAT_SPECS = {"winner": P(), "n_scored": P(), "overflow": P()}
 
 
+def _cell_grouped_rows(Q, cells, use_pallas: bool):
+    """Per-shard (nlist, cap⌈8⌉, U_loc) cell-grouped copy of the local Q
+    rows — the contiguous HBM blocks the fused probe kernel streams, cap
+    pre-padded to the sublane multiple so the kernel wrapper's pad is a
+    no-op inside the scan body. Gathered once per dispatch (amortized over
+    the T-iteration scan); a (1, 8, U_loc) dummy when the XLA probe runs."""
+    if not use_pallas:
+        return jnp.zeros((1, 8, Q.shape[1]), Q.dtype)
+    local = cells[0]
+    rows = Q[jnp.clip(local, 0)] * (local >= 0)[..., None].astype(Q.dtype)
+    pad = (-rows.shape[1]) % 8
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad), (0, 0)))
+    return rows
+
+
 def make_mwem_iteration(mesh, *, m: int, U: int, nlist: int, cap: int,
                         nprobe: int, k_loc: int, tail_cap: int,
                         scale: float, eta: float, mode: str,
                         multi_pod: bool, rule: str = "hardt",
-                        lap_scale: float = 0.0, fallback: bool = True):
+                        lap_scale: float = 0.0, fallback: bool = True,
+                        use_pallas: bool = False, interpret: bool = True):
     """One shard-mapped iteration ``(Q, cents, cells, logw, h, key) →
     (logw', stats)`` — the scan body of `run_mwem_sharded` exposed on its
     own for HLO/roofline analysis (dry-run cells) and per-iteration tests.
@@ -282,7 +322,8 @@ def make_mwem_iteration(mesh, *, m: int, U: int, nlist: int, cap: int,
     body, data_axes = _make_iteration_body(
         mesh, m=m, U=U, nlist=nlist, cap=cap, nprobe=nprobe, k_loc=k_loc,
         tail_cap=tail_cap, scale=scale, eta=eta, lap_scale=lap_scale,
-        rule=rule, mode=mode, multi_pod=multi_pod, fallback=fallback)
+        rule=rule, mode=mode, multi_pod=multi_pod, fallback=fallback,
+        use_pallas=use_pallas, interpret=interpret)
 
     q_spec = P(data_axes, "model")
     cent_spec = P(data_axes, None, "model")   # (shards, nlist, U_loc)
@@ -291,7 +332,8 @@ def make_mwem_iteration(mesh, *, m: int, U: int, nlist: int, cap: int,
 
     def iteration(Q, cents, cells, logw, h, key):
         _, k_sel, k_meas = jax.random.split(key, 3)
-        logw_new, _, stats = body(Q, cents, cells, h, logw,
+        cell_rows = _cell_grouped_rows(Q, cells, use_pallas)
+        logw_new, _, stats = body(Q, cents, cells, cell_rows, h, logw,
                                   jnp.zeros_like(logw),
                                   _raw_key(k_sel), _raw_key(k_meas))
         return logw_new, stats
@@ -308,7 +350,8 @@ def make_mwem_scan(mesh, *, T: int, m: int, U: int, nlist: int, cap: int,
                    nprobe: int, k_loc: int, tail_cap: int, scale: float,
                    eta: float, lap_scale: float, rule: str, mode: str,
                    multi_pod: bool, eval_every: int = 0,
-                   fallback: bool = True):
+                   fallback: bool = True, use_pallas: bool = False,
+                   interpret: bool = True):
     """The full T-iteration sharded driver: one shard_map around one
     `lax.scan` — a single dispatch per run, traces as stacked scan outputs.
 
@@ -325,7 +368,8 @@ def make_mwem_scan(mesh, *, T: int, m: int, U: int, nlist: int, cap: int,
     body, data_axes = _make_iteration_body(
         mesh, m=m, U=U, nlist=nlist, cap=cap, nprobe=nprobe, k_loc=k_loc,
         tail_cap=tail_cap, scale=scale, eta=eta, lap_scale=lap_scale,
-        rule=rule, mode=mode, multi_pod=multi_pod, fallback=fallback)
+        rule=rule, mode=mode, multi_pod=multi_pod, fallback=fallback,
+        use_pallas=use_pallas, interpret=interpret)
 
     q_spec = P(data_axes, "model")
     cent_spec = P(data_axes, None, "model")
@@ -333,11 +377,15 @@ def make_mwem_scan(mesh, *, T: int, m: int, U: int, nlist: int, cap: int,
     w_spec = P("model")
 
     def scan_fn(Q, cents, cells, h, logw0, p_sum0, sel_keys, meas_keys):
+        # one cell-grouped gather per dispatch, amortized over the T scan
+        # iterations (kernel route only)
+        cell_rows = _cell_grouped_rows(Q, cells, use_pallas)
+
         def step(carry, xs):
             logw, p_sum = carry
             t, k_sel, k_meas = xs
-            logw2, p_sum2, stats = body(Q, cents, cells, h, logw, p_sum,
-                                        k_sel, k_meas)
+            logw2, p_sum2, stats = body(Q, cents, cells, cell_rows, h,
+                                        logw, p_sum, k_sel, k_meas)
             if eval_every:
                 # gated: the Θ(m_loc · U_loc) error matmul only runs on the
                 # eval schedule, mirroring the fused driver
@@ -444,6 +492,7 @@ def run_mwem_sharded(
     cal = _calibrate(cfg, m, U)
     c_idx = _check_fast_index(cfg, index, fused=False)
 
+    use_pallas = False
     if cfg.mode == "fast":
         if not getattr(index, "supports_sharded", False):
             raise ValueError(
@@ -457,6 +506,14 @@ def run_mwem_sharded(
         k_loc, tail_cap = shard_selection_params(m_loc, index,
                                                  k=cfg.k,
                                                  tail_cap=cfg.tail_cap)
+        # the fused probe kernel replaces the gather→matvec→top_k only when
+        # "model" has extent 1 (it fuses dot+top-k, so the partial-dot psum
+        # of a model-sharded probe cannot interpose) — automatic fallback
+        # to the XLA probe otherwise
+        try:
+            use_pallas = index._resolve_pallas() and n_model == 1
+        except AttributeError:
+            use_pallas = False
     else:
         # dummy per-shard structure: the exhaustive body never reads it
         cents = jnp.zeros((n_data, 1, U), jnp.float32)
@@ -469,7 +526,9 @@ def run_mwem_sharded(
                    rule=cfg.update_rule,
                    mode="exhaustive" if cfg.mode == "exact" else "lazy",
                    multi_pod="pod" in mesh.axis_names,
-                   eval_every=cfg.eval_every)
+                   eval_every=cfg.eval_every,
+                   use_pallas=use_pallas,
+                   interpret=jax.default_backend() != "tpu")
     entry = _jitted_scan(mesh, statics)
 
     # device_put is a no-op for arrays already placed with the target

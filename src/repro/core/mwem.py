@@ -375,7 +375,94 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
     return jax.lax.scan(body, state0, (ts, sel_keys, meas_keys))
 
 
+def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
+                      keys: jax.Array, *, batch_query_fn: Callable, T: int,
+                      mode: str, rule: str, eta: float, scale: float,
+                      lap_scale: float, k: int, tail_cap: int,
+                      margin_slack: float, eval_every: int):
+    """The batched fused loop with a *wave-batched* probe (DESIGN.md §3).
+
+    `run_mwem_batch`'s default shape is `vmap(_fused_core)`: every lane
+    probes the index independently, which XLA lowers to per-lane scattered
+    gathers. When the index serves a whole wave per call
+    (``supports_batch_probe``), this core scans once over T carrying all B
+    lanes and hands the stacked (B, U) probe block to
+    ``index.query_in_graph_batch`` — on the kernel route, cells probed by
+    several lanes stream from HBM once and scoring is MXU-batched.
+    Everything after the probe (LazyEM, overflow fallback, MW update) is
+    the vmapped per-lane math of `_fused_core`, and the key chain is the
+    per-lane `split_chain`, so lane b reproduces `run_mwem_fused(key_b)`
+    (same trace fields, same ledger path; bitwise when the batched probe
+    equals the per-lane probe — exactly true on the XLA route, up to exact
+    score ties on the batch-kernel route).
+    """
+    m = Qm.shape[0]
+    B = keys.shape[0]
+    if mode != "fast":
+        raise ValueError("the waved core only serves mode='fast' probes")
+    sel_keys, meas_keys = jax.vmap(lambda kk: split_chain(kk, T))(keys)
+    sel_keys = jnp.moveaxis(sel_keys, 0, 1)    # (T, B, key)
+    meas_keys = jnp.moveaxis(meas_keys, 0, 1)
+    batched_h = h.ndim == 2
+    mwu = partial(_mwu_step, rule=rule, eta=eta, lap_scale=lap_scale)
+
+    def select_one(k_sel, v, aug_idx, raw):
+        out = lazy_em_from_topk(
+            k_sel, aug_idx, raw * scale, 2 * m,
+            score_fn=lambda idx: _aug_score(Qm, v, idx) * scale,
+            tail_cap=tail_cap,
+            margin_slack=margin_slack * scale if margin_slack else 0.0,
+        )
+        sel = jax.lax.cond(
+            out.overflow,
+            lambda _: _exact_argmax(k_sel, Qm, v, scale),
+            lambda _: (out.index % m).astype(jnp.int32),
+            operand=None,
+        )
+        n_scored = jnp.where(out.overflow, jnp.int32(m), out.n_scored)
+        return sel, n_scored, out.tail_count, out.overflow
+
+    def body(state, xs):
+        t, k_sel, k_meas = xs                   # keys (B, ...)
+        p = jax.nn.softmax(state.log_w, axis=-1)   # (B, U)
+        v = h - p                                   # (B, U)
+        aug_idx, raw = batch_query_fn(v, k)         # (B, k) each
+        sel, n_scored, tail_count, overflow = jax.vmap(select_one)(
+            k_sel, v, aug_idx, raw)
+        new_state = jax.vmap(mwu, in_axes=(0, 0, 0, 0 if batched_h else None,
+                                           0))(state, p, Qm[sel], h, k_meas)
+        ys = (sel, n_scored, tail_count, overflow)
+        if eval_every:
+            err_fn = jax.vmap(partial(max_error, Qm),
+                              in_axes=(0 if batched_h else None, 0))
+            err = jax.lax.cond(
+                t % eval_every == 0,
+                lambda _: err_fn(h, new_state.p_sum / t.astype(jnp.float32)),
+                lambda _: jnp.full((B,), jnp.nan, jnp.float32),
+                operand=None,
+            )
+            ys = ys + (err,)
+        return new_state, ys
+
+    ts = jnp.arange(1, T + 1)
+    final_state, traces = jax.lax.scan(body, state0,
+                                       (ts, sel_keys, meas_keys))
+    # (T, B) stacked scan outputs → the (B, T) layout vmap(core) produces
+    traces = jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), traces)
+    return final_state, traces
+
+
 _EXACT_DRIVER_CACHE: dict = {}
+
+
+def _waved_route(index, batch_axes) -> bool:
+    """Whether the batched driver should scan with the wave-batched probe
+    instead of vmapping the per-lane core: the index must serve whole
+    waves, and must not be on the full-score-reuse path (which hands the
+    scan body the (m,) score vector the waved probe never materializes)."""
+    return (batch_axes is not None
+            and getattr(index, "supports_batch_probe", False)
+            and not getattr(index, "has_full_scores", False))
 
 
 def _fused_driver(index, statics: dict, batch_axes=None) -> Callable:
@@ -389,18 +476,27 @@ def _fused_driver(index, statics: dict, batch_axes=None) -> Callable:
     """
     cache = (_EXACT_DRIVER_CACHE if index is None
              else index.__dict__.setdefault("_fused_driver_cache", {}))
-    ck = (tuple(sorted(statics.items())), batch_axes)
+    waved = _waved_route(index, batch_axes)
+    # the route (and the kernel-vs-XLA probe under it) is resolved at trace
+    # time, so a flipped `use_pallas` knob must never reuse a stale entry
+    ck = (tuple(sorted(statics.items())), batch_axes, waved,
+          getattr(index, "_use_pallas", None))
     entry = cache.get(ck)
     if entry is None:
-        query_fn = None
-        if getattr(index, "has_full_scores", False):
-            query_fn = index.query_in_graph_with_scores
-            statics = dict(statics, query_returns_scores=True)
-        elif index is not None:
-            query_fn = index.query_in_graph
-        core = partial(_fused_core, query_fn=query_fn, **statics)
-        if batch_axes is not None:
-            core = jax.vmap(core, in_axes=batch_axes)
+        if waved:
+            core = partial(_fused_core_waved,
+                           batch_query_fn=index.query_in_graph_batch,
+                           **statics)
+        else:
+            query_fn = None
+            if getattr(index, "has_full_scores", False):
+                query_fn = index.query_in_graph_with_scores
+                statics = dict(statics, query_returns_scores=True)
+            elif index is not None:
+                query_fn = index.query_in_graph
+            core = partial(_fused_core, query_fn=query_fn, **statics)
+            if batch_axes is not None:
+                core = jax.vmap(core, in_axes=batch_axes)
         entry = (jax.jit(core, donate_argnums=(2,)), {})
         cache[ck] = entry
     return entry
@@ -525,12 +621,20 @@ def run_mwem_batch(
     the caller accounts for the multiplicity — either manually or by
     passing per-lane ``ledgers``.
 
-    Batching is fused-only (``driver="host"`` raises). Cost caveat: under
-    vmap the overflow-fallback `lax.cond` lowers to a select that executes
-    both branches every iteration, so for indices without full-score reuse
-    (IVF/LSH) each batched iteration pays the Θ(mU) exhaustive branch —
-    batch those through a Python loop over `run_mwem` if selection cost
-    matters more than dispatch (DESIGN.md §2).
+    Batching is fused-only (``driver="host"`` raises). Indices that serve
+    whole waves (``supports_batch_probe`` — IVF, and FlatAbs on TPU) route
+    through the wave-batched scan core instead of `vmap`: one probe call
+    covers all B lanes per iteration (the kernelized route reads cells
+    probed by several lanes once — DESIGN.md §3). Per-lane parity with
+    `run_mwem_fused` is bitwise on the XLA probe route; the TPU batch
+    kernel's slot ordering can break *exact* score ties differently than
+    a standalone probe (kernels/ivf_probe/ref.py). Cost caveat: under
+    either route the
+    overflow-fallback `lax.cond` lowers to a select that executes both
+    branches every iteration, so for probe-only indices (IVF/LSH) each
+    batched iteration pays the Θ(mU) exhaustive branch — batch those
+    through a Python loop over `run_mwem` if selection cost matters more
+    than dispatch (DESIGN.md §2).
     """
     if cfg.driver == "host":
         raise ValueError("run_mwem_batch always uses the fused driver; "

@@ -7,7 +7,13 @@ Each kernel package contains:
 
 Kernels:
   mips_topk       — streaming tiled top-k inner-product search (the flat-scan
-                    baseline of Fast-MWEM at HBM-bandwidth roofline)
+                    baseline of Fast-MWEM at HBM-bandwidth roofline); one
+                    pass covers plain / absolute / complement-augmented
+                    rankings
+  ivf_probe       — scalar-prefetched IVF probe: streams only the probed
+                    cells' rows HBM→VMEM (never materializing the gathered
+                    candidate matrix) and amortizes the stream across a
+                    serve wave of probes via a dedup + MXU-batched variant
   mwu_update      — fused multiplicative-weights update + online softmax stats
   flash_attention — GQA flash attention (full/causal/window/chunk masking)
   ssd_scan        — Mamba-2 SSD chunked state-passing scan

@@ -1,0 +1,104 @@
+"""Public jit'd wrappers for the fused IVF probe (padding + dispatch).
+
+Layout contract: callers hold the index rows twice — the flat ``V`` the
+XLA reference gathers from, and ``cell_rows`` (nlist, cap, dim), the same
+rows pre-grouped by cell so a probed cell is one contiguous HBM block the
+kernel's scalar-prefetched index_map can DMA directly (`mips.IVFIndex`
+builds it lazily, only when the Pallas route is live).
+
+Stage split: the centroid scoring + top-nprobe runs through the streaming
+`mips_topk` kernel (VMEM-resident, mode="abs" for the sharded driver's
+|·| ordering); its (nprobe,) cell ids feed the stream kernel's scalar
+prefetch with no host round-trip. The batched wrapper plans its probes
+with one XLA (B × dim) @ (dim × nlist) matmul instead — at wave width the
+centroid stage is MXU-bound already, and the dedup/membership planning is
+pure jnp either way.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ivf_probe.ivf_probe import (ivf_probe_stream_batch_pallas,
+                                               ivf_probe_stream_pallas)
+from repro.kernels.ivf_probe.ref import batch_probe_slots
+from repro.kernels.mips_topk.ops import _pad_to, mips_topk
+
+
+def _pad_cell_blocks(cell_rows, cells, block_d: int, cap_mult: int = 8):
+    """Pad cap to a sublane multiple (pad slots id −1) and dim to block_d."""
+    rows_p = _pad_to(_pad_to(cell_rows, 1, cap_mult), 2, block_d)
+    pad_cap = rows_p.shape[1] - cells.shape[1]
+    ids_p = cells
+    if pad_cap:
+        ids_p = jnp.pad(cells, ((0, 0), (0, pad_cap)), constant_values=-1)
+    return rows_p, ids_p
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe", "block_d", "interpret",
+                                   "absolute"))
+def ivf_probe_topk(cents: jax.Array, cell_rows: jax.Array, cells: jax.Array,
+                   q: jax.Array, k: int, nprobe: int, *, block_d: int = 512,
+                   interpret: bool | None = None, absolute: bool = False):
+    """Fused IVF probe: top-k inner products over the top-``nprobe`` cells.
+
+    Args:
+      cents: (nlist, dim) cell centroids.
+      cell_rows: (nlist, cap, dim) rows grouped by cell (pad slots zero).
+      cells: (nlist, cap) int32 row-id table, −1 padding.
+      q: (dim,) probe vector.
+      absolute: rank centroids and candidates by |⟨·, q⟩| and return the
+        absolute scores (the sharded driver's ordering); False matches
+        `mips.IVFIndex`'s signed ordering.
+
+    Returns ``(idx (k,) int32, scores (k,) f32, n_valid () int32)`` —
+    bitwise `ref.ivf_probe_topk_ref` (same candidate order, stable merge),
+    with ``idx = −1`` beyond the valid candidates.
+    """
+    nlist, cap, dim = cell_rows.shape
+    block_d = min(block_d, max(8, dim))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    probe, _ = mips_topk(cents, q, nprobe, block_d=block_d,
+                         interpret=interpret, absolute=absolute)
+    rows_p, ids_p = _pad_cell_blocks(cell_rows, cells, block_d)
+    qp = _pad_to(q, 0, block_d)
+    out_i, out_s = ivf_probe_stream_pallas(
+        probe, rows_p, ids_p, qp, k, block_d=block_d, interpret=interpret,
+        absolute=absolute)
+    n_valid = jnp.sum(cells[probe] >= 0).astype(jnp.int32)
+    return out_i, out_s, n_valid
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe", "block_d", "interpret",
+                                   "absolute"))
+def ivf_probe_topk_batch(cents: jax.Array, cell_rows: jax.Array,
+                         cells: jax.Array, Vb: jax.Array, k: int, nprobe: int,
+                         *, block_d: int = 512, interpret: bool | None = None,
+                         absolute: bool = False):
+    """Wave-batched fused IVF probe over B probe vectors ``Vb`` (B, dim).
+
+    Each cell of the lanes' deduplicated union streams HBM→VMEM once
+    (duplicate tail slots revisit the resident block, lane-membership
+    masked); each streamed tile is scored against the whole wave by one
+    MXU matmul. Returns ``(idx (B, k), scores (B, k), n_valid (B,))`` —
+    bitwise `ref.ivf_probe_topk_batch_ref` (ties break in ascending-cell
+    slot order, see ref.py).
+    """
+    nlist, cap, dim = cell_rows.shape
+    B = Vb.shape[0]
+    block_d = min(block_d, max(8, dim))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    slots, member, probe = batch_probe_slots(cents, cells, Vb, nprobe,
+                                             absolute)
+    rows_p, ids_p = _pad_cell_blocks(cell_rows, cells, block_d)
+    qbp = _pad_to(Vb.T, 0, block_d)                       # (dp, B)
+    out_i, out_s = ivf_probe_stream_batch_pallas(
+        slots, rows_p, ids_p, qbp, member, k, block_d=block_d,
+        interpret=interpret, absolute=absolute)
+    n_valid = jnp.sum(cells[probe] >= 0, axis=(1, 2)).astype(jnp.int32)
+    return out_i, out_s, n_valid

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for the fused IVF probe kernels.
+
+`ivf_probe_topk_ref` is exactly the XLA probe `mips.IVFIndex` has always
+run (centroid matvec → top_k → cell gather → candidate matvec → top_k),
+with candidates laid out cell-probe-major / slot-minor — the same flat
+order the streaming kernel merges in, so index/score agreement is exact
+including ties (`jax.lax.top_k` is stable, and a stable incremental top-k
+merge equals the stable global top-k).
+
+`ivf_probe_topk_batch_ref` mirrors the batched kernel's candidate order
+instead: the deduplicated cell union in *ascending cell id* order shared
+by all lanes. On exact score ties the batched path can therefore pick a
+different (equal-scoring) candidate than nprobe-ordered per-lane probes —
+the only way the two orderings are observably different.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ivf_probe_topk_ref(cents: jax.Array, cells: jax.Array, V: jax.Array,
+                       q: jax.Array, k: int, nprobe: int,
+                       absolute: bool = False):
+    """Returns (idx int32 (k,), scores f32 (k,), n_valid int32 ()).
+
+    ``idx`` entries are row ids from the cell table (−1 where fewer than k
+    valid candidates were probed); ``n_valid`` counts the valid (non-pad)
+    row slots in the probed cells — the scored-rows term of ``n_scored``.
+    """
+    cscores = cents.astype(jnp.float32) @ q.astype(jnp.float32)
+    order = jnp.abs(cscores) if absolute else cscores
+    _, probe = jax.lax.top_k(order, nprobe)
+    cand = cells[probe].reshape(-1)                       # (nprobe·cap,)
+    valid = cand >= 0
+    scores = V[jnp.clip(cand, 0)].astype(jnp.float32) @ q.astype(jnp.float32)
+    if absolute:
+        scores = jnp.abs(scores)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    top_s, pos = jax.lax.top_k(scores, k)
+    idx = jnp.where(jnp.isfinite(top_s), cand[pos], -1)
+    return idx.astype(jnp.int32), top_s, jnp.sum(valid).astype(jnp.int32)
+
+
+def batch_probe_slots(cents: jax.Array, cells: jax.Array, Vb: jax.Array,
+                      nprobe: int, absolute: bool = False):
+    """Shared probe planning for the batched kernel and its reference.
+
+    Returns ``(slots, member, probe)``: the (B·nprobe,) deduplicated cell
+    union (unique ids first, ascending; the duplicate tail masked out of
+    every lane and pinned to the *last* unique id, so the tail's grid
+    steps revisit the block already resident in VMEM instead of
+    re-streaming distinct cells), the (B·nprobe, B) float 0/1 membership
+    mask, and the per-lane (B, nprobe) probed cells.
+    """
+    cscores = Vb.astype(jnp.float32) @ cents.astype(jnp.float32).T  # (B, nlist)
+    order = jnp.abs(cscores) if absolute else cscores
+    _, probe = jax.lax.top_k(order, nprobe)               # (B, nprobe)
+    flat = jnp.sort(probe.reshape(-1))
+    uniq = jnp.concatenate([jnp.ones((1,), bool), flat[1:] != flat[:-1]])
+    # unique cells first (ascending), duplicates squeezed to the tail
+    slots = flat[jnp.argsort(~uniq, stable=True)]
+    slot_valid = jnp.sort(uniq)[::-1]
+    # fully-masked tail slots all repeat the max (= last unique) cell id
+    slots = jnp.where(slot_valid, slots, flat[-1])
+    member = ((slots[:, None, None] == probe[None, :, :]).any(-1)
+              & slot_valid[:, None]).astype(jnp.float32)  # (S, B)
+    return slots.astype(jnp.int32), member, probe
+
+
+def ivf_probe_topk_batch_ref(cents: jax.Array, cells: jax.Array,
+                             V: jax.Array, Vb: jax.Array, k: int, nprobe: int,
+                             absolute: bool = False):
+    """Returns (idx (B, k), scores (B, k), n_valid (B,)) — candidates per
+    lane in the batched kernel's slot order (ascending deduplicated cells,
+    lane-masked), so parity with `ivf_probe_topk_batch` is exact."""
+    slots, member, probe = batch_probe_slots(cents, cells, Vb, nprobe,
+                                             absolute)
+    cand = cells[slots]                                   # (S, cap)
+    scores = jnp.einsum("scd,bd->bsc", V[jnp.clip(cand, 0)].astype(jnp.float32),
+                        Vb.astype(jnp.float32))           # (B, S, cap)
+    if absolute:
+        scores = jnp.abs(scores)
+    mask = (cand[None, :, :] >= 0) & (member.T[:, :, None] > 0)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    B = Vb.shape[0]
+    flat_s = scores.reshape(B, -1)
+    flat_i = jnp.broadcast_to(cand.reshape(-1)[None, :], flat_s.shape)
+    top_s, pos = jax.lax.top_k(flat_s, k)
+    idx = jnp.where(jnp.isfinite(top_s),
+                    jnp.take_along_axis(flat_i, pos, axis=1), -1)
+    n_valid = jnp.sum(cells[probe] >= 0, axis=(1, 2)).astype(jnp.int32)
+    return idx.astype(jnp.int32), top_s, n_valid

@@ -11,6 +11,16 @@ score is complete it is merged into a running top-k scratch via
 is ~0.5 flop/byte — the kernel is HBM-bandwidth-bound by construction, which
 is the roofline the IVF/LSH/NSW indices beat by touching fewer rows.
 
+Three ranking modes share the one streaming pass (``mode``):
+
+* ``"plain"`` — rank by ⟨v_j, q⟩, return row ids (the exact flat scan).
+* ``"abs"``   — rank by |⟨v_j, q⟩|, return row ids and the absolute
+  scores (the IVF centroid-probe ordering of the sharded driver).
+* ``"aug"``   — rank the complement-augmented set: each row contributes
+  both signed scores (+⟨v_j, q⟩ as id j, −⟨v_j, q⟩ as id j+n) to a single
+  top-k merge. One read of V covers both signs — half the HBM traffic of
+  the old two-pass (q, −q) formulation.
+
 Grid: (n_tiles, d_tiles), d innermost. All shapes padded by ops.py.
 """
 
@@ -25,7 +35,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(v_ref, q_ref, out_i_ref, out_s_ref, acc_ref, top_s_ref, top_i_ref,
-            *, k: int, block_n: int, n_real: int):
+            *, k: int, block_n: int, n_real: int, mode: str):
     ni = pl.program_id(0)
     di = pl.program_id(1)
     nd = pl.num_programs(1)
@@ -45,9 +55,26 @@ def _kernel(v_ref, q_ref, out_i_ref, out_s_ref, acc_ref, top_s_ref, top_i_ref,
             top_i_ref[...] = jnp.zeros_like(top_i_ref)
 
         row_idx = ni * block_n + jax.lax.iota(jnp.int32, block_n)
-        scores = jnp.where(row_idx < n_real, acc_ref[...], -jnp.inf)
+        valid = row_idx < n_real
+        acc = acc_ref[...]
+        if mode == "plain":
+            scores = jnp.where(valid, acc, -jnp.inf)
+            cand_i = row_idx
+        elif mode == "abs":
+            scores = jnp.where(valid, jnp.abs(acc), -jnp.inf)
+            cand_i = row_idx
+        elif mode == "aug":
+            # Both signs of every row in one merge: id j ↦ +score,
+            # id j+n ↦ −score (the complement row, paper §3.4).
+            scores = jnp.concatenate([
+                jnp.where(valid, acc, -jnp.inf),
+                jnp.where(valid, -acc, -jnp.inf),
+            ])
+            cand_i = jnp.concatenate([row_idx, row_idx + n_real])
+        else:
+            raise ValueError(f"unknown mips_topk mode {mode!r}")
         merged_s = jnp.concatenate([top_s_ref[...], scores])
-        merged_i = jnp.concatenate([top_i_ref[...], row_idx])
+        merged_i = jnp.concatenate([top_i_ref[...], cand_i])
         new_s, pos = jax.lax.top_k(merged_s, k)
         top_s_ref[...] = new_s
         top_i_ref[...] = merged_i[pos]
@@ -59,12 +86,14 @@ def _kernel(v_ref, q_ref, out_i_ref, out_s_ref, acc_ref, top_s_ref, top_i_ref,
 
 
 def mips_topk_pallas(Vp: jax.Array, qp: jax.Array, k: int, *, block_n: int,
-                     block_d: int, interpret: bool, n_real: int):
+                     block_d: int, interpret: bool, n_real: int,
+                     mode: str = "plain"):
     """Padded-shape pallas_call; use ops.mips_topk for the public API."""
     n, d = Vp.shape
     assert n % block_n == 0 and d % block_d == 0, "ops.py must pad"
     grid = (n // block_n, d // block_d)
-    kern = functools.partial(_kernel, k=k, block_n=block_n, n_real=n_real)
+    kern = functools.partial(_kernel, k=k, block_n=block_n, n_real=n_real,
+                             mode=mode)
     out_i, out_s = pl.pallas_call(
         kern,
         grid=grid,

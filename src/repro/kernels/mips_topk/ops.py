@@ -19,14 +19,18 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@partial(jax.jit, static_argnames=("k", "block_n", "block_d", "interpret"))
+@partial(jax.jit,
+         static_argnames=("k", "block_n", "block_d", "interpret", "absolute"))
 def mips_topk(V: jax.Array, q: jax.Array, k: int, *, block_n: int = 512,
-              block_d: int = 512, interpret: bool | None = None):
+              block_d: int = 512, interpret: bool | None = None,
+              absolute: bool = False):
     """Top-k inner products of ``q`` against rows of ``V``.
 
     Pads (n, d) to tile multiples; padded rows are masked inside the kernel
     (scores forced to −inf). ``interpret=None`` → interpret everywhere
-    except real TPU backends.
+    except real TPU backends. ``absolute=True`` ranks by |⟨v_j, q⟩| and
+    returns the absolute scores (the IVF centroid-probe ordering) — ties
+    break exactly like ``jax.lax.top_k`` on the full score vector.
     """
     n, d = V.shape
     block_n = min(block_n, max(8, n))
@@ -36,7 +40,8 @@ def mips_topk(V: jax.Array, q: jax.Array, k: int, *, block_n: int = 512,
     Vp = _pad_to(_pad_to(V, 0, block_n), 1, block_d)
     qp = _pad_to(q, 0, block_d)
     return mips_topk_pallas(Vp, qp, k, block_n=block_n, block_d=block_d,
-                            interpret=interpret, n_real=n)
+                            interpret=interpret, n_real=n,
+                            mode="abs" if absolute else "plain")
 
 
 @partial(jax.jit, static_argnames=("k", "block_n", "block_d", "interpret"))
@@ -46,17 +51,20 @@ def mips_abs_topk(V: jax.Array, q: jax.Array, k: int, *, block_n: int = 512,
 
     Returned id ``j < n`` means ``+⟨v_j, q⟩``; ``j ≥ n`` means
     ``−⟨v_{j−n}, q⟩`` (the complement row's score for zero-sum probes).
-    Runs the streaming kernel twice — once per sign of ``q`` — and merges
-    the 2k candidates with one ``top_k``; the 2n-row augmented matrix is
-    never materialized. For k ≤ n each base row contributes at most one of
-    its two signed scores to the top (the other is ≤ 0 ≤ the winner), so
-    this equals top-k over the full augmented set.
+    One streaming pass over V: each row tile contributes *both* signed
+    scores to the running top-k merge (``mode="aug"``), so the 2n-row
+    augmented matrix is never materialized and V is read exactly once —
+    half the HBM traffic of the old two-pass (q, −q) formulation. For
+    k ≤ n each base row contributes at most one of its two signed scores
+    to the top (the other is ≤ 0 ≤ the winner), so this equals top-k over
+    the full augmented set.
     """
-    n = V.shape[0]
-    pos_i, pos_s = mips_topk(V, q, k, block_n=block_n, block_d=block_d,
-                             interpret=interpret)
-    neg_i, neg_s = mips_topk(V, -q, k, block_n=block_n, block_d=block_d,
-                             interpret=interpret)
-    ids = jnp.concatenate([pos_i, neg_i + n])
-    top_s, pos = jax.lax.top_k(jnp.concatenate([pos_s, neg_s]), k)
-    return ids[pos].astype(jnp.int32), top_s
+    n, d = V.shape
+    block_n = min(block_n, max(8, n))
+    block_d = min(block_d, max(8, d))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Vp = _pad_to(_pad_to(V, 0, block_n), 1, block_d)
+    qp = _pad_to(q, 0, block_d)
+    return mips_topk_pallas(Vp, qp, k, block_n=block_n, block_d=block_d,
+                            interpret=interpret, n_real=n, mode="aug")

@@ -8,6 +8,20 @@ import jax
 import numpy as np
 
 
+def resolve_pallas(use_pallas: str) -> bool:
+    """Shared `use_pallas` knob resolution for every index family:
+    "always" | "never" | "auto" (TPU only — the automatic fallback where
+    Pallas has no compiled backend)."""
+    if use_pallas == "always":
+        return True
+    if use_pallas == "never":
+        return False
+    if use_pallas != "auto":
+        raise ValueError(f"use_pallas must be auto|always|never, "
+                         f"got {use_pallas!r}")
+    return jax.default_backend() == "tpu"
+
+
 @runtime_checkable
 class MIPSIndex(Protocol):
     """k-MIPS index protocol.

@@ -4,6 +4,10 @@ On TPU this path is the `repro.kernels.mips_topk` Pallas kernel; on CPU the
 jnp reference executes the same math. Exact ⇒ approx_margin = 0,
 failure_mass = 0. Both indices are fully traceable (`supports_in_graph`),
 so the fused MWEM driver inlines them into its scan body.
+
+All search paths are module-level jitted functions: instances sharing
+shapes share one compiled program (building a second index never
+retraces — the per-tenant recompilation fix, see tests/test_mips.py).
 """
 
 from __future__ import annotations
@@ -13,6 +17,52 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.mips.base import resolve_pallas
+
+
+@partial(jax.jit, static_argnames=("k", "pallas"))
+def _flat_query(vectors, q, k: int, pallas: bool):
+    if pallas:
+        from repro.kernels.mips_topk import ops as topk_ops
+
+        return topk_ops.mips_topk(vectors, q, k)
+    scores = vectors @ q
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_i.astype(jnp.int32), top_s
+
+
+@partial(jax.jit, static_argnames=("k", "pallas"))
+def _flat_abs_query(Qm, v, k: int, pallas: bool):
+    if pallas:
+        from repro.kernels.mips_topk import ops as topk_ops
+
+        return topk_ops.mips_abs_topk(Qm, v, k)
+    aug, top_a, _ = _flat_abs_query_scores(Qm, v, k)
+    return aug, top_a
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _flat_abs_query_scores(Qm, v, k: int):
+    m = Qm.shape[0]
+    s = Qm @ v
+    a = jnp.abs(s)
+    top_a, top_i = jax.lax.top_k(a, k)
+    aug = jnp.where(s[top_i] >= 0, top_i, top_i + m)
+    return aug.astype(jnp.int32), top_a, s
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _flat_abs_query_batch(Qm, Vb, k: int):
+    """Whole-wave exhaustive |·| probe: one (B × dim) @ (dim × m) MXU
+    matmul reads Q once for every lane — already the amortization the
+    batched IVF kernel buys, so no Pallas variant is needed here."""
+    m = Qm.shape[0]
+    s = Vb @ Qm.T                                       # (B, m)
+    top_a, top_i = jax.lax.top_k(jnp.abs(s), k)
+    aug = jnp.where(jnp.take_along_axis(s, top_i, axis=1) >= 0,
+                    top_i, top_i + m)
+    return aug.astype(jnp.int32), top_a
 
 
 class FlatIndex:
@@ -27,30 +77,14 @@ class FlatIndex:
         self.n, self.dim = self._v.shape
         self._use_pallas = use_pallas
 
-        @partial(jax.jit, static_argnames=("k",))
-        def _query(vectors, q, k: int):
-            if self._resolve_pallas():
-                from repro.kernels.mips_topk import ops as topk_ops
-
-                return topk_ops.mips_topk(vectors, q, k)
-            scores = vectors @ q
-            top_s, top_i = jax.lax.top_k(scores, k)
-            return top_i.astype(jnp.int32), top_s
-
-        self._query_fn = _query
-
     def _resolve_pallas(self) -> bool:
-        if self._use_pallas == "always":
-            return True
-        if self._use_pallas == "never":
-            return False
-        return jax.default_backend() == "tpu"
+        return resolve_pallas(self._use_pallas)
 
     def query(self, v, k: int):
-        return self._query_fn(self._v, jnp.asarray(v, jnp.float32), k)
+        return self.query_in_graph(jnp.asarray(v, jnp.float32), k)
 
     def query_in_graph(self, v, k: int):
-        return self._query_fn(self._v, v, k)
+        return _flat_query(self._v, v, k, self._resolve_pallas())
 
     def query_cost(self, k: int) -> int:
         return self.n
@@ -61,12 +95,14 @@ class FlatAbsIndex:
 
     Returns *augmented* ids (j < m ⇒ +⟨q_j, v⟩; j ≥ m ⇒ −⟨q_{j−m}, v⟩),
     matching the convention of `augment_complement`. On TPU the scan runs
-    through the streaming `mips_abs_topk` kernel (two signed passes, merged).
+    through the streaming `mips_abs_topk` kernel — one pass over Q merges
+    both signs' candidates (half the HBM traffic of the old two-pass).
     """
 
     approx_margin = 0.0
     failure_mass = 0.0
     supports_in_graph = True
+    supports_batch_probe = True
 
     def __init__(self, Q, use_pallas: str = "auto"):
         self._q = jnp.asarray(Q, jnp.float32)
@@ -74,38 +110,17 @@ class FlatAbsIndex:
         self.n = 2 * self.m
         self._use_pallas = use_pallas
 
-        @partial(jax.jit, static_argnames=("k",))
-        def _query(Qm, v, k: int):
-            if self._resolve_pallas():
-                from repro.kernels.mips_topk import ops as topk_ops
-
-                return topk_ops.mips_abs_topk(Qm, v, k)
-            aug, top_a, _ = _query_scores(Qm, v, k)
-            return aug, top_a
-
-        @partial(jax.jit, static_argnames=("k",))
-        def _query_scores(Qm, v, k: int):
-            s = Qm @ v
-            a = jnp.abs(s)
-            top_a, top_i = jax.lax.top_k(a, k)
-            aug = jnp.where(s[top_i] >= 0, top_i, top_i + self.m)
-            return aug.astype(jnp.int32), top_a, s
-
-        self._query_fn = _query
-        self._query_scores_fn = _query_scores
-
     def _resolve_pallas(self) -> bool:
-        if self._use_pallas == "always":
-            return True
-        if self._use_pallas == "never":
-            return False
-        return jax.default_backend() == "tpu"
+        return resolve_pallas(self._use_pallas)
 
     def query(self, v, k: int):
-        return self._query_fn(self._q, jnp.asarray(v, jnp.float32), k)
+        return self.query_in_graph(jnp.asarray(v, jnp.float32), k)
 
     def query_in_graph(self, v, k: int):
-        return self._query_fn(self._q, v, k)
+        return _flat_abs_query(self._q, v, k, self._resolve_pallas())
+
+    def query_in_graph_batch(self, Vb, k: int):
+        return _flat_abs_query_batch(self._q, Vb, k)
 
     @property
     def has_full_scores(self) -> bool:
@@ -119,7 +134,7 @@ class FlatAbsIndex:
         """Exhaustive probe that also returns the full (m,) signed score
         vector — the fused driver reuses it for tail scoring and the
         overflow fallback instead of re-touching Q (DESIGN.md §2)."""
-        return self._query_scores_fn(self._q, v, k)
+        return _flat_abs_query_scores(self._q, v, k)
 
     def query_cost(self, k: int) -> int:
         return self.m

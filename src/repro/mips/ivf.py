@@ -2,12 +2,26 @@
 
 FAISS-style IVF partitions the vectors into ``nlist`` Voronoi cells and
 searches the ``nprobe`` closest cells. The TPU version keeps cells as a
-*padded, capacity-bounded* (nlist × cap) id table so the search path is
-gather → one dense (nprobe·cap × dim) @ v matvec → top_k: fixed shapes,
-MXU-batched, no ragged scans. Balanced assignment at build time bounds the
-padding waste (see DESIGN.md §3).
+*padded, capacity-bounded* (nlist × cap) id table. Two search paths share
+that structure (DESIGN.md §3):
 
-Defaults follow the paper: nlist = max(2√n, 20), nprobe = min(nlist/4, 10).
+* **XLA** — gather → one dense (nprobe·cap × dim) @ v matvec → top_k:
+  fixed shapes, MXU-batched, but the gathered candidate matrix round-trips
+  HBM.
+* **Pallas** (``use_pallas``) — the fused `repro.kernels.ivf_probe`
+  kernel: centroid top-nprobe through the streaming `mips_topk` kernel,
+  then only the probed cells' rows stream HBM→VMEM via scalar-prefetched
+  cell ids; the candidate matrix never exists in HBM. Requires the rows
+  duplicated in cell-grouped layout (``cell_rows``, built lazily on first
+  kernel query — cap_factor× extra HBM, the price of contiguous streams).
+
+``query_in_graph_batch`` serves a whole wave of probes per call
+(`supports_batch_probe`); the kernel route dedups cells probed by several
+lanes so shared cells are read from HBM once and scoring is one MXU
+matmul per streamed tile.
+
+Balanced assignment at build time bounds the padding waste. Defaults
+follow the paper: nlist = max(2√n, 20), nprobe = min(nlist/4, 10).
 """
 
 from __future__ import annotations
@@ -18,6 +32,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.mips.base import resolve_pallas
 
 
 def _kmeans(V: np.ndarray, nlist: int, iters: int, rng: np.random.Generator) -> np.ndarray:
@@ -75,12 +91,38 @@ def _balanced_assign(V: np.ndarray, cents: np.ndarray, cap: int) -> np.ndarray:
     return cells
 
 
+# Module-level jitted search paths: every IVFIndex instance with the same
+# shapes/statics shares one compiled program (the per-instance closure the
+# seed used retraced per tenant/index build).
+
+def _query_impl(V, cents, cells, q, k: int, nprobe: int):
+    cscores = cents @ q
+    _, probe = jax.lax.top_k(cscores, nprobe)
+    cand = cells[probe].reshape(-1)                    # (nprobe·cap,)
+    valid = cand >= 0
+    scores = V[jnp.clip(cand, 0)] @ q
+    scores = jnp.where(valid, scores, -jnp.inf)
+    top_s, pos = jax.lax.top_k(scores, k)
+    return cand[pos].astype(jnp.int32), top_s
+
+
+_query_xla = jax.jit(_query_impl, static_argnames=("k", "nprobe"))
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe"))
+def _query_xla_batch(V, cents, cells, Vb, k: int, nprobe: int):
+    return jax.vmap(
+        lambda q: _query_impl(V, cents, cells, q, k, nprobe))(Vb)
+
+
 class IVFIndex:
     supports_in_graph = True  # padded cells ⇒ fixed-shape, traceable search
+    supports_batch_probe = True
 
     def __init__(self, vectors, nlist: int | None = None, nprobe: int | None = None,
                  cap_factor: float = 2.0, train_iters: int = 10, seed: int = 0,
-                 approx_margin: float = 0.0, failure_mass: float | None = None):
+                 approx_margin: float = 0.0, failure_mass: float | None = None,
+                 use_pallas: str = "auto"):
         V = np.asarray(vectors, np.float32)
         self.n, self.dim = V.shape
         self.nlist = min(nlist or max(int(2 * math.sqrt(self.n)), 20), self.n)
@@ -92,29 +134,63 @@ class IVFIndex:
         self._v = jnp.asarray(V)
         self._cents = jnp.asarray(cents)
         self._cells = jnp.asarray(cells)
+        self._use_pallas = use_pallas
+        self._cell_rows = None  # the kernel route's cell-grouped row copy
+        if resolve_pallas(use_pallas):
+            self._rows_by_cell()
         self.approx_margin = approx_margin
         self.failure_mass = (1.0 / self.n) if failure_mass is None else failure_mass
 
-        @partial(jax.jit, static_argnames=("k", "nprobe"))
-        def _query(V, cents, cells, q, k: int, nprobe: int):
-            cscores = cents @ q
-            _, probe = jax.lax.top_k(cscores, nprobe)
-            cand = cells[probe].reshape(-1)                    # (nprobe·cap,)
-            valid = cand >= 0
-            scores = V[jnp.clip(cand, 0)] @ q
-            scores = jnp.where(valid, scores, -jnp.inf)
-            top_s, pos = jax.lax.top_k(scores, k)
-            return cand[pos].astype(jnp.int32), top_s
+    def _resolve_pallas(self) -> bool:
+        return resolve_pallas(self._use_pallas)
 
-        self._query_fn = _query
+    def _rows_by_cell(self) -> jax.Array:
+        """(nlist, cap⌈8⌉, dim) rows in cell-grouped layout — the
+        contiguous HBM blocks the kernel's scalar-prefetched index_map
+        streams. The cap axis is pre-padded to the sublane multiple so the
+        per-call `_pad_cell_blocks` in ops.py is a no-op on the hot path
+        (no per-probe copy of the whole table). Usually built at __init__;
+        the lazy rebuild (a flipped `use_pallas` knob) pins compile-time
+        eval so a driver tracing through the index can never cache a
+        tracer here."""
+        if self._cell_rows is None:
+            with jax.ensure_compile_time_eval():
+                rows = (jnp.take(self._v, jnp.clip(self._cells, 0), axis=0)
+                        * (self._cells >= 0)[..., None])
+                pad = (-self.cap) % 8
+                if pad:
+                    rows = jnp.pad(rows, ((0, 0), (0, pad), (0, 0)))
+                self._cell_rows = rows
+        return self._cell_rows
 
     def query(self, v, k: int):
-        return self._query_fn(self._v, self._cents, self._cells,
-                              jnp.asarray(v, jnp.float32), k, self.nprobe)
+        return self.query_in_graph(jnp.asarray(v, jnp.float32), k)
 
     def query_in_graph(self, v, k: int):
-        return self._query_fn(self._v, self._cents, self._cells, v, k,
-                              self.nprobe)
+        if self._resolve_pallas():
+            from repro.kernels.ivf_probe import ivf_probe_topk
+
+            idx, scores, _ = ivf_probe_topk(
+                self._cents, self._rows_by_cell(), self._cells, v, k,
+                self.nprobe)
+            return idx, scores
+        return _query_xla(self._v, self._cents, self._cells, v, k,
+                          self.nprobe)
+
+    def query_in_graph_batch(self, Vb, k: int):
+        """Probe a whole wave (B, dim) in one call → ((B, k) ids, scores).
+
+        The kernel route reads cells probed by several lanes once; the XLA
+        route is the vmapped single probe (bitwise per-lane parity)."""
+        if self._resolve_pallas():
+            from repro.kernels.ivf_probe import ivf_probe_topk_batch
+
+            idx, scores, _ = ivf_probe_topk_batch(
+                self._cents, self._rows_by_cell(), self._cells, Vb, k,
+                self.nprobe)
+            return idx, scores
+        return _query_xla_batch(self._v, self._cents, self._cells, Vb, k,
+                                self.nprobe)
 
     def query_cost(self, k: int) -> int:
         return self.nlist + self.nprobe * self.cap
@@ -135,7 +211,10 @@ class ShardedIVFIndex:
 
     Not a host-query index: searches only make sense inside the shard_map
     body (``supports_sharded``), where each shard probes its own cells and
-    candidates meet at the all-gather.
+    candidates meet at the all-gather. ``use_pallas`` routes that per-shard
+    probe through the fused `kernels.ivf_probe` kernel when the mesh has no
+    model sharding (the kernel fuses dot+top-k, so partial-dot psums can't
+    interpose); the driver falls back to XLA automatically otherwise.
     """
 
     supports_in_graph = False
@@ -145,7 +224,8 @@ class ShardedIVFIndex:
                  nprobe: int | None = None, cap_factor: float = 2.0,
                  train_iters: int = 10, seed: int = 0,
                  approx_margin: float = 0.0,
-                 failure_mass: float | None = None):
+                 failure_mass: float | None = None,
+                 use_pallas: str = "auto"):
         V = np.asarray(vectors, np.float32)
         self.n, self.dim = V.shape
         if self.n % n_shards:
@@ -165,8 +245,12 @@ class ShardedIVFIndex:
             cells[s] = _balanced_assign(Vs, cents[s], self.cap)
         self.cents = jnp.asarray(cents)
         self.cells = jnp.asarray(cells)
+        self._use_pallas = use_pallas
         self.approx_margin = approx_margin
         self.failure_mass = (1.0 / self.n) if failure_mass is None else failure_mass
+
+    def _resolve_pallas(self) -> bool:
+        return resolve_pallas(self._use_pallas)
 
     def query_cost(self, k: int) -> int:
         """Scored rows per iteration across all shards (excluding the tail)."""

@@ -19,6 +19,27 @@ import numpy as np
 from repro.mips.transform import mips_to_knn_keys, mips_to_knn_query
 
 
+@partial(jax.jit, static_argnames=("k",))
+def _lsh_query(V, planes, buckets, weights, q, k: int):
+    """Module-level jitted search: same-shaped LSHIndex instances share one
+    compiled program (no per-instance retrace)."""
+    g = planes.shape[0]
+    qt = jnp.concatenate([q, jnp.zeros((1,), q.dtype)])
+    bits = jnp.einsum("d,gdb->gb", qt, planes) > 0
+    codes = (bits.astype(jnp.int32) * weights[None, :]).sum(-1)   # (g,)
+    cand = buckets[jnp.arange(g), codes].reshape(-1)              # (g·cap,)
+    # Dedupe (an id can live in several tables' buckets).
+    order = jnp.argsort(cand)
+    sc = cand[order]
+    dup = jnp.concatenate([jnp.array([False]), sc[1:] == sc[:-1]])
+    dup = dup[jnp.argsort(order)]
+    valid = (cand >= 0) & ~dup
+    scores = V[jnp.clip(cand, 0)] @ q
+    scores = jnp.where(valid, scores, -jnp.inf)
+    top_s, pos = jax.lax.top_k(scores, k)
+    return cand[pos].astype(jnp.int32), top_s
+
+
 class LSHIndex:
     supports_in_graph = True  # padded buckets ⇒ fixed-shape, traceable search
 
@@ -56,32 +77,13 @@ class LSHIndex:
         self.approx_margin = approx_margin
         self.failure_mass = (1.0 / self.n) if failure_mass is None else failure_mass
 
-        @partial(jax.jit, static_argnames=("k",))
-        def _query(V, planes, buckets, weights, q, k: int):
-            qt = jnp.concatenate([q, jnp.zeros((1,), q.dtype)])
-            bits = jnp.einsum("d,gdb->gb", qt, planes) > 0
-            codes = (bits.astype(jnp.int32) * weights[None, :]).sum(-1)   # (g,)
-            cand = buckets[jnp.arange(self.g), codes].reshape(-1)          # (g·cap,)
-            # Dedupe (an id can live in several tables' buckets).
-            order = jnp.argsort(cand)
-            sc = cand[order]
-            dup = jnp.concatenate([jnp.array([False]), sc[1:] == sc[:-1]])
-            dup = dup[jnp.argsort(order)]
-            valid = (cand >= 0) & ~dup
-            scores = V[jnp.clip(cand, 0)] @ q
-            scores = jnp.where(valid, scores, -jnp.inf)
-            top_s, pos = jax.lax.top_k(scores, k)
-            return cand[pos].astype(jnp.int32), top_s
-
-        self._query_fn = _query
-
     def query(self, v, k: int):
-        return self._query_fn(self._v, self._planes, self._buckets, self._weights,
-                              jnp.asarray(v, jnp.float32), k)
+        return _lsh_query(self._v, self._planes, self._buckets, self._weights,
+                          jnp.asarray(v, jnp.float32), k)
 
     def query_in_graph(self, v, k: int):
-        return self._query_fn(self._v, self._planes, self._buckets,
-                              self._weights, v, k)
+        return _lsh_query(self._v, self._planes, self._buckets,
+                          self._weights, v, k)
 
     def query_cost(self, k: int) -> int:
         return self.g * self.cap

@@ -58,6 +58,45 @@ def _nn_descent(Vt: np.ndarray, deg: int, rounds: int, rng: np.random.Generator,
     return nbrs
 
 
+@partial(jax.jit, static_argnames=("k", "max_steps"))
+def _nsw_query(V, adj, seeds, q, k: int, max_steps: int):
+    """Module-level jitted beam search: same-shaped NSWIndex instances
+    share one compiled program (no per-instance retrace)."""
+    n, ef = V.shape[0], seeds.shape[0]
+
+    def dedupe_mask(ids):
+        order = jnp.argsort(ids)
+        s = ids[order]
+        dup = jnp.concatenate([jnp.array([False]), s[1:] == s[:-1]])
+        return ~dup[jnp.argsort(order)]
+
+    beam_idx = seeds
+    beam_scores = jnp.where(dedupe_mask(seeds), V[seeds] @ q, -jnp.inf)
+    visited = jnp.zeros((n,), bool).at[seeds].set(True)
+
+    def cond(state):
+        _, _, _, steps, improved = state
+        return improved & (steps < max_steps)
+
+    def body(state):
+        beam_idx, beam_scores, visited, steps, _ = state
+        cand = adj[beam_idx].reshape(-1)              # (ef·deg,)
+        fresh = ~visited[cand] & dedupe_mask(cand)
+        cscores = jnp.where(fresh, V[cand] @ q, -jnp.inf)
+        visited = visited.at[cand].set(True)
+        all_idx = jnp.concatenate([beam_idx, cand])
+        all_scores = jnp.concatenate([beam_scores, cscores])
+        new_scores, pos = jax.lax.top_k(all_scores, ef)
+        new_idx = all_idx[pos]
+        improved = jnp.any(new_idx != beam_idx)
+        return new_idx, new_scores, visited, steps + 1, improved
+
+    state = (beam_idx, beam_scores, visited, jnp.int32(0), jnp.bool_(True))
+    beam_idx, beam_scores, _, steps, _ = jax.lax.while_loop(cond, body, state)
+    top_s, pos = jax.lax.top_k(beam_scores, min(k, ef))
+    return beam_idx[pos].astype(jnp.int32), top_s
+
+
 class NSWIndex:
     # The data-dependent-depth beam search (while_loop over an (n,) visited
     # mask) is kept out of the fused scan: tracing it per iteration bloats
@@ -92,47 +131,9 @@ class NSWIndex:
         self.approx_margin = approx_margin
         self.failure_mass = (1.0 / self.n) if failure_mass is None else failure_mass
 
-        @partial(jax.jit, static_argnames=("k", "max_steps"))
-        def _query(V, adj, seeds, q, k: int, max_steps: int):
-            n, ef = V.shape[0], seeds.shape[0]
-
-            def dedupe_mask(ids):
-                order = jnp.argsort(ids)
-                s = ids[order]
-                dup = jnp.concatenate([jnp.array([False]), s[1:] == s[:-1]])
-                return ~dup[jnp.argsort(order)]
-
-            beam_idx = seeds
-            beam_scores = jnp.where(dedupe_mask(seeds), V[seeds] @ q, -jnp.inf)
-            visited = jnp.zeros((n,), bool).at[seeds].set(True)
-
-            def cond(state):
-                _, _, _, steps, improved = state
-                return improved & (steps < max_steps)
-
-            def body(state):
-                beam_idx, beam_scores, visited, steps, _ = state
-                cand = adj[beam_idx].reshape(-1)              # (ef·deg,)
-                fresh = ~visited[cand] & dedupe_mask(cand)
-                cscores = jnp.where(fresh, V[cand] @ q, -jnp.inf)
-                visited = visited.at[cand].set(True)
-                all_idx = jnp.concatenate([beam_idx, cand])
-                all_scores = jnp.concatenate([beam_scores, cscores])
-                new_scores, pos = jax.lax.top_k(all_scores, ef)
-                new_idx = all_idx[pos]
-                improved = jnp.any(new_idx != beam_idx)
-                return new_idx, new_scores, visited, steps + 1, improved
-
-            state = (beam_idx, beam_scores, visited, jnp.int32(0), jnp.bool_(True))
-            beam_idx, beam_scores, _, steps, _ = jax.lax.while_loop(cond, body, state)
-            top_s, pos = jax.lax.top_k(beam_scores, min(k, ef))
-            return beam_idx[pos].astype(jnp.int32), top_s
-
-        self._query_fn = _query
-
     def query(self, v, k: int):
-        return self._query_fn(self._v, self._adj, self._seeds,
-                              jnp.asarray(v, jnp.float32), k, self.max_steps)
+        return _nsw_query(self._v, self._adj, self._seeds,
+                          jnp.asarray(v, jnp.float32), k, self.max_steps)
 
     def query_in_graph(self, v, k: int):
         raise NotImplementedError("NSW beam search is host-loop only")

@@ -92,7 +92,7 @@ class ReleaseService:
     def __init__(self, Q, cfg: MWEMConfig, wave_size: int = 8,
                  index_kind: str = "flat", seed: int = 0,
                  tight_composition: bool = False, auto_flush: bool = True,
-                 mesh=None):
+                 mesh=None, use_pallas: str = "auto"):
         self.Q = jnp.asarray(Q, jnp.float32)
         self.m, self.U = self.Q.shape
         self.cfg = cfg
@@ -108,18 +108,23 @@ class ReleaseService:
         self._next_ticket = 0
         self._next_release = 0
         self._next_seed = seed
+        # `use_pallas` ("auto" | "always" | "never") routes the per-wave
+        # probe through the fused kernels where the index supports them
+        # (kernels/ivf_probe for IVF, mips_topk for flat) — "auto" falls
+        # back to the XLA probe off-TPU automatically
         if cfg.mode == "fast":
             if mesh is not None:
                 # the sharded driver needs the per-shard structure, whatever
                 # single-device kind was asked for
                 self.index = ShardedIVFIndex(self.Q,
                                              n_shards=_data_shards(mesh)[1],
-                                             seed=seed)
+                                             seed=seed,
+                                             use_pallas=use_pallas)
             elif index_kind == "flat":
-                self.index = FlatAbsIndex(self.Q)
+                self.index = FlatAbsIndex(self.Q, use_pallas=use_pallas)
             elif index_kind == "ivf":
                 self.index = IVFIndex(augment_complement(np.asarray(self.Q)),
-                                      seed=seed)
+                                      seed=seed, use_pallas=use_pallas)
             elif index_kind == "lsh":
                 self.index = LSHIndex(augment_complement(np.asarray(self.Q)),
                                       seed=seed)

@@ -287,6 +287,46 @@ class TestShardedDriver:
         """)
         assert "OK" in out
 
+    def test_kernelized_probe_matches_xla_probe(self):
+        """The fused `kernels.ivf_probe` per-shard probe (use_pallas,
+        interpret mode off-TPU, valid only at model extent 1) must leave
+        the sharded driver's selections and scored-rows traces unchanged
+        vs the XLA gather probe."""
+        out = _run("""
+            import jax
+            from repro.core import MWEMConfig, run_mwem_sharded
+            from repro.core.queries import (gaussian_histogram,
+                                            random_binary_queries)
+            from repro.mips import ShardedIVFIndex
+            from repro.launch.mesh import make_mesh_compat
+            kh, kq = jax.random.split(jax.random.PRNGKey(0))
+            U, m, n = 32, 128, 300
+            h = gaussian_histogram(kh, n, U)
+            Q = random_binary_queries(kq, m, U)
+            mesh = make_mesh_compat((2, 1), ("data", "model"))
+            cfg = MWEMConfig(T=5, mode="fast", n_records=n)
+            ix_x = ShardedIVFIndex(Q, n_shards=2, seed=0, train_iters=3,
+                                   use_pallas="never")
+            ix_p = ShardedIVFIndex(Q, n_shards=2, seed=0, train_iters=3,
+                                   use_pallas="always")
+            rx = run_mwem_sharded(Q, h, cfg, jax.random.PRNGKey(3),
+                                  mesh=mesh, index=ix_x)
+            rp = run_mwem_sharded(Q, h, cfg, jax.random.PRNGKey(3),
+                                  mesh=mesh, index=ix_p)
+            assert rx.selected == rp.selected, (rx.selected, rp.selected)
+            assert rx.n_scored == rp.n_scored
+            assert abs(rx.final_error - rp.final_error) < 1e-6
+            # model-sharded meshes silently fall back to the XLA probe
+            mesh2 = make_mesh_compat((2, 2), ("data", "model"))
+            r2 = run_mwem_sharded(Q, h, cfg, jax.random.PRNGKey(3),
+                                  mesh=mesh2, index=ShardedIVFIndex(
+                                      Q, n_shards=2, seed=0, train_iters=3,
+                                      use_pallas="always"))
+            assert all(0 <= s < m for s in r2.selected)
+            print("OK")
+        """, devices=4)
+        assert "OK" in out
+
     def test_overflow_falls_back_to_exhaustive_exactly(self):
         """tail_cap=1 forces every shard's binomial past the buffer; the
         iteration must lax.cond into the exhaustive per-shard scan — which

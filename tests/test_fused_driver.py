@@ -129,8 +129,8 @@ class TestOverflowFallback:
 
 class TestAbsTopKKernel:
     def test_matches_jnp_abs_path(self):
-        """`mips_abs_topk` (two signed streaming passes, merged) returns the
-        same augmented-id top-k as the jnp abs path."""
+        """`mips_abs_topk` (one streaming pass merging both signs) returns
+        the same augmented-id top-k as the jnp abs path."""
         from repro.kernels.mips_topk import mips_abs_topk
 
         Q = jax.random.uniform(jax.random.PRNGKey(0), (200, 64))
@@ -142,6 +142,76 @@ class TestAbsTopKKernel:
         assert set(np.asarray(aug_k).tolist()) == set(np.asarray(aug_j).tolist())
         np.testing.assert_allclose(np.sort(np.asarray(s_k)),
                                    np.sort(np.asarray(s_j)), atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def ivf_indices(workload):
+    """The same IVF structure under both probe routes: XLA gather vs the
+    fused Pallas kernel (interpret mode on CPU)."""
+    from repro.mips import IVFIndex
+
+    Q, _, _ = workload
+    aug = augment_complement(np.asarray(Q))
+    return (IVFIndex(aug, seed=0, train_iters=3, use_pallas="never"),
+            IVFIndex(aug, seed=0, train_iters=3, use_pallas="always"))
+
+
+class TestKernelizedProbe:
+    """DESIGN.md §3: swapping the kernelized IVF probe into the fused scan
+    must leave the driver's traces unchanged."""
+
+    def test_fused_traces_unchanged(self, workload, ivf_indices):
+        Q, h, n = workload
+        ivf_xla, ivf_ker = ivf_indices
+        cfg = MWEMConfig(T=6, mode="fast", n_records=n)
+        rx = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(2), index=ivf_xla)
+        rk = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(2), index=ivf_ker)
+        assert rx.selected == rk.selected
+        assert rx.n_scored == rk.n_scored
+        assert rx.overflow_count == rk.overflow_count
+        assert abs(rx.final_error - rk.final_error) < 1e-5
+
+    def test_waved_batch_matches_singles(self, workload, ivf_indices):
+        """`run_mwem_batch` routes batch-probe indices through the waved
+        scan core (one probe call per iteration for all lanes); every lane
+        must reproduce its standalone fused run exactly."""
+        ivf_xla, _ = ivf_indices
+        Q, h, n = workload
+        B = 3
+        cfg = MWEMConfig(T=6, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+        batch = run_mwem_batch(Q, h, cfg, keys, index=ivf_xla)
+        for b in range(B):
+            single = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(b),
+                                    index=ivf_xla)
+            assert list(batch.selected[b]) == single.selected
+            assert list(batch.n_scored[b]) == single.n_scored
+
+    def test_waved_batch_kernel_route(self, workload, ivf_indices):
+        """The Pallas batch kernel route agrees with the XLA waved route
+        (away from exact ties both orderings retrieve the same set)."""
+        ivf_xla, ivf_ker = ivf_indices
+        Q, h, n = workload
+        cfg = MWEMConfig(T=5, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(2)])
+        bx = run_mwem_batch(Q, h, cfg, keys, index=ivf_xla)
+        bk = run_mwem_batch(Q, h, cfg, keys, index=ivf_ker)
+        assert np.array_equal(bx.selected, bk.selected)
+        np.testing.assert_allclose(np.asarray(bx.final_errors),
+                                   np.asarray(bk.final_errors), atol=1e-5)
+
+    def test_waved_eval_every_matches_single(self, workload, ivf_indices):
+        ivf_xla, _ = ivf_indices
+        Q, h, n = workload
+        cfg = MWEMConfig(T=6, mode="fast", n_records=n, eval_every=3)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(2)])
+        batch = run_mwem_batch(Q, h, cfg, keys, index=ivf_xla)
+        single = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(1),
+                                index=ivf_xla)
+        lane = batch.unbatch()[1].errors
+        assert [t for t, _ in lane] == [t for t, _ in single.errors]
+        np.testing.assert_allclose([e for _, e in lane],
+                                   [e for _, e in single.errors], atol=1e-5)
 
 
 class TestBatch:

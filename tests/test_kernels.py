@@ -10,6 +10,9 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.kernels.ivf_probe.ops import ivf_probe_topk, ivf_probe_topk_batch
+from repro.kernels.ivf_probe.ref import (ivf_probe_topk_batch_ref,
+                                         ivf_probe_topk_ref)
 from repro.kernels.mips_topk.ops import mips_topk
 from repro.kernels.mips_topk.ref import mips_topk_ref
 from repro.kernels.mwu_update.ops import mwu_update
@@ -46,6 +49,139 @@ class TestMipsTopk:
         # bf16 rounding: require ≥75% top-8 recall and close scores
         inter = set(np.asarray(idx_k).tolist()) & set(np.asarray(idx_r).tolist())
         assert len(inter) >= 6
+
+
+class TestMipsTopkAbs:
+    @given(n=st.integers(8, 300), d=st.integers(4, 70),
+           k=st.integers(1, 16), seed=st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_absolute_mode_matches_jnp(self, n, d, k, seed):
+        k = min(k, n)
+        rng = np.random.default_rng(seed)
+        V = rng.standard_normal((n, d)).astype(np.float32)
+        q = rng.standard_normal((d,)).astype(np.float32)
+        idx_k, s_k = mips_topk(jnp.asarray(V), jnp.asarray(q), k,
+                               block_n=64, block_d=32, absolute=True)
+        s_r, i_r = jax.lax.top_k(jnp.abs(jnp.asarray(V) @ jnp.asarray(q)), k)
+        np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                                   rtol=1e-5, atol=1e-5)
+        assert set(np.asarray(idx_k).tolist()) == set(np.asarray(i_r).tolist())
+
+
+def _ivf_structure(n, dim, nlist, cap, seed, integer=False):
+    """A small IVF layout: random rows dealt round-robin into padded cells,
+    centroids = member means, plus the cell-grouped row copy the kernel
+    streams from. ``integer`` data makes every dot exactly representable so
+    scores collide — the tie-break parity regime."""
+    rng = np.random.default_rng(seed)
+    if integer:
+        V = rng.integers(-4, 5, size=(n, dim)).astype(np.float32)
+    else:
+        V = rng.standard_normal((n, dim)).astype(np.float32)
+    perm = rng.permutation(n)
+    cells = np.full((nlist, cap), -1, np.int32)
+    for j, idx in enumerate(perm):
+        c, s = j % nlist, j // nlist
+        if s < cap:
+            cells[c, s] = idx
+    cents = np.zeros((nlist, dim), np.float32)
+    for c in range(nlist):
+        members = cells[c][cells[c] >= 0]
+        if len(members):
+            cents[c] = V[members].mean(0)
+    cell_rows = V[np.clip(cells, 0, None)] * (cells >= 0)[..., None]
+    return tuple(map(jnp.asarray, (V, cents, cells, cell_rows)))
+
+
+class TestIVFProbe:
+    """Interpret-mode parity for the fused IVF probe vs the XLA reference —
+    exact index/score agreement, ties broken identically (the stable
+    incremental merge equals one stable top_k in the same candidate
+    order)."""
+
+    @given(n=st.integers(40, 400), d=st.integers(4, 48),
+           k=st.integers(1, 16), nprobe=st.integers(1, 6),
+           seed=st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_matches_ref(self, n, d, k, nprobe, seed):
+        nlist = max(4, int(np.sqrt(n)))
+        cap = -(-n // nlist) + 2
+        nprobe = min(nprobe, nlist)
+        V, cents, cells, cell_rows = _ivf_structure(n, d, nlist, cap, seed)
+        q = jnp.asarray(np.random.default_rng(seed + 1)
+                        .standard_normal(d).astype(np.float32))
+        for absolute in (False, True):
+            i_k, s_k, n_k = ivf_probe_topk(cents, cell_rows, cells, q, k,
+                                           nprobe, interpret=True,
+                                           absolute=absolute)
+            i_r, s_r, n_r = ivf_probe_topk_ref(cents, cells, V, q, k,
+                                               nprobe, absolute=absolute)
+            np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+            np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                                       rtol=1e-6, atol=1e-6)
+            assert int(n_k) == int(n_r)
+
+    def test_tie_break_parity(self):
+        """Integer-valued rows make duplicate scores the norm; the kernel
+        must pick the *same* candidates in the same slots as the ref."""
+        V, cents, cells, cell_rows = _ivf_structure(
+            200, 16, 10, 24, seed=7, integer=True)
+        q = jnp.asarray(np.random.default_rng(3)
+                        .integers(-3, 4, size=16).astype(np.float32))
+        i_k, s_k, _ = ivf_probe_topk(cents, cell_rows, cells, q, 12, 5,
+                                     interpret=True)
+        i_r, s_r, _ = ivf_probe_topk_ref(cents, cells, V, q, 12, 5)
+        np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+
+    def test_overfill_pads_minus_one(self):
+        """k beyond the probed cells' valid rows pads ids with −1/−inf."""
+        V, cents, cells, cell_rows = _ivf_structure(30, 8, 6, 8, seed=2)
+        q = jnp.asarray(np.ones(8, np.float32))
+        k = 12  # > the ~10 valid rows in two probed cells (5 each + pads)
+        i_k, s_k, _ = ivf_probe_topk(cents, cell_rows, cells, q, k, 2,
+                                     interpret=True)
+        i_r, s_r, _ = ivf_probe_topk_ref(cents, cells, V, q, k, 2)
+        np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+        assert (np.asarray(i_k) == -1).any()
+        assert np.isneginf(np.asarray(s_k)[np.asarray(i_k) == -1]).all()
+
+    @given(b=st.integers(1, 6), k=st.integers(1, 12),
+           nprobe=st.integers(1, 5), seed=st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_batch_matches_ref(self, b, k, nprobe, seed):
+        n, d, nlist, cap = 240, 20, 12, 24
+        V, cents, cells, cell_rows = _ivf_structure(n, d, nlist, cap, seed)
+        Vb = jnp.asarray(np.random.default_rng(seed + 5)
+                         .standard_normal((b, d)).astype(np.float32))
+        for absolute in (False, True):
+            i_k, s_k, n_k = ivf_probe_topk_batch(
+                cents, cell_rows, cells, Vb, k, nprobe, interpret=True,
+                absolute=absolute)
+            i_r, s_r, n_r = ivf_probe_topk_batch_ref(
+                cents, cells, V, Vb, k, nprobe, absolute=absolute)
+            np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+            np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_array_equal(np.asarray(n_k), np.asarray(n_r))
+
+    def test_batch_lane_matches_single_probe(self):
+        """Away from exact ties, each wave lane retrieves the same
+        candidate set as its standalone probe (dedup/masking is invisible)."""
+        n, d, nlist, cap, k, nprobe = 300, 24, 16, 24, 10, 4
+        V, cents, cells, cell_rows = _ivf_structure(n, d, nlist, cap, 11)
+        Vb = jnp.asarray(np.random.default_rng(6)
+                         .standard_normal((5, d)).astype(np.float32))
+        ib, sb, _ = ivf_probe_topk_batch(cents, cell_rows, cells, Vb, k,
+                                         nprobe, interpret=True)
+        for b in range(5):
+            i1, s1, _ = ivf_probe_topk(cents, cell_rows, cells, Vb[b], k,
+                                       nprobe, interpret=True)
+            assert (set(np.asarray(ib[b]).tolist())
+                    == set(np.asarray(i1).tolist()))
+            np.testing.assert_allclose(np.sort(np.asarray(sb[b])),
+                                       np.sort(np.asarray(s1)),
+                                       rtol=1e-5, atol=1e-5)
 
 
 class TestMWUUpdate:

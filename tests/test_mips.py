@@ -80,6 +80,75 @@ class TestIVF:
         assert np.all(np.asarray(idx) >= 0) and np.all(np.asarray(idx) < 700)
 
 
+class TestIVFPallasRoute:
+    def test_kernel_route_matches_xla_route(self):
+        """`use_pallas="always"` (interpret off-TPU) must retrieve the same
+        candidates as the XLA gather probe — same built structure."""
+        V, q = _make_data(600, 24, 8)
+        ix_x = IVFIndex(V, seed=3, train_iters=3, use_pallas="never")
+        ix_p = IVFIndex(V, seed=3, train_iters=3, use_pallas="always")
+        idx_x, s_x = ix_x.query(q, 12)
+        idx_p, s_p = ix_p.query(q, 12)
+        assert set(np.asarray(idx_x).tolist()) == set(np.asarray(idx_p).tolist())
+        np.testing.assert_allclose(np.asarray(s_x), np.asarray(s_p),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_auto_falls_back_off_tpu(self):
+        ix = IVFIndex(_make_data(100, 8, 1)[0], use_pallas="auto")
+        import jax as _jax
+        assert ix._resolve_pallas() == (_jax.default_backend() == "tpu")
+        with pytest.raises(ValueError, match="auto|always|never"):
+            IVFIndex(_make_data(64, 8, 1)[0], use_pallas="sometimes").query(
+                np.zeros(8, np.float32), 2)
+
+    def test_batch_probe_matches_single(self):
+        V, _ = _make_data(512, 16, 9)
+        ix = IVFIndex(V, seed=0, train_iters=3, use_pallas="never")
+        rng = np.random.default_rng(1)
+        Vb = rng.standard_normal((4, 16)).astype(np.float32)
+        ib, sb = ix.query_in_graph_batch(jnp.asarray(Vb), 8)
+        for b in range(4):
+            i1, s1 = ix.query(Vb[b], 8)
+            np.testing.assert_array_equal(np.asarray(ib[b]), np.asarray(i1))
+            np.testing.assert_allclose(np.asarray(sb[b]), np.asarray(s1),
+                                       rtol=1e-6, atol=1e-6)
+
+
+class TestNoPerInstanceRecompilation:
+    """Same-shaped index instances must share one compiled search program —
+    the seed defined (and jitted) the query per instance, so every tenant
+    or index rebuild retraced identical programs."""
+
+    def _cache_size(self, fn):
+        return fn._cache_size()
+
+    def test_ivf_shares_compiled_query(self):
+        from repro.mips.ivf import _query_xla
+
+        V, q = _make_data(300, 16, 10)
+        ix1 = IVFIndex(V, seed=0, train_iters=2, use_pallas="never")
+        ix1.query(q, 5)
+        size_after_first = self._cache_size(_query_xla)
+        ix2 = IVFIndex(V, seed=1, train_iters=2, use_pallas="never")
+        ix2.query(q, 5)
+        assert self._cache_size(_query_xla) == size_after_first
+
+    def test_flat_and_lsh_share_compiled_query(self):
+        from repro.mips.flat import _flat_abs_query, _flat_query
+        from repro.mips.lsh import _lsh_query
+
+        V, q = _make_data(256, 16, 11)
+        for cls, fn, kw in ((FlatIndex, _flat_query, dict(use_pallas="never")),
+                            (FlatAbsIndex, _flat_abs_query,
+                             dict(use_pallas="never")),
+                            (LSHIndex, _lsh_query, dict(seed=0))):
+            cls(V, **kw).query(q, 5)
+            size = self._cache_size(fn)
+            kw2 = dict(kw, seed=1) if "seed" in kw else kw
+            cls(V, **kw2).query(q, 5)
+            assert self._cache_size(fn) == size, cls.__name__
+
+
 class TestLSH:
     def test_reasonable_recall(self):
         V, q = _make_data(1024, 32, 3)
