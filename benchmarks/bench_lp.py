@@ -1,19 +1,36 @@
-"""Fig. 5 / Fig. 8 / Fig. 9: scalar-private LP solving.
+"""Fig. 5 / Fig. 8 / Fig. 9: scalar-private LP solving, plus the fused-
+driver comparison (DESIGN.md §6).
 
 Violated-constraint parity (exact vs fast) and per-iteration runtime
-scaling with the number of constraints m for flat vs IVF vs NSW indices.
-Paper fixes d=20, Δ∞=0.1, α=0.5.
+scaling with the number of constraints m for flat vs IVF indices — each
+measured on both drivers, with the host-loop/fused-scan speedup recorded
+in the derived column (``fused_speedup``) so BENCH_results.json tracks the
+dispatch-amortization win across PRs. A fixed-size dual-solver pair rides
+along. Paper fixes d=20, Δ∞=0.1, α=0.5. NSW (host-only) runs in ``--full``.
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import med_us, row
-from repro.core import ScalarLPConfig, solve_scalar_lp
-from repro.core.queries import random_feasible_lp
-from repro.mips import FlatIndex, IVFIndex, NSWIndex
+from repro.core import (DualLPConfig, ScalarLPConfig,
+                        solve_constraint_private_lp, solve_scalar_lp)
+from repro.core.queries import random_feasible_lp, random_packing_lp
+from repro.mips import FlatIndex, IVFIndex, NSWIndex, lp_dual_rows, lp_scalar_rows
+
+
+def _pair_rows(name: str, host_res, fused_res, detail: str) -> list:
+    host_us = med_us(host_res.iter_seconds)
+    fused_us = med_us(fused_res.iter_seconds)
+    speedup = host_us / max(fused_us, 1e-9)
+    return [
+        row(f"{name}/host", host_us, detail.format(res=host_res)),
+        row(f"{name}/fused", fused_us,
+            detail.format(res=fused_res) + f";fused_speedup={speedup:.2f}"),
+    ]
 
 
 def run(quick: bool = True):
@@ -21,26 +38,60 @@ def run(quick: bool = True):
     ms = [2048, 16384] if quick else [4096, 32768, 131072, 262144]
     T = 60 if quick else 200
     rows = []
+    sc_detail = "violated={res.violated_frac:.4f}"
     for m in ms:
         A, b, _ = random_feasible_lp(jax.random.PRNGKey(0), m=m, d=d)
-        Ab = np.concatenate([np.asarray(A), np.asarray(b)[:, None]], axis=1)
-        exact = solve_scalar_lp(A, b, ScalarLPConfig(T=T, mode="exact"),
-                                jax.random.PRNGKey(1))
-        rows.append(row(f"lp/m{m}/exact", med_us(exact.iter_seconds),
-                        f"violated={exact.violated_frac:.4f}"))
-        for kind in ("flat", "ivf", "nsw"):
+        Ab = lp_scalar_rows(np.asarray(A), np.asarray(b))
+        rows += _pair_rows(
+            f"lp/m{m}/exact",
+            solve_scalar_lp(A, b, ScalarLPConfig(T=T, mode="exact",
+                                                 driver="host"),
+                            jax.random.PRNGKey(1)),
+            solve_scalar_lp(A, b, ScalarLPConfig(T=T, mode="exact",
+                                                 driver="fused"),
+                            jax.random.PRNGKey(1)),
+            sc_detail)
+        kinds = ("flat", "ivf") if quick else ("flat", "ivf", "nsw")
+        for kind in kinds:
             if kind == "flat":
                 index = FlatIndex(Ab, use_pallas="never")
             elif kind == "ivf":
                 index = IVFIndex(Ab, seed=0, train_iters=4)
             else:
                 index = NSWIndex(Ab, deg=16, ef=48, rounds=3, seed=0)
-            res = solve_scalar_lp(A, b, ScalarLPConfig(T=T, mode="fast"),
-                                  jax.random.PRNGKey(1), index=index)
-            rows.append(row(
-                f"lp/m{m}/{kind}", med_us(res.iter_seconds),
-                f"violated={res.violated_frac:.4f}"
-                f";scored={int(np.mean(res.n_scored))}"))
+            cfg_host = ScalarLPConfig(T=T, mode="fast", driver="host")
+            host = solve_scalar_lp(A, b, cfg_host, jax.random.PRNGKey(1),
+                                   index=index)
+            detail = (sc_detail
+                      + f";scored={int(np.mean(host.n_scored))}")
+            if getattr(index, "supports_in_graph", False):
+                cfg_fused = ScalarLPConfig(T=T, mode="fast", driver="fused")
+                fused = solve_scalar_lp(A, b, cfg_fused, jax.random.PRNGKey(1),
+                                        index=index)
+                rows += _pair_rows(f"lp/m{m}/{kind}", host, fused, detail)
+            else:
+                rows.append(row(f"lp/m{m}/{kind}/host",
+                                med_us(host.iter_seconds),
+                                detail.format(res=host)))
+
+    # constraint-private dual solver, fixed size (§4.2)
+    m2, d2 = (150, 256) if quick else (300, 1024)
+    A2, b2, c2 = random_packing_lp(jax.random.PRNGKey(2), m=m2, d=d2)
+    opt = float(c2 @ jnp.full((d2,), 1.0 / d2)) * 0.5
+    index = FlatIndex(lp_dual_rows(np.asarray(A2), np.asarray(c2), opt),
+                      use_pallas="never")
+    dual_detail = "n_violated={res.n_violated}"
+    rows += _pair_rows(
+        f"lp_dual/d{d2}",
+        solve_constraint_private_lp(
+            A2, b2, c2, opt, DualLPConfig(T=T, s=12, mode="fast",
+                                          driver="host"),
+            jax.random.PRNGKey(3), index=index),
+        solve_constraint_private_lp(
+            A2, b2, c2, opt, DualLPConfig(T=T, s=12, mode="fast",
+                                          driver="fused"),
+            jax.random.PRNGKey(3), index=index),
+        dual_detail)
     return rows
 
 

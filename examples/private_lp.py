@@ -1,10 +1,13 @@
-"""Privately solving LPs with Fast-MWEM (paper §4).
+"""Privately solving LPs with Fast-MWEM (paper §4, DESIGN.md §6).
 
 1. Scalar-private feasibility LP (Alg. 3): Ax ≤ b over the simplex, b
    private with Δ∞ sensitivity — fast constraint selection via k-MIPS over
-   the concatenated rows [A_i, b_i].
+   the concatenated rows [A_i, b_i], run on both drivers (the fused scan
+   dispatches the whole T-iteration loop once).
 2. Constraint-private packing LP (§4.2): dense MWU on the dual with
-   Bregman projections; the dual oracle maximizes ⟨y, N_j⟩ via LazyEM.
+   in-graph Bregman projections; the dual oracle maximizes ⟨y, N_j⟩.
+3. The serving tier: tenants draw budget-admitted private solves from a
+   `ReleaseService` LP workload through batched waves.
 
     PYTHONPATH=src python examples/private_lp.py
 """
@@ -15,10 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DualLPConfig, ScalarLPConfig,
+from repro.core import (DualLPConfig, MWEMConfig, ScalarLPConfig,
                         solve_constraint_private_lp, solve_scalar_lp)
 from repro.core.queries import random_feasible_lp, random_packing_lp
-from repro.mips import FlatIndex, IVFIndex
+from repro.mips import FlatIndex, IVFIndex, lp_dual_rows, lp_scalar_rows
+from repro.serve import ReleaseService
 
 # ---- scalar-private LP -------------------------------------------------
 m, d = 4000, 20
@@ -31,24 +35,48 @@ exact = solve_scalar_lp(A, b, ScalarLPConfig(T=150, mode="exact"),
 print(f"  exhaustive: violated={exact.violated_frac:.4f} "
       f"wall={time.time()-t0:.1f}s")
 
-Ab = np.concatenate([np.asarray(A), np.asarray(b)[:, None]], axis=1)
-for name, index in (("flat", FlatIndex(Ab, use_pallas='never')),
+Ab = lp_scalar_rows(np.asarray(A), np.asarray(b))
+for name, index in (("flat", FlatIndex(Ab, use_pallas="never")),
                     ("ivf", IVFIndex(Ab, seed=0))):
-    t0 = time.time()
-    fast = solve_scalar_lp(A, b, ScalarLPConfig(T=150, mode="fast"),
-                           jax.random.PRNGKey(1), index=index)
-    print(f"  fast-{name:4s}: violated={fast.violated_frac:.4f} "
-          f"scored/iter={int(np.mean(fast.n_scored))} "
-          f"wall={time.time()-t0:.1f}s")
+    for driver in ("host", "fused"):
+        t0 = time.time()
+        cfg = ScalarLPConfig(T=150, mode="fast", driver=driver)
+        fast = solve_scalar_lp(A, b, cfg, jax.random.PRNGKey(1), index=index)
+        print(f"  fast-{name:4s}/{driver:5s}: "
+              f"violated={fast.violated_frac:.4f} "
+              f"scored/iter={int(np.mean(fast.n_scored))} "
+              f"wall={time.time()-t0:.1f}s")
 
 # ---- constraint-private packing LP ------------------------------------
 m2, d2 = 300, 128
 A2, b2, c2 = random_packing_lp(jax.random.PRNGKey(2), m=m2, d=d2)
 opt = float(c2 @ jnp.full((d2,), 1.0 / d2)) * 0.5
 print(f"\nconstraint-private packing LP: m={m2}, d={d2}, OPT={opt:.3f}")
-N = np.asarray(-(opt / c2)[:, None] * A2.T)
+N = lp_dual_rows(np.asarray(A2), np.asarray(c2), opt)
 res = solve_constraint_private_lp(
     A2, b2, c2, opt, DualLPConfig(T=150, s=12, alpha=1.0, mode="fast"),
     jax.random.PRNGKey(3), index=FlatIndex(N, use_pallas="never"))
-print(f"  violated beyond α: {res.n_violated}/{m2} "
+print(f"  fused dual: violated beyond α: {res.n_violated}/{m2} "
       f"(density bound s−1={12-1}) value={float(res.x_bar @ c2):.3f}")
+
+# ---- LP releases through the serving tier -----------------------------
+print("\nLP releases through ReleaseService (budget-admitted waves):")
+U, M = 64, 128
+Q = jax.random.bernoulli(jax.random.PRNGKey(9), 0.3, (M, U)).astype(jnp.float32)
+svc = ReleaseService(Q, MWEMConfig(eps=0.5, T=8, mode="fast"), wave_size=2,
+                     auto_flush=False)
+svc.attach_lp(A, b, ScalarLPConfig(eps=0.5, T=60, mode="fast"))
+h = np.full((U,), 1.0 / U, np.float32)
+svc.create_session("analyst-a", eps_budget=5.0, delta_budget=0.1,
+                   h=h, n_records=1000)
+svc.create_session("analyst-b", eps_budget=0.05, delta_budget=0.1,
+                   h=h, n_records=1000)
+ok = svc.submit_lp("analyst-a", seed=7)
+tight = svc.submit_lp("analyst-b")          # budget too small → rejected
+print(f"  analyst-a: {ok.status} "
+      f"(projected ε={ok.decision.eps_projected:.3f})")
+print(f"  analyst-b: {tight.status} ({tight.decision.reason})")
+svc.flush()
+rel = svc.session("analyst-a").latest_lp
+print(f"  released x̄: violated={rel.violated_frac:.4f} "
+      f"ε-cost={rel.eps_cost:.3f}  stats={svc.stats.as_dict()}")

@@ -26,8 +26,23 @@ from repro.core.mwem import (
     run_mwem_fused,
 )
 from repro.core.distributed import run_mwem_sharded, run_mwem_sharded_batch
-from repro.core.lp_scalar import ScalarLPConfig, solve_scalar_lp
-from repro.core.lp_dual import DualLPConfig, solve_constraint_private_lp
+from repro.core.lp_scalar import (
+    ScalarLPBatchResult,
+    ScalarLPConfig,
+    ScalarLPResult,
+    scalar_lp_release_cost,
+    solve_lp_batch,
+    solve_scalar_lp,
+    solve_scalar_lp_fused,
+)
+from repro.core.lp_dual import (
+    DualLPConfig,
+    DualLPResult,
+    dual_lp_release_cost,
+    lp_release_cost,
+    solve_constraint_private_lp,
+    solve_constraint_private_lp_fused,
+)
 
 __all__ = [
     "gumbel",
@@ -55,8 +70,17 @@ __all__ = [
     "run_mwem_sharded",
     "run_mwem_sharded_batch",
     "mwem_iteration_counts",
+    "ScalarLPBatchResult",
     "ScalarLPConfig",
+    "ScalarLPResult",
+    "scalar_lp_release_cost",
+    "solve_lp_batch",
     "solve_scalar_lp",
+    "solve_scalar_lp_fused",
     "DualLPConfig",
+    "DualLPResult",
+    "dual_lp_release_cost",
+    "lp_release_cost",
     "solve_constraint_private_lp",
+    "solve_constraint_private_lp_fused",
 ]

@@ -9,6 +9,8 @@ descending, the constraint is piecewise linear in ``c`` with breakpoints
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -31,11 +33,18 @@ def _solve_c(a: jax.Array, s: float) -> jax.Array:
     return jnp.where(jnp.any(valid), c_cand[idx], c_cand[-1])
 
 
+@partial(jax.jit, static_argnames=("s",))
 def bregman_project_dense(a: jax.Array, s: float) -> jax.Array:
     """KL (Bregman) projection of measure ``a`` to the 1/s-dense simplex.
 
     Returns a distribution y with ``‖y‖_∞ ≤ 1/s`` and ``Σy = 1`` minimizing
     ``KL(y ‖ a/Σa)`` (Def. A.2). For s ≤ 1 this is just normalization.
+
+    ``s`` is a static: the s ≤ 1 short-circuit is a Python branch, and the
+    fused dual-LP driver inlines this projection into its `lax.scan` body
+    (every iteration projects the constraint distribution in-graph —
+    DESIGN.md §6). Jitted at module level so host-loop callers share one
+    compiled program per (shape, s).
     """
     a = jnp.maximum(a, 1e-38)
     if s <= 1.0:

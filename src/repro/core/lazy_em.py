@@ -41,6 +41,22 @@ def default_tail_cap(n: int) -> int:
     return min(n, max(64, 4 * math.ceil(math.sqrt(n))))
 
 
+_FALLBACK_TAG = 1
+
+
+def fallback_key(k_sel: jax.Array) -> jax.Array:
+    """Key for the exhaustive redo after a tail-buffer overflow.
+
+    The lazy draw consumed splits of ``k_sel``; redoing the overflowed step
+    with ``k_sel`` itself would correlate the fallback Gumbels with the
+    failed lazy draw's stream. Folding in a tag gives the redo its own
+    stream while keeping host and fused drivers bitwise-aligned (both
+    derive the same key from the same chain position). Consumed by the LP
+    drivers (lp_scalar / lp_dual) on every overflow fallback.
+    """
+    return jax.random.fold_in(k_sel, _FALLBACK_TAG)
+
+
 class LazyEMResult(NamedTuple):
     index: jax.Array        # selected candidate index in [n] (int32 scalar)
     n_scored: jax.Array     # number of score evaluations used (k + C_unique)

@@ -12,7 +12,8 @@ from repro.mips.flat import FlatIndex, FlatAbsIndex
 from repro.mips.ivf import IVFIndex, ShardedIVFIndex
 from repro.mips.lsh import LSHIndex
 from repro.mips.nsw import NSWIndex
-from repro.mips.transform import mips_to_knn_keys, mips_to_knn_query
+from repro.mips.transform import (lp_dual_rows, lp_scalar_rows,
+                                  mips_to_knn_keys, mips_to_knn_query)
 
 INDEX_TYPES = {
     "flat": FlatIndex,
@@ -40,6 +41,8 @@ __all__ = [
     "ShardedIVFIndex",
     "LSHIndex",
     "NSWIndex",
+    "lp_dual_rows",
+    "lp_scalar_rows",
     "mips_to_knn_keys",
     "mips_to_knn_query",
     "build_index",

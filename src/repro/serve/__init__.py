@@ -22,6 +22,7 @@ from repro.serve.session import (
     Answer,
     AnswerCache,
     ReleasedHistogram,
+    ReleasedLP,
     TenantSession,
     query_fingerprint,
 )
@@ -37,6 +38,7 @@ __all__ = [
     "Answer",
     "AnswerCache",
     "ReleasedHistogram",
+    "ReleasedLP",
     "TenantSession",
     "query_fingerprint",
 ]

@@ -46,6 +46,15 @@ class AdmissionController:
         """Convenience wrapper: derive the cost bundle, then `check`."""
         return self.check(session, release_cost(cfg, m, U, index=index))
 
+    def check_lp(self, session: TenantSession, cfg, A,
+                 index=None) -> AdmissionDecision:
+        """Convenience wrapper for LP solves (either solver's config):
+        derive the `lp_release_cost` bundle, then `check` — the same
+        preview-don't-spend contract as histogram releases."""
+        from repro.core.lp_dual import lp_release_cost
+
+        return self.check(session, lp_release_cost(cfg, A, index=index))
+
     def check(self, session: TenantSession, cost_bundle,
               reserved=None) -> AdmissionDecision:
         """Decide on a request whose cost is the pre-computed

@@ -24,6 +24,14 @@ Budget reservations: a queued-but-unexecuted request already counts against
 its tenant's budget at admission time (its cost bundle is held as a
 reservation and previewed together with the ledger), so two requests that
 individually fit but jointly overspend cannot both be admitted.
+
+The LP workload (paper §4, DESIGN.md §6) rides the same machinery:
+`attach_lp` registers a scalar-private feasibility LP (public A,
+curator-held private b, one shared k-MIPS index over [A_i, b_i]);
+`submit_lp` admission-gates on the solver's own `lp_release_cost` bundle
+(reservations pool across both workloads), and admitted solves drain in
+fixed-size waves through one `solve_lp_batch` dispatch — per-lane ledgers,
+pad-by-replication, and marginal-cost replay identical to histogram waves.
 """
 
 from __future__ import annotations
@@ -38,24 +46,29 @@ import numpy as np
 
 from repro.core.accountant import PrivacyLedger
 from repro.core.distributed import _data_shards, run_mwem_sharded_batch
+from repro.core.lp_dual import lp_release_cost
+from repro.core.lp_scalar import ScalarLPConfig, solve_lp_batch
 from repro.core.mwem import MWEMConfig, release_cost, run_mwem_batch
-from repro.mips import (FlatAbsIndex, IVFIndex, LSHIndex, ShardedIVFIndex,
-                        augment_complement)
+from repro.mips import (FlatAbsIndex, FlatIndex, IVFIndex, LSHIndex,
+                        ShardedIVFIndex, augment_complement, lp_scalar_rows)
 from repro.serve.admission import AdmissionController, AdmissionDecision
-from repro.serve.session import Answer, ReleasedHistogram, TenantSession
+from repro.serve.session import (Answer, ReleasedHistogram, ReleasedLP,
+                                 TenantSession)
 
 
 @dataclass
 class ReleaseTicket:
-    """Handle returned by `submit`; resolved by the wave that executes it."""
+    """Handle returned by `submit`/`submit_lp`; resolved by the wave that
+    executes it."""
 
     ticket_id: int
     tenant_id: str
     seed: int
     status: str                      # "queued" | "rejected" | "done"
     decision: AdmissionDecision
+    kind: str = "mwem"               # "mwem" | "lp"
     cost_bundle: tuple = ()          # (events, gamma, slack) reservation
-    release: Optional[ReleasedHistogram] = None
+    release: Optional[object] = None  # ReleasedHistogram | ReleasedLP
     final_error: float = float("nan")
 
 
@@ -63,12 +76,29 @@ class ReleaseTicket:
 class ServiceStats:
     dispatches: int = 0
     released: int = 0
+    lp_released: int = 0
     rejected: int = 0
     padded_slots: int = 0
 
     def as_dict(self) -> dict:
         return dict(dispatches=self.dispatches, released=self.released,
-                    rejected=self.rejected, padded_slots=self.padded_slots)
+                    lp_released=self.lp_released, rejected=self.rejected,
+                    padded_slots=self.padded_slots)
+
+
+@dataclass
+class _LPWorkload:
+    """The service's scalar-LP workload (DESIGN.md §6): public constraint
+    matrix A, the curator-held private bounds b, the release config, and
+    the k-MIPS index over the concatenated rows [A_i, b_i]. Tenants are
+    budget principals drawing private solves against it."""
+
+    A: jax.Array
+    b: jax.Array
+    cfg: ScalarLPConfig
+    index: Optional[object]
+    cost: tuple                      # (events, gamma, slack) per release
+    pending: List[ReleaseTicket]
 
 
 class ReleaseService:
@@ -105,6 +135,7 @@ class ReleaseService:
         self.sessions: Dict[str, TenantSession] = {}
         self.stats = ServiceStats()
         self._pending: "OrderedDict[int, List[ReleaseTicket]]" = OrderedDict()
+        self.lp: Optional[_LPWorkload] = None
         self._next_ticket = 0
         self._next_release = 0
         self._next_seed = seed
@@ -165,10 +196,15 @@ class ReleaseService:
         return replace(self.cfg, n_records=n_records)
 
     def _reserved(self, tenant_id: str):
-        """Cost bundles of this tenant's queued-but-unexecuted tickets."""
+        """Cost bundles of this tenant's queued-but-unexecuted tickets —
+        across *both* workloads: a queued LP solve reserves budget against
+        a pending histogram release and vice versa."""
+        groups = list(self._pending.values())
+        if self.lp is not None:
+            groups.append(self.lp.pending)
         events: list = []
         gamma = slack = 0.0
-        for group in self._pending.values():
+        for group in groups:
             for t in group:
                 if t.tenant_id == tenant_id:
                     ev, g, s = t.cost_bundle
@@ -209,17 +245,156 @@ class ReleaseService:
             self._run_wave(sess.n_records)
         return ticket
 
+    # ----------------------------------------------------------------- LP
+    def attach_lp(self, A, b, cfg: Optional[ScalarLPConfig] = None,
+                  index_kind: str = "flat", seed: int = 0,
+                  use_pallas: str = "auto") -> None:
+        """Register the service's scalar-LP workload (paper §4.1).
+
+        ``A`` is the public constraint matrix, ``b`` the curator-held
+        private bounds (Δ∞ sensitivity); tenants draw private solves
+        against their budgets via `submit_lp`. Fast mode builds the k-MIPS
+        index over the concatenated rows [A_i, b_i] once, here — every LP
+        wave shares it and the compiled `solve_lp_batch` executable.
+        """
+        if self.lp is not None:
+            raise ValueError("an LP workload is already attached")
+        if self.mesh is not None:
+            raise ValueError("LP waves are not mesh-sharded; attach to an "
+                             "off-mesh service")
+        A = jnp.asarray(A, jnp.float32)
+        b = jnp.asarray(b, jnp.float32)
+        cfg = cfg or ScalarLPConfig()
+        if cfg.driver == "host":
+            # refuse now, not at wave time: _run_lp_wave pops its tickets
+            # before dispatching, so a late solve_lp_batch rejection would
+            # strand admitted (budget-reserved) requests
+            raise ValueError("LP waves run the fused batch driver; "
+                             "cfg.driver='host' cannot serve")
+        index = None
+        if cfg.mode == "fast":
+            rows = lp_scalar_rows(np.asarray(A), np.asarray(b))
+            if index_kind == "flat":
+                index = FlatIndex(rows, use_pallas=use_pallas)
+            elif index_kind == "ivf":
+                index = IVFIndex(rows, seed=seed, use_pallas=use_pallas)
+            else:
+                raise ValueError(f"unknown LP index kind {index_kind!r}")
+        self.lp = _LPWorkload(A=A, b=b, cfg=cfg, index=index,
+                              cost=lp_release_cost(cfg, A, index=index),
+                              pending=[])
+
+    def submit_lp(self, tenant_id: str,
+                  seed: Optional[int] = None) -> ReleaseTicket:
+        """Request one private LP solve for a tenant.
+
+        Admission previews the tenant ledger with the solve's exact cost
+        bundle (`lp_release_cost` — the solver's own `lp_em` /
+        `approx_slack` / `index_failure` schedule) plus any still-queued
+        reservations from either workload, exactly like `submit`.
+        """
+        if self.lp is None:
+            raise ValueError("no LP workload attached; call attach_lp first")
+        sess = self.sessions[tenant_id]
+        decision = self.admission.check(sess, self.lp.cost,
+                                        reserved=self._reserved(tenant_id))
+        ticket = ReleaseTicket(
+            ticket_id=self._next_ticket, tenant_id=tenant_id,
+            seed=self._next_seed if seed is None else seed,
+            status="queued" if decision.admitted else "rejected",
+            decision=decision, kind="lp", cost_bundle=self.lp.cost,
+        )
+        self._next_ticket += 1
+        if seed is None:
+            self._next_seed += 1
+        if not decision.admitted:
+            sess.rejected_count += 1
+            self.stats.rejected += 1
+            return ticket
+        self.lp.pending.append(ticket)
+        if self.auto_flush and len(self.lp.pending) >= self.wave_size:
+            self._run_lp_wave()
+        return ticket
+
     # -------------------------------------------------------------- waves
     def pending_count(self) -> int:
-        return sum(len(g) for g in self._pending.values())
+        n = sum(len(g) for g in self._pending.values())
+        if self.lp is not None:
+            n += len(self.lp.pending)
+        return n
 
     def flush(self) -> List[ReleaseTicket]:
-        """Drain every pending group through fixed-size waves."""
+        """Drain every pending group (histogram and LP) through fixed-size
+        waves."""
         done: List[ReleaseTicket] = []
         for n_records in list(self._pending):
             while self._pending.get(n_records):
                 done.extend(self._run_wave(n_records))
+        while self.lp is not None and self.lp.pending:
+            done.extend(self._run_lp_wave())
         return done
+
+    def _lane_cost(self, sess: TenantSession, snap, per_run: PrivacyLedger,
+                   k: int) -> tuple:
+        """Marginal composed (ε, δ) of a tenant's (k+1)-th lane in one wave:
+        replay the pre-dispatch snapshot plus k earlier lanes, then preview
+        one more — a plain before/after ledger diff would double-count when
+        one tenant holds several lanes."""
+        tight = self.admission.tight
+        ev0, g0, s0 = snap
+        scratch = PrivacyLedger(
+            target_delta_prime=sess.ledger.target_delta_prime)
+        scratch.events = ev0 + list(per_run.events) * k
+        scratch.index_failure_mass = g0 + k * per_run.index_failure_mass
+        scratch.approx_slack = s0 + k * per_run.approx_slack
+        before = scratch.composed(tight=tight)
+        after = scratch.preview(per_run.events,
+                                per_run.index_failure_mass,
+                                per_run.approx_slack, tight=tight)
+        return after[0] - before[0], after[1] - before[1]
+
+    def _run_lp_wave(self) -> List[ReleaseTicket]:
+        """Execute one LP wave: exactly ``wave_size`` seed lanes through one
+        `solve_lp_batch` dispatch — the same pad-by-replication, per-lane
+        ledger charging, and marginal-cost replay as histogram waves."""
+        lp = self.lp
+        wave = lp.pending[:self.wave_size]
+        del lp.pending[:self.wave_size]
+        n_pad = self.wave_size - len(wave)
+        self.stats.padded_slots += n_pad
+        lanes = wave + [wave[0]] * n_pad
+        keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in lanes])
+        ledgers: List[Optional[PrivacyLedger]] = [
+            self.sessions[t.tenant_id].ledger for t in wave
+        ] + [None] * n_pad
+        snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
+                 for t in wave}
+        result = solve_lp_batch(lp.A, lp.b, lp.cfg, keys, index=lp.index,
+                                ledgers=ledgers)
+        self.stats.dispatches += 1
+        x_bar = np.asarray(result.x_bar)
+        lanes_seen: Dict[str, int] = {}
+        for i, ticket in enumerate(wave):
+            sess = self.sessions[ticket.tenant_id]
+            k = lanes_seen.get(ticket.tenant_id, 0)
+            lanes_seen[ticket.tenant_id] = k + 1
+            eps_cost, delta_cost = self._lane_cost(
+                sess, snaps[ticket.tenant_id], result.ledger, k)
+            rel = ReleasedLP(
+                release_id=self._next_release,
+                x_bar=x_bar[i],
+                violated_frac=float(result.violated_fracs[i]),
+                eps_cost=eps_cost,
+                delta_cost=delta_cost,
+                seed=ticket.seed,
+            )
+            self._next_release += 1
+            sess.add_lp_release(rel)
+            ticket.release = rel
+            ticket.final_error = rel.violated_frac
+            ticket.status = "done"
+            self.stats.lp_released += 1
+        return wave
 
     def _run_wave(self, n_records: int) -> List[ReleaseTicket]:
         """Execute one wave: exactly ``wave_size`` lanes, one dispatch.
@@ -258,33 +433,19 @@ class ReleaseService:
                                     index=self.index, ledgers=ledgers)
         self.stats.dispatches += 1
         p_hat = np.asarray(result.p_hat)
-        per_run = result.ledger  # one lane's event bundle
         lanes_seen: Dict[str, int] = {}
-        tight = self.admission.tight
         for i, ticket in enumerate(wave):
             sess = self.sessions[ticket.tenant_id]
-            # marginal cost of *this* lane: replay the snapshot plus this
-            # tenant's earlier lanes in the wave, then preview one more —
-            # a plain before/after ledger diff would double-count when one
-            # tenant holds several lanes
             k = lanes_seen.get(ticket.tenant_id, 0)
             lanes_seen[ticket.tenant_id] = k + 1
-            ev0, g0, s0 = snaps[ticket.tenant_id]
-            scratch = PrivacyLedger(
-                target_delta_prime=sess.ledger.target_delta_prime)
-            scratch.events = ev0 + list(per_run.events) * k
-            scratch.index_failure_mass = g0 + k * per_run.index_failure_mass
-            scratch.approx_slack = s0 + k * per_run.approx_slack
-            before = scratch.composed(tight=tight)
-            after = scratch.preview(per_run.events,
-                                    per_run.index_failure_mass,
-                                    per_run.approx_slack, tight=tight)
+            eps_cost, delta_cost = self._lane_cost(
+                sess, snaps[ticket.tenant_id], result.ledger, k)
             rel = ReleasedHistogram(
                 release_id=self._next_release,
                 p_hat=p_hat[i],
                 final_error=float(result.final_errors[i]),
-                eps_cost=after[0] - before[0],
-                delta_cost=after[1] - before[1],
+                eps_cost=eps_cost,
+                delta_cost=delta_cost,
                 seed=ticket.seed,
             )
             self._next_release += 1

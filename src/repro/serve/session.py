@@ -44,6 +44,25 @@ class ReleasedHistogram:
     seed: int = 0
 
 
+@dataclass(frozen=True)
+class ReleasedLP:
+    """One private LP solution released for a tenant.
+
+    ``x_bar`` is the DP output: any function of x̄ *alone* is
+    post-processing and costs no further privacy. ``violated_frac`` is a
+    curator-side quality diagnostic — it touches the private ``b`` again
+    (same caveat as `ReleasedHistogram.final_error`, which touches h), so
+    a deployment that surfaces it to tenants should noise or withhold it.
+    """
+
+    release_id: int
+    x_bar: np.ndarray          # (d,) averaged simplex iterate
+    violated_frac: float       # fraction of constraints with A x̄ > b + α
+    eps_cost: float            # composed ε this release added to the ledger
+    delta_cost: float          # composed δ this release added to the ledger
+    seed: int = 0
+
+
 @dataclass
 class Answer:
     value: float
@@ -99,6 +118,7 @@ class TenantSession:
     delta_budget: float
     ledger: PrivacyLedger = field(default_factory=PrivacyLedger)
     releases: List[ReleasedHistogram] = field(default_factory=list)
+    lp_releases: List[ReleasedLP] = field(default_factory=list)
     cache: AnswerCache = field(default_factory=AnswerCache)
     rejected_count: int = 0
 
@@ -125,6 +145,13 @@ class TenantSession:
 
     def add_release(self, rel: ReleasedHistogram) -> None:
         self.releases.append(rel)
+
+    @property
+    def latest_lp(self) -> Optional[ReleasedLP]:
+        return self.lp_releases[-1] if self.lp_releases else None
+
+    def add_lp_release(self, rel: ReleasedLP) -> None:
+        self.lp_releases.append(rel)
 
     def _release(self, release_id: Optional[int]) -> ReleasedHistogram:
         if not self.releases:

@@ -1,4 +1,12 @@
-"""Statistical + unit tests for the Gumbel / EM / LazyEM machinery."""
+"""Statistical + unit tests for the Gumbel / EM / LazyEM machinery,
+including the mechanism-statistics tier for the LP scoring geometries
+(§4.1 ``A@x − b`` and §4.2 ``N@y`` — the distributions the fast-mode LP
+solvers must sample from).
+
+Large-trial distribution checks and hypothesis property suites carry the
+``slow`` marker: CI's tier-1 fast lane deselects them (``-m "not slow"``)
+and a separate lane runs them on their own.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -6,9 +14,14 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.core.bregman import bregman_project_dense
 from repro.core.gumbel import gumbel, tail_prob, truncated_gumbel
 from repro.core.em import exact_em, em_scores
 from repro.core.lazy_em import lazy_em, lazy_em_from_topk, _complement_shift
+from repro.core.lp_dual import _dual_update
+from repro.core.lp_scalar import _lp_update
+from repro.core.queries import random_feasible_lp, random_packing_lp
+from repro.mips import FlatIndex, lp_dual_rows, lp_scalar_rows
 
 
 def _empirical_dist(sample_fn, n, trials, seed=0):
@@ -41,6 +54,7 @@ class TestGumbel:
             g = truncated_gumbel(key, (20_000,), B)
             assert bool(jnp.all(g > B)), f"B={B}"
 
+    @pytest.mark.slow
     def test_truncated_gumbel_matches_conditional_law(self):
         # Compare with rejection sampling from the unconditional Gumbel.
         B = 0.5
@@ -54,6 +68,7 @@ class TestGumbel:
 
 
 class TestExactEM:
+    @pytest.mark.slow
     def test_gumbel_max_matches_softmax(self):
         utilities = jnp.array([0.0, 1.0, 2.0, 0.5, -1.0])
         eps, sens = 2.0, 1.0
@@ -65,6 +80,7 @@ class TestExactEM:
 
 
 class TestComplementShift:
+    @pytest.mark.slow
     @given(st.integers(2, 60), st.integers(1, 10), st.integers(0, 10_000))
     @settings(max_examples=60, deadline=None)
     def test_maps_to_complement(self, n, k, seed):
@@ -78,6 +94,7 @@ class TestComplementShift:
 
 
 class TestLazyEM:
+    @pytest.mark.slow
     def test_matches_exact_em_distribution(self):
         scores = jnp.array([3.0, 2.5, 2.0, 1.0, 0.5, 0.0, -0.5, -1.0, -2.0, -3.0])
         n = scores.shape[0]
@@ -86,6 +103,7 @@ class TestLazyEM:
             lambda k: lazy_em(k, scores, k=3, tail_cap=8 * n).index, n, 60_000)
         assert _tv(emp, target) < 0.015
 
+    @pytest.mark.slow
     def test_uniform_scores(self):
         # worst case for the tail bound: everything survives the margin
         n = 16
@@ -94,6 +112,7 @@ class TestLazyEM:
             lambda k: lazy_em(k, scores, k=4, tail_cap=8 * n).index, n, 40_000)
         assert _tv(emp, np.full(n, 1 / n)) < 0.02
 
+    @pytest.mark.slow
     def test_tail_count_expectation(self):
         # Mussmann et al.: E[C] ≤ n/k
         n, k = 400, 20
@@ -115,6 +134,7 @@ class TestLazyEM:
             seen = seen or bool(out.overflow)
         assert seen
 
+    @pytest.mark.slow
     def test_alg6_margin_slack_preserves_distribution(self):
         """Alg. 6: with a c-approximate top-k and B lowered by c, sampling is exact."""
         scores = jnp.array([2.0, 1.9, 1.8, 1.2, 1.1, 0.4, 0.0, -0.7])
@@ -134,6 +154,7 @@ class TestLazyEM:
         emp = _empirical_dist(sample, n, 60_000)
         assert _tv(emp, target) < 0.015
 
+    @pytest.mark.slow
     def test_alg5_ratio_bounds(self):
         """Thm F.4: approximate top-k without slack stays within e^{±c}."""
         scores = jnp.array([2.0, 1.9, 1.8, 1.2, 1.1, 0.4, 0.0, -0.7])
@@ -154,6 +175,7 @@ class TestLazyEM:
         assert np.all(ratio < np.exp(c) * 1.15)
         assert np.all(ratio > np.exp(-c) * 0.85)
 
+    @pytest.mark.slow
     @given(st.integers(4, 64), st.integers(1, 8), st.integers(0, 1000))
     @settings(max_examples=30, deadline=None)
     def test_winner_always_valid(self, n, k, seed):
@@ -163,3 +185,145 @@ class TestLazyEM:
         out = lazy_em(jax.random.PRNGKey(seed + 1), scores, k=k, tail_cap=4 * n)
         assert 0 <= int(out.index) < n
         assert int(out.n_scored) <= 5 * n + k
+
+
+def _chi_square_stat(counts: np.ndarray, probs: np.ndarray, trials: int) -> float:
+    expected = trials * probs
+    return float(np.sum((counts - expected) ** 2 / expected))
+
+
+def _chi_square_threshold(dof: int) -> float:
+    """Mean + 5σ of a χ²(dof) variable — a ≈3e-5 false-positive bound
+    without a scipy dependency."""
+    return dof + 5.0 * np.sqrt(2.0 * dof)
+
+
+class TestLPSelectionGeometry:
+    """Mechanism statistics for the LP solvers' fast-mode selection: the
+    lazy path over a k-MIPS probe must sample the *exact* EM softmax over
+    the LP score geometries (§4.1 scalar, §4.2 dual) — the distribution
+    contract `TestLazyEM` asserts on synthetic scores, re-asserted on the
+    real scoring pipelines (index probe + concatenated-row tail gathers)."""
+
+    @pytest.mark.slow
+    def test_scalar_fast_selection_matches_em_softmax(self):
+        """χ² check: fast-mode constraint-selection frequencies match the
+        EM softmax over ``(A@x − b)·scale``."""
+        m, d, trials = 40, 8, 40_000
+        A, b, _ = random_feasible_lp(jax.random.PRNGKey(0), m=m, d=d)
+        Ab = jnp.asarray(lp_scalar_rows(np.asarray(A), np.asarray(b)))
+        x = jnp.full((d,), 1.0 / d, jnp.float32)   # the t=0 iterate
+        raw_scores = np.asarray(A @ x - b)
+        # bound the scaled spread so every cell's expected count is ≳15
+        scale = 4.0 / float(raw_scores.max() - raw_scores.min())
+        target = np.asarray(jax.nn.softmax(jnp.asarray(raw_scores * scale)))
+
+        index = FlatIndex(Ab, use_pallas="never")
+        xq = jnp.concatenate([x, -jnp.ones((1,), x.dtype)])
+        topk_idx, topk_raw = index.query(xq, 6)
+
+        def sample(key):
+            return lazy_em_from_topk(
+                key, topk_idx, topk_raw * scale, m,
+                score_fn=lambda i: (Ab[i] @ xq) * scale,
+                tail_cap=8 * m).index
+
+        idx = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(1), trials))
+        counts = np.bincount(np.asarray(idx), minlength=m)
+        stat = _chi_square_stat(counts, target, trials)
+        assert stat < _chi_square_threshold(m - 1), stat
+
+    @pytest.mark.slow
+    def test_dual_fast_selection_matches_em_softmax(self):
+        """χ² check on the dual geometry: vertex-selection frequencies
+        match the EM softmax over ``(N@y)·scale`` at a 1/s-dense y."""
+        m, d, trials = 32, 24, 40_000
+        A, b, c = random_packing_lp(jax.random.PRNGKey(2), m=m, d=d)
+        opt = float(c @ jnp.full((d,), 1.0 / d)) * 0.5
+        N = jnp.asarray(lp_dual_rows(np.asarray(A), np.asarray(c), opt))
+        y_raw = jnp.exp(jax.random.normal(jax.random.PRNGKey(3), (m,)))
+        y = bregman_project_dense(y_raw, 8.0)      # a realistic dual iterate
+        raw_scores = np.asarray(N @ y)
+        scale = 4.0 / float(raw_scores.max() - raw_scores.min())
+        target = np.asarray(jax.nn.softmax(jnp.asarray(raw_scores * scale)))
+
+        index = FlatIndex(N, use_pallas="never")
+        topk_idx, topk_raw = index.query(y, 5)
+
+        def sample(key):
+            return lazy_em_from_topk(
+                key, topk_idx, topk_raw * scale, d,
+                score_fn=lambda i: (N[i] @ y) * scale,
+                tail_cap=8 * d).index
+
+        idx = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(4), trials))
+        counts = np.bincount(np.asarray(idx), minlength=d)
+        stat = _chi_square_stat(counts, target, trials)
+        assert stat < _chi_square_threshold(d - 1), stat
+
+
+class TestLPScoreProperties:
+    """Hypothesis property tier for the LP iteration algebra."""
+
+    @pytest.mark.slow
+    @given(st.integers(2, 40), st.integers(2, 16), st.integers(0, 2000))
+    @settings(max_examples=40, deadline=None)
+    def test_score_identity(self, m, d, seed):
+        """§4.1 identity the index probe relies on:
+        ``Q_t(i) = ⟨[A_i, b_i], [x, −1]⟩ = A_i·x − b_i``."""
+        rng = np.random.default_rng(seed)
+        A = rng.standard_normal((m, d)).astype(np.float32)
+        b = rng.standard_normal(m).astype(np.float32)
+        x = rng.dirichlet(np.ones(d)).astype(np.float32)
+        Ab = lp_scalar_rows(A, b)
+        xq = np.concatenate([x, [-1.0]]).astype(np.float32)
+        np.testing.assert_allclose(Ab @ xq, A @ x - b, atol=1e-4)
+
+    @pytest.mark.slow
+    @given(st.integers(2, 40), st.integers(2, 16), st.integers(0, 2000))
+    @settings(max_examples=40, deadline=None)
+    def test_dual_rows_identity(self, m, d, seed):
+        """§4.2 identity: ``(N@y)_j = −(OPT/c_j)·⟨A[:, j], y⟩``."""
+        rng = np.random.default_rng(seed)
+        A = rng.uniform(0.1, 1.0, (m, d)).astype(np.float32)
+        c = rng.uniform(0.5, 1.5, d).astype(np.float32)
+        y = rng.dirichlet(np.ones(m)).astype(np.float32)
+        opt = float(rng.uniform(0.1, 2.0))
+        N = lp_dual_rows(A, c, opt)
+        np.testing.assert_allclose(
+            N @ y, -(opt / c) * (A.T @ y), rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.slow
+    @given(st.integers(2, 32), st.integers(0, 2000))
+    @settings(max_examples=40, deadline=None)
+    def test_lp_update_stays_on_simplex(self, d, seed):
+        """`_lp_update` invariants: the iterate is a distribution and the
+        log-weights stay drift-controlled (max = 0)."""
+        rng = np.random.default_rng(seed)
+        logX = jnp.asarray(rng.standard_normal(d), jnp.float32)
+        A_row = jnp.asarray(rng.standard_normal(d), jnp.float32)
+        logX2, x = _lp_update(logX, A_row, 0.3, 1.5)
+        x = np.asarray(x)
+        assert np.isclose(x.sum(), 1.0, atol=1e-5)
+        assert np.all(x >= 0)
+        assert np.isclose(float(jnp.max(logX2)), 0.0, atol=1e-6)
+
+    @pytest.mark.slow
+    @given(st.integers(4, 40), st.integers(2, 12), st.integers(1, 10),
+           st.integers(0, 2000))
+    @settings(max_examples=40, deadline=None)
+    def test_dual_update_stays_dense(self, m, d, s, seed):
+        """`_dual_step` invariant: the projected dual iterate is a 1/s-dense
+        distribution (Def. A.2) for any vertex play."""
+        s = min(s, m)
+        rng = np.random.default_rng(seed)
+        logY = jnp.asarray(rng.standard_normal(m), jnp.float32)
+        A = jnp.asarray(rng.uniform(0.1, 1.0, (m, d)), jnp.float32)
+        b = jnp.asarray(rng.uniform(0.5, 1.5, m), jnp.float32)
+        x_vertex = jnp.zeros((d,), jnp.float32).at[int(rng.integers(d))].set(
+            float(rng.uniform(0.1, 3.0)))
+        _, y = _dual_update(logY, x_vertex, A, b, 0.4, 2.0, int(s))
+        y = np.asarray(y)
+        assert np.isclose(y.sum(), 1.0, atol=1e-4)
+        assert y.max() <= 1.0 / s + 1e-4
+        assert np.all(y >= 0)

@@ -16,6 +16,7 @@ from repro.mips import FlatIndex, IVFIndex
 
 
 class TestBregman:
+    @pytest.mark.slow
     @given(st.integers(4, 100), st.integers(1, 20), st.integers(0, 500))
     @settings(max_examples=50, deadline=None)
     def test_projection_is_dense_distribution(self, n, s, seed):

@@ -340,6 +340,132 @@ class TestAnswerCache:
         assert svc.session("a").latest.release_id != svc.session("b").latest.release_id
 
 
+class TestLPWorkload:
+    """The LP serving path (DESIGN.md §6): submit_lp admission-gates on
+    `lp_release_cost`, waves ride one `solve_lp_batch` dispatch, and the
+    charging contract matches histogram releases."""
+
+    @staticmethod
+    def make_lp_service(Q, **kw):
+        from repro.core import ScalarLPConfig
+        from repro.core.queries import random_feasible_lp
+
+        svc = make_service(Q, **kw)
+        A, b, _ = random_feasible_lp(jax.random.PRNGKey(9), m=200, d=12)
+        svc.attach_lp(A, b, ScalarLPConfig(eps=0.5, T=10, mode="fast"))
+        return svc, A, b
+
+    def test_lp_wave_lane_matches_single_fused_run(self, workload):
+        from repro.core import solve_scalar_lp_fused
+
+        Q, h = workload
+        svc, A, b = self.make_lp_service(Q, wave_size=2, auto_flush=False)
+        for i in range(2):
+            add_tenant(svc, h, f"t{i}")
+            svc.submit_lp(f"t{i}", seed=40 + i)
+        svc.flush()
+        assert svc.stats.dispatches == 1
+        assert svc.stats.lp_released == 2
+        for i in range(2):
+            rel = svc.session(f"t{i}").latest_lp
+            solo = solve_scalar_lp_fused(A, b, svc.lp.cfg,
+                                         jax.random.PRNGKey(40 + i),
+                                         index=svc.lp.index)
+            np.testing.assert_allclose(rel.x_bar, np.asarray(solo.x_bar),
+                                       atol=1e-6)
+            assert rel.violated_frac == pytest.approx(solo.violated_frac,
+                                                      abs=1e-6)
+
+    def test_lp_admission_preview_equals_spend(self, workload):
+        from repro.core import lp_release_cost
+
+        Q, h = workload
+        svc, A, b = self.make_lp_service(Q, auto_flush=False)
+        sess = add_tenant(svc, h, "t0")
+        ticket = svc.submit_lp("t0")
+        assert ticket.kind == "lp" and ticket.status == "queued"
+        svc.flush()
+        spent = sess.ledger.composed()
+        assert spent[0] == pytest.approx(ticket.decision.eps_projected,
+                                         rel=1e-12)
+        exp = PrivacyLedger().preview(*lp_release_cost(svc.lp.cfg, A,
+                                                       index=svc.lp.index))
+        assert spent == exp
+        assert sess.latest_lp.eps_cost == pytest.approx(spent[0], rel=1e-12)
+
+    def test_lp_over_budget_rejected_before_spend(self, workload):
+        Q, h = workload
+        svc, _, _ = self.make_lp_service(Q)
+        sess = add_tenant(svc, h, "tiny", eps_budget=1e-4)
+        ticket = svc.submit_lp("tiny")
+        assert ticket.status == "rejected"
+        assert len(sess.ledger.events) == 0
+        assert svc.pending_count() == 0
+        assert "exceeds budget" in ticket.decision.reason
+
+    def test_reservations_pool_across_workloads(self, workload):
+        """A queued histogram release reserves budget against an LP submit:
+        jointly-overspending cross-workload requests can't both queue."""
+        from repro.core import lp_release_cost
+        from repro.core.mwem import release_cost
+
+        Q, h = workload
+        svc, A, _ = self.make_lp_service(Q, auto_flush=False)
+        mwem_eps, _ = PrivacyLedger().preview(
+            *release_cost(svc._group_cfg(N_RECORDS), M, U, index=svc.index))
+        joint_eps, _ = PrivacyLedger().preview(
+            list(release_cost(svc._group_cfg(N_RECORDS), M, U,
+                              index=svc.index)[0])
+            + list(lp_release_cost(svc.lp.cfg, A, index=svc.lp.index)[0]))
+        add_tenant(svc, h, "t0", eps_budget=(mwem_eps + joint_eps) / 2)
+        first = svc.submit("t0")
+        second = svc.submit_lp("t0")
+        assert first.status == "queued"
+        assert second.status == "rejected"
+        svc.flush()
+
+    def test_padded_lp_wave_charges_only_real_lanes(self, workload):
+        Q, h = workload
+        svc, _, _ = self.make_lp_service(Q, wave_size=4, auto_flush=False)
+        sess = add_tenant(svc, h, "solo")
+        svc.submit_lp("solo")
+        done = svc.flush()
+        assert [t.status for t in done] == ["done"]
+        assert svc.stats.padded_slots == 3
+        assert len(sess.lp_releases) == 1
+        # exactly one release's events, no pad-lane charges
+        assert len(sess.ledger.events) == svc.lp.cfg.T
+
+    def test_same_tenant_multi_lane_lp_costs_sum(self, workload):
+        Q, h = workload
+        svc, _, _ = self.make_lp_service(Q, wave_size=2, auto_flush=False)
+        sess = add_tenant(svc, h, "t0")
+        svc.submit_lp("t0")
+        svc.submit_lp("t0")
+        svc.flush()
+        assert svc.stats.dispatches == 1
+        costs = [r.eps_cost for r in sess.lp_releases]
+        assert sum(costs) == pytest.approx(sess.spent()[0], rel=1e-9)
+        assert costs[1] < costs[0]  # advanced composition
+
+    def test_attach_and_submit_guards(self, workload):
+        from repro.core import ScalarLPConfig
+
+        Q, h = workload
+        svc = make_service(Q)
+        add_tenant(svc, h, "t0")
+        with pytest.raises(ValueError, match="no LP workload"):
+            svc.submit_lp("t0")
+        svc2, A, b = self.make_lp_service(Q)
+        with pytest.raises(ValueError, match="already attached"):
+            svc2.attach_lp(A, b, ScalarLPConfig())
+        svc3 = make_service(Q)
+        # host driver must be refused at attach time — a wave-time failure
+        # would strand already-admitted (budget-reserved) tickets
+        with pytest.raises(ValueError, match="fused batch driver"):
+            svc3.attach_lp(A, b, ScalarLPConfig(driver="host"))
+
+
 class TestSessions:
     def test_from_tokens(self, workload):
         Q, _ = workload
