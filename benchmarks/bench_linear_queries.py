@@ -16,6 +16,14 @@ The IVF probe is measured under both routes (DESIGN.md §3): ``ivf`` pins
 ``use_pallas="auto"`` resolve — the fused `kernels.ivf_probe` stream on
 TPU, the same XLA probe off-TPU (recorded either way; the derived column
 carries the resolved path and the ratio against the pinned-XLA row).
+
+Every kind except ``megakernel`` pins ``cfg.use_pallas="never"`` — the
+classic pre-fusion scan body is the baseline these rows have always
+measured. ``megakernel`` reruns the IVF workload with
+``cfg.use_pallas="auto"`` (the DESIGN.md §7 carried-density step) and
+reports the iteration-time ratio against the classic ``ivf`` row plus the
+modeled HBM-bytes ratio from `analysis.roofline.mwem_step_roofline` — the
+bandwidth headroom the fusion buys on TPU.
 """
 
 from __future__ import annotations
@@ -24,6 +32,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import med_us, row
+from repro.analysis.roofline import mwem_step_roofline
 from repro.core import MWEMConfig, run_mwem
 from repro.core.queries import gaussian_histogram, random_binary_queries
 from repro.mips import FlatAbsIndex, IVFIndex, LSHIndex, NSWIndex, augment_complement
@@ -45,13 +54,14 @@ def run(quick: bool = True):
         aug = augment_complement(Qnp)
         flat_us = None
         ivf_us = None
-        for kind in ("flat_host", "flat", "ivf", "ivf_pallas", "lsh", "nsw"):
+        for kind in ("flat_host", "flat", "ivf", "ivf_pallas", "megakernel",
+                     "lsh", "nsw"):
             if kind in ("flat_host", "flat"):
                 index = FlatAbsIndex(Q)
             elif kind == "ivf":
                 index = IVFIndex(aug, seed=0, train_iters=4,
                                  use_pallas="never")
-            elif kind == "ivf_pallas":
+            elif kind in ("ivf_pallas", "megakernel"):
                 # identical structure (the numpy k-means build is
                 # seed-deterministic), kernel-routed probe
                 index = IVFIndex(aug, seed=0, train_iters=4,
@@ -62,7 +72,9 @@ def run(quick: bool = True):
                 index = NSWIndex(aug, deg=16, ef=48,
                                  rounds=3 if quick else 5, seed=0)
             cfg = MWEMConfig(T=T, mode="fast", n_records=n,
-                             driver="host" if kind == "flat_host" else "auto")
+                             driver="host" if kind == "flat_host" else "auto",
+                             use_pallas="auto" if kind == "megakernel"
+                             else "never")
             # First run traces + compiles (the fused driver amortizes that
             # into every iter_seconds entry); measure the second, which
             # re-dispatches the cached executable.
@@ -91,6 +103,14 @@ def run(quick: bool = True):
                 path = "pallas" if index._resolve_pallas() else "xla_ref"
                 derived += (f";path={path}"
                             f";vs_ivf_xla={ivf_us / us:.2f}x")
+            elif kind == "megakernel":
+                mega = mwem_step_roofline(m=m, U=U, megakernel=True)
+                classic = mwem_step_roofline(m=m, U=U, megakernel=False)
+                path = ("kernel" if index._resolve_pallas() else "mega_ref")
+                derived += (f";path={path}"
+                            f";vs_classic_ivf={ivf_us / us:.2f}x"
+                            f";hbm_bytes_ratio="
+                            f"{classic['hbm_bytes'] / mega['hbm_bytes']:.2f}x")
             rows.append(row(f"linear_queries/m{m}/{kind}", us, derived))
     return rows
 

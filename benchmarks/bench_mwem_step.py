@@ -1,0 +1,125 @@
+"""MWEM iteration megakernel microbench + roofline HBM-bytes budget gate.
+
+Times one fast-mode iteration through the fused scan under both step
+bodies (DESIGN.md §7):
+
+* ``classic`` — ``cfg.use_pallas="never"``: every sub-op of
+  softmax → probe → select → measure → MWU → renorm is its own HBM
+  round-trip (the pre-fusion baseline).
+* ``mega``    — ``cfg.use_pallas="auto"``: the carried-density scan body,
+  the `kernels.mwem_step` Pallas route on TPU and its bitwise XLA ref
+  off-TPU (the resolved path lands in the derived column).
+
+Also times the raw `kernels.mwem_step.ops.mwem_step` dispatch against the
+jit'd oracle, and prints the analytic `analysis.roofline.
+mwem_step_roofline` rows for both routes. The bytes ratio is the speedup
+ceiling on a bandwidth-bound part — and it is a *budget*: this bench
+raises (failing `run.py` and the CI bench-smoke lane) if the megakernel's
+modeled per-iteration HBM bytes ever creep above the classic body's.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import med_us, row
+from repro.analysis.roofline import mwem_step_roofline
+from repro.core import MWEMConfig, run_mwem_fused
+from repro.core.queries import gaussian_histogram, random_binary_queries
+from repro.kernels.mwem_step import ops as step_ops
+from repro.kernels.mwem_step.ref import mwem_step_ref
+from repro.mips import IVFIndex, augment_complement
+
+
+def _time_call(fn, reps: int) -> float:
+    fn()  # warm-up: trace + compile
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples) * 1e6)
+
+
+def run(quick: bool = True):
+    U = 256 if quick else 512
+    ms = [4096] if quick else [8192, 32768]
+    T = 12 if quick else 30
+    n = 500
+    reps = 20 if quick else 50
+    rows = []
+    kh, kq = jax.random.split(jax.random.PRNGKey(0))
+    h = gaussian_histogram(kh, n, U)
+
+    # raw step dispatch: kernel route vs the jit'd oracle
+    rng = np.random.default_rng(0)
+    lw = jnp.asarray(rng.standard_normal(U).astype(np.float32))
+    lw = lw - jnp.max(lw)
+    p = jax.nn.softmax(lw)
+    ps = jnp.zeros((U,), jnp.float32)
+    rows_tbl = jnp.asarray(rng.integers(0, 2, (1024, U)).astype(np.float32))
+    hv = jnp.asarray(rng.uniform(0, 1, U).astype(np.float32))
+    ref = jax.jit(lambda *a: mwem_step_ref(*a, rule="hardt", eta=0.5))
+    us_ref = _time_call(lambda: ref(lw, p, ps, rows_tbl[3], hv,
+                                    jnp.float32(0.1)), reps)
+    us_step = _time_call(lambda: step_ops.mwem_step(
+        lw, p, ps, rows_tbl, jnp.int32(3), hv, jnp.float32(0.1),
+        rule="hardt", eta=0.5), reps)
+    path = ("pallas" if jax.default_backend() == "tpu" else "interpret")
+    rows.append(row(f"mwem_step/U{U}/step_ref", us_ref, ""))
+    rows.append(row(f"mwem_step/U{U}/step_kernel", us_step,
+                    f"path={path};vs_ref={us_ref / us_step:.2f}x"))
+
+    for m in ms:
+        Q = random_binary_queries(kq, m, U)
+        aug = augment_complement(np.asarray(Q))
+        results = {}
+        for route in ("never", "auto"):
+            ix = IVFIndex(aug, seed=0, train_iters=4, use_pallas=route)
+            cfg = MWEMConfig(T=T, mode="fast", n_records=n, use_pallas=route)
+            run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(1), index=ix)
+            res = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(1), index=ix)
+            results[route] = (med_us(res.iter_seconds), res, ix)
+        us_classic = results["never"][0]
+        us_mega, res_mega, ix_mega = results["auto"]
+        mega_path = "kernel" if ix_mega._resolve_pallas() else "mega_ref"
+        rows.append(row(f"mwem_step/m{m}/iter_classic", us_classic,
+                        f"err={results['never'][1].final_error:.4f}"))
+        rows.append(row(f"mwem_step/m{m}/iter_mega", us_mega,
+                        f"path={mega_path}"
+                        f";err={res_mega.final_error:.4f}"
+                        f";vs_classic={us_classic / us_mega:.2f}x"))
+
+        rf = {}
+        for megakernel in (True, False):
+            rf[megakernel] = mwem_step_roofline(m=m, U=U,
+                                                megakernel=megakernel)
+            tag = "mega" if megakernel else "classic"
+            r = rf[megakernel]
+            rows.append(row(
+                f"mwem_step/m{m}/roofline_{tag}",
+                r["step_lower_bound_s"] * 1e6,
+                f"hbm_bytes={r['hbm_bytes']:.3g}"
+                f";state_passes={r['state_passes']}"
+                f";bottleneck={r['bottleneck']}"))
+        ratio = rf[False]["hbm_bytes"] / rf[True]["hbm_bytes"]
+        rows.append(row(f"mwem_step/m{m}/hbm_bytes_ratio", 0.0,
+                        f"classic_over_mega={ratio:.2f}x"))
+        # the roofline budget gate: fusing must never *add* modeled bytes
+        if rf[True]["hbm_bytes"] > rf[False]["hbm_bytes"]:
+            raise RuntimeError(
+                f"megakernel HBM bytes above the pre-fusion baseline at "
+                f"m={m}: {rf[True]['hbm_bytes']:.3g} > "
+                f"{rf[False]['hbm_bytes']:.3g}")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run(quick=True))

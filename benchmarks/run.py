@@ -29,7 +29,7 @@ def main() -> None:
 
     from benchmarks import (bench_distributed, bench_error_parity,
                             bench_ivf_probe, bench_linear_queries, bench_lp,
-                            bench_margin, bench_n_ablation,
+                            bench_margin, bench_mwem_step, bench_n_ablation,
                             bench_release_service, roofline_report)
     from benchmarks.common import print_rows
 
@@ -42,6 +42,7 @@ def main() -> None:
         "release_service": bench_release_service,
         "distributed": bench_distributed,
         "ivf_probe": bench_ivf_probe,
+        "mwem_step": bench_mwem_step,
         "roofline": roofline_report,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)

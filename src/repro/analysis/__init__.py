@@ -1,6 +1,8 @@
 """Compiled-HLO cost parsing + TPU v5e roofline model."""
 
 from repro.analysis.hlo import analyze_hlo, HLOAnalysis
-from repro.analysis.roofline import roofline_terms, V5E
+from repro.analysis.roofline import (ivf_probe_roofline, mwem_step_roofline,
+                                     roofline_terms, V5E)
 
-__all__ = ["analyze_hlo", "HLOAnalysis", "roofline_terms", "V5E"]
+__all__ = ["analyze_hlo", "HLOAnalysis", "ivf_probe_roofline",
+           "mwem_step_roofline", "roofline_terms", "V5E"]

@@ -10,6 +10,7 @@ term is the bottleneck the §Perf loop attacks.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 
@@ -95,4 +96,71 @@ def ivf_probe_roofline(*, nlist: int, nprobe: int, cap: int, dim: int,
     out.update({"hbm_bytes": float(hbm), "flops": float(flops),
                 "rows_scored": rows_scored, "unique_cells": unique_cells,
                 "kernelized": kernelized})
+    return out
+
+
+def mwem_step_roofline(*, m: int, U: int, nlist: int | None = None,
+                       nprobe: int | None = None, cap: int | None = None,
+                       tail_cap: int | None = None, dtype_bytes: int = 4,
+                       megakernel: bool = True, chip: Chip = V5E) -> dict:
+    """Roofline of one fast-mode MWEM iteration (single lane, IVF probe).
+
+    Models the per-iteration HBM traffic of the fused scan body in
+    U-vector *passes* (each pass = ``U · dtype_bytes`` across the bus),
+    honest per sub-op — the quantity the megakernel attacks (DESIGN.md §7).
+
+    ``megakernel=False`` — the classic body (``use_pallas="never"``), every
+    sub-op its own HBM round-trip:
+
+    * ``p = softmax(log_w)``: 3 reads (max pass, sum pass, exp/Z pass) +
+      1 write = 4 passes.
+    * ``v = h − p``: 3 passes.
+    * XLA probe: centroids once, then the gathered (nprobe·cap, U)
+      candidate matrix crosses the bus ~3× (gather read + materialize +
+      matvec read).
+    * XLA tail scoring: same gather shape over ``tail_cap`` rows, 3×.
+    * MWU tail: winner-row gather ~4 row passes (gather R/W, dot read,
+      update read) + 14 state passes (measure/estimate reads, log-weight
+      update, max-shift, renormalizing softmax, output accumulation).
+
+    ``megakernel=True`` — the `kernels.mwem_step` route: the probe rows
+    stream once (`kernels.ivf_probe`), the tail candidates stream once
+    (scalar-prefetched gather-score), the whole measure→MWU→renorm tail is
+    one VMEM-resident pass (5 reads: log_w, p, p_sum, h, prefetched winner
+    row; 3 writes), and the carried density deletes the per-step softmax
+    entirely. Only ``v = h − p`` (3 passes) stays in XLA.
+
+    Index defaults mirror `mips.IVFIndex` over the complement-augmented
+    n = 2m rows and `lazy_em.default_tail_cap`. Returns the
+    `roofline_terms` dict extended with ``hbm_bytes`` / ``flops`` /
+    ``state_passes``; call once per route and compare ``hbm_bytes`` for
+    the before/after ratio (CI gates on mega ≤ classic).
+    """
+    n_aug = 2 * m
+    if nlist is None:
+        nlist = min(max(int(2 * math.sqrt(n_aug)), 20), n_aug)
+    if nprobe is None:
+        nprobe = max(1, min(nlist // 4, 10))
+    if cap is None:
+        cap = max(4, math.ceil(2.0 * n_aug / nlist))
+    if tail_cap is None:
+        tail_cap = min(n_aug, max(64, 4 * math.ceil(math.sqrt(n_aug))))
+    probe_rows = nprobe * cap
+    if megakernel:
+        state_passes = 3 + 8                  # v = h − p, fused step kernel
+        row_passes = probe_rows + tail_cap    # each candidate streams once
+        id_bytes = (probe_rows + tail_cap) * 4
+    else:
+        state_passes = 4 + 3 + 14 + 4         # softmax, v, MWU tail, winner
+        row_passes = 3 * (probe_rows + tail_cap)
+        id_bytes = 2 * (probe_rows + tail_cap) * 4
+    hbm = (state_passes + nlist + row_passes) * U * dtype_bytes + id_bytes
+    # useful op counts, route-independent: candidate + tail + centroid dots
+    # and the ~10 elementwise/reduction passes of the MWU tail
+    flops = 2.0 * U * (nlist + probe_rows + tail_cap) + 10.0 * U
+    out = roofline_terms(flops, float(hbm), 0.0, chip)
+    out.update({"hbm_bytes": float(hbm), "flops": float(flops),
+                "state_passes": state_passes, "nlist": nlist,
+                "nprobe": nprobe, "cap": cap, "tail_cap": tail_cap,
+                "megakernel": megakernel})
     return out

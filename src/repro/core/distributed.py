@@ -54,7 +54,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.accountant import PrivacyLedger
 from repro.core.gumbel import tail_prob, truncated_gumbel
-from repro.core.lazy_em import default_tail_cap, draw_distinct_tail
+from repro.core.lazy_em import default_tail_cap, draw_distinct_tail, fallback_key
 from repro.core.mwem import (
     MWEMBatchResult,
     MWEMConfig,
@@ -62,11 +62,13 @@ from repro.core.mwem import (
     _calibrate,
     _check_fast_index,
     _compiled_driver,
+    _measure_noise,
     _record_iteration,
     release_cost,
     split_chain,
 )
 from repro.core.queries import max_error
+from repro.kernels.mwem_step.ops import mwem_step_supported, mwu_apply
 
 
 def _fold_axes(key, axes):
@@ -238,9 +240,13 @@ def _make_iteration_body(mesh, *, m: int, U: int, nlist: int, cap: int,
             overflow = jax.lax.psum(
                 lazy[3].astype(jnp.int32), data_axes) > 0
             if fallback:
+                # the redo draws fresh Gumbels under `lazy_em.fallback_key`
+                # (the lazy pass already consumed k_sel's) — same fold the
+                # host/fused drivers apply on their overflow branch
                 cand_gids, cand_pert, n_loc = jax.lax.cond(
                     overflow,
-                    lambda _: _exhaustive_candidates(Q, v, k_sel, shard_id),
+                    lambda _: _exhaustive_candidates(
+                        Q, v, fallback_key(k_sel), shard_id),
                     lambda _: lazy[:3],
                     operand=None,
                 )
@@ -264,7 +270,22 @@ def _make_iteration_body(mesh, *, m: int, U: int, nlist: int, cap: int,
                         jnp.zeros((Q.shape[1],), Q.dtype))
         row = jax.lax.psum(row, data_axes)                 # (U_loc,)
 
-        # ---- MW update: the host `_mwu_step` on the model-sharded state ----
+        # ---- MW update ----
+        if use_pallas and mwem_step_supported(U):
+            # Megakernel seam (DESIGN.md §7): model extent is 1 whenever
+            # ``use_pallas`` is live (`run_mwem_sharded` gates it), so the
+            # psum/pmax collectives in the XLA tail below are identities —
+            # hand the one-hot-psum'd winner row straight to the fused
+            # measure→MWU→renorm kernel, the same `kernels.mwem_step` seam
+            # the fused drivers run.
+            noise = _measure_noise(k_meas, rule, lap_scale)
+            logw_new, p_new, ps_new = mwu_apply(
+                logw, p, p_sum, row, h, noise, rule=rule, eta=eta,
+                interpret=interpret)
+            stats = {"winner": winner_gid, "n_scored": n_scored,
+                     "overflow": overflow}
+            return logw_new, ps_new, stats
+        # the host `_mwu_step` math on the model-sharded state
         if rule == "paper":
             logw_new = logw - eta * row
         else:

@@ -14,7 +14,9 @@ Two drivers execute the same iteration (DESIGN.md §2):
   index whose `query(v, k)` is traceable (`supports_in_graph`).
 * **host** (`driver="host"`): the original Python loop, one dispatch per
   step. Retained for indices whose search cannot be traced into a scan
-  (e.g. NSW beam search) and as the reference for equivalence tests.
+  and as the reference for equivalence tests (every built-in index —
+  flat/IVF/LSH/NSW — now traces, so auto-routing only lands here for
+  third-party indices without ``supports_in_graph``).
 * **sharded** (`repro.core.distributed.run_mwem_sharded`, DESIGN.md §4):
   the same scan shard-mapped over a device mesh — Q rows over the data
   axes, the weight state over "model", per-shard IVF selection. Selected
@@ -60,8 +62,11 @@ import numpy as np
 
 from repro.core.accountant import PrivacyLedger, calibrate_eps0
 from repro.core.gumbel import gumbel
-from repro.core.lazy_em import default_tail_cap, lazy_em_from_topk
+from repro.core.lazy_em import default_tail_cap, fallback_key, lazy_em_from_topk
 from repro.core.queries import max_error
+from repro.kernels.mwem_step import ops as step_ops
+from repro.kernels.mwem_step.ref import mwem_step_ref, mwu_apply_ref
+from repro.mips.base import resolve_pallas
 
 
 @dataclass(frozen=True)
@@ -79,6 +84,12 @@ class MWEMConfig:
     measure_frac: float = 0.5    # ε₀ fraction spent on the Laplace measurement
     eval_every: int = 0          # 0 → only final error
     n_records: Optional[int] = None  # dataset size n → sensitivity Δu = 1/n
+    # Megakernel knob for the fused/sharded scans (mips.base semantics):
+    # "auto"/"always" run the carried-density mega step — Pallas kernel when
+    # resolve_pallas says so AND the shape qualifies, else the XLA ref, both
+    # bitwise the host math; "never" keeps the classic pre-fusion body (the
+    # roofline baseline).
+    use_pallas: str = "auto"
 
     @staticmethod
     def iterations_for(alpha: float, m: int) -> int:
@@ -208,32 +219,30 @@ def _exact_argmax(key: jax.Array, Q: jax.Array, v: jax.Array, scale: float) -> j
 _exact_select = jax.jit(_exact_argmax, static_argnames=("scale",))
 
 
+def _measure_noise(key: jax.Array, rule: str, lap_scale: float) -> jax.Array:
+    """Realized Laplace measurement noise — drawn outside the MWU seam so
+    the arithmetic below (and the megakernel behind it) is deterministic.
+    ``rule="paper"`` takes no measurement and must not consume the key."""
+    if rule == "paper":
+        return jnp.float32(0.0)
+    return lap_scale * jax.random.laplace(key)
+
+
+@partial(jax.jit, static_argnames=("rule", "eta", "lap_scale"))
 def _mwu_step(state: MWEMState, p: jax.Array, q_row: jax.Array, h: jax.Array,
               key: jax.Array, rule: str, eta: float, lap_scale: float) -> MWEMState:
     """One multiplicative-weights update given the selected query row.
 
     ``p = softmax(state.log_w)`` is passed in (every caller already has it
-    for the probe vector) rather than recomputed.
+    for the probe vector) rather than recomputed. This is the ONE MWU entry
+    point (host loop + classic scan bodies); the arithmetic lives in
+    `kernels.mwem_step.mwu_apply_ref`, the same expression the megakernel
+    route and the sharded tail consume — a single integration seam.
     """
-    if rule == "paper":
-        log_w = state.log_w - eta * q_row
-    else:
-        true_ans = q_row @ h
-        noise = lap_scale * jax.random.laplace(key)
-        measured = true_ans + noise
-        est = q_row @ p
-        if rule == "signed":
-            log_w = state.log_w + eta * jnp.sign(measured - est) * q_row
-        elif rule == "hardt":
-            log_w = state.log_w + q_row * (measured - est) / 2.0
-        else:
-            raise ValueError(f"unknown update rule {rule!r}")
-    log_w = log_w - jnp.max(log_w)  # drift control
-    p_new = jax.nn.softmax(log_w)
+    noise = _measure_noise(key, rule, lap_scale)
+    log_w, p_new = mwu_apply_ref(state.log_w, p, q_row, h, noise,
+                                 rule=rule, eta=eta)
     return MWEMState(log_w=log_w, p_sum=state.p_sum + p_new)
-
-
-_mwu_update = jax.jit(_mwu_step, static_argnames=("rule", "eta", "lap_scale"))
 
 
 def _record_iteration(ledger: PrivacyLedger, mode: str, rule: str,
@@ -295,14 +304,29 @@ def split_chain(key: jax.Array, T: int):
 # ---------------------------------------------------------------------------
 
 _FUSED_STATICS = ("T", "mode", "rule", "eta", "scale", "lap_scale", "k",
-                  "tail_cap", "margin_slack", "eval_every")
+                  "tail_cap", "margin_slack", "eval_every", "use_pallas")
+
+
+def _mega_route(use_pallas: str, U: int) -> tuple[bool, bool]:
+    """Resolve the scan-body route from the `use_pallas` knob (static).
+
+    Returns ``(mega, kernel)``: ``mega`` picks the carried-density fused
+    step (the megakernel dataflow — DESIGN.md §7) vs the classic
+    softmax-per-step body; ``kernel`` picks the Pallas `mwem_step` kernel
+    inside the mega route vs its XLA ref — "auto" off-TPU and shapes the
+    kernel cannot take fall back to the ref automatically.
+    """
+    mega = use_pallas != "never"
+    kernel = (mega and resolve_pallas(use_pallas)
+              and step_ops.mwem_step_supported(U))
+    return mega, kernel
 
 
 def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
                 *, query_fn: Optional[Callable], T: int, mode: str, rule: str,
                 eta: float, scale: float, lap_scale: float, k: int,
                 tail_cap: int, margin_slack: float, eval_every: int,
-                query_returns_scores: bool = False):
+                use_pallas: str = "auto", query_returns_scores: bool = False):
     """The whole (Fast-)MWEM loop as one `lax.scan` — zero host round-trips.
 
     Pre-splits the per-iteration key pairs with a key-only scan that walks
@@ -313,65 +337,114 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
     ``query_returns_scores``: the probe is exhaustive and hands back the
     full (m,) signed score vector — tail scoring and the overflow fallback
     become O(tail_cap)/O(m) lookups instead of re-touching Q.
+
+    ``use_pallas != "never"`` swaps the step tail for the megakernel
+    dataflow: the scan carries ``(state, p)`` so the per-step softmax
+    disappears (the MWU renormalizes in the same pass), and measure + MWU +
+    renorm run as one VMEM-resident `kernels.mwem_step` call that streams
+    only the winning query row. Selection and the overflow `lax.cond` stay
+    outside the kernel — bitwise host parity is the contract.
     """
     m = Qm.shape[0]
+    U = state0.log_w.shape[-1]
+    mega, kernel = _mega_route(use_pallas, U)
     sel_keys, meas_keys = split_chain(key, T)
+
+    def select(k_sel, v):
+        """Private selection → ``(sel, n_scored, tail_count, overflow)``.
+
+        On tail-buffer overflow the `lax.cond` redoes the step with the
+        exhaustive Gumbel-max under `lazy_em.fallback_key` (a fresh key —
+        the lazy pass already consumed ``k_sel``'s Gumbels, and the host
+        driver folds identically, so parity holds). The cond keeps the
+        heavy branch unexecuted on the non-overflow path of an unbatched
+        run.
+        """
+        if mode == "exact":
+            return (_exact_argmax(k_sel, Qm, v, scale), jnp.int32(m),
+                    jnp.int32(0), jnp.bool_(False))
+        if query_returns_scores:
+            aug_idx, raw, s_full = query_fn(v, k)
+            score_fn = lambda idx: jnp.where(  # noqa: E731
+                idx < m, s_full[idx % m], -s_full[idx % m]) * scale
+            fallback = lambda _: _gumbel_argmax(  # noqa: E731
+                fallback_key(k_sel), jnp.abs(s_full) * scale)
+        else:
+            aug_idx, raw = query_fn(v, k)
+            if kernel:
+                # tail candidates stream once via the scalar-prefetched
+                # gather-score kernel (bitwise `_aug_score` — per-row dot)
+                score_fn = lambda idx: (  # noqa: E731
+                    step_ops.aug_gather_score(Qm, v, idx) * scale)
+            else:
+                score_fn = lambda idx: _aug_score(Qm, v, idx) * scale  # noqa: E731
+            fallback = lambda _: _exact_argmax(  # noqa: E731
+                fallback_key(k_sel), Qm, v, scale)
+        out = lazy_em_from_topk(
+            k_sel, aug_idx, raw * scale, 2 * m,
+            score_fn=score_fn,
+            tail_cap=tail_cap,
+            margin_slack=margin_slack * scale if margin_slack else 0.0,
+        )
+        sel = jax.lax.cond(
+            out.overflow,
+            fallback,
+            lambda _: (out.index % m).astype(jnp.int32),
+            operand=None,
+        )
+        n_scored = jnp.where(out.overflow, jnp.int32(m), out.n_scored)
+        return sel, n_scored, out.tail_count, out.overflow
+
+    def eval_ys(t, p_sum):
+        # Gated on the eval schedule: the Θ(mU) error matmul would
+        # otherwise run every iteration and erase the sublinear win.
+        return jax.lax.cond(
+            t % eval_every == 0,
+            lambda _: max_error(Qm, h, p_sum / t.astype(jnp.float32)),
+            lambda _: jnp.float32(jnp.nan),
+            operand=None,
+        )
+
+    ts = jnp.arange(1, T + 1)
+
+    if mega:
+        def body(carry, xs):
+            state, p = carry
+            t, k_sel, k_meas = xs
+            v = h - p
+            sel, n_scored, tail_count, overflow = select(k_sel, v)
+            noise = _measure_noise(k_meas, rule, lap_scale)
+            if kernel:
+                lw, p_new, ps = step_ops.mwem_step(
+                    state.log_w, p, state.p_sum, Qm, sel, h, noise,
+                    rule=rule, eta=eta)
+            else:
+                lw, p_new, ps = mwem_step_ref(
+                    state.log_w, p, state.p_sum, Qm[sel], h, noise,
+                    rule=rule, eta=eta)
+            new_state = MWEMState(log_w=lw, p_sum=ps)
+            ys = (sel, n_scored, tail_count, overflow)
+            if eval_every:
+                ys = ys + (eval_ys(t, new_state.p_sum),)
+            return (new_state, p_new), ys
+
+        carry0 = (state0, jax.nn.softmax(state0.log_w))
+        (final_state, _), traces = jax.lax.scan(
+            body, carry0, (ts, sel_keys, meas_keys))
+        return final_state, traces
 
     def body(state, xs):
         t, k_sel, k_meas = xs
         p = jax.nn.softmax(state.log_w)
         v = h - p
-        if mode == "exact":
-            sel = _exact_argmax(k_sel, Qm, v, scale)
-            n_scored = jnp.int32(m)
-            tail_count = jnp.int32(0)
-            overflow = jnp.bool_(False)
-        else:
-            if query_returns_scores:
-                aug_idx, raw, s_full = query_fn(v, k)
-                score_fn = lambda idx: jnp.where(  # noqa: E731
-                    idx < m, s_full[idx % m], -s_full[idx % m]) * scale
-                fallback = lambda _: _gumbel_argmax(  # noqa: E731
-                    k_sel, jnp.abs(s_full) * scale)
-            else:
-                aug_idx, raw = query_fn(v, k)
-                score_fn = lambda idx: _aug_score(Qm, v, idx) * scale  # noqa: E731
-                fallback = lambda _: _exact_argmax(k_sel, Qm, v, scale)  # noqa: E731
-            out = lazy_em_from_topk(
-                k_sel, aug_idx, raw * scale, 2 * m,
-                score_fn=score_fn,
-                tail_cap=tail_cap,
-                margin_slack=margin_slack * scale if margin_slack else 0.0,
-            )
-            # In-graph fallback: on tail-buffer overflow redo the step with
-            # the exhaustive Gumbel-max (same k_sel, mirroring the host
-            # driver). `lax.cond` keeps the heavy branch unexecuted on the
-            # non-overflow path of an unbatched run.
-            sel = jax.lax.cond(
-                out.overflow,
-                fallback,
-                lambda _: (out.index % m).astype(jnp.int32),
-                operand=None,
-            )
-            n_scored = jnp.where(out.overflow, jnp.int32(m), out.n_scored)
-            tail_count = out.tail_count
-            overflow = out.overflow
+        sel, n_scored, tail_count, overflow = select(k_sel, v)
         new_state = _mwu_step(state, p, Qm[sel], h, k_meas, rule=rule,
                               eta=eta, lap_scale=lap_scale)
         ys = (sel, n_scored, tail_count, overflow)
         if eval_every:
-            # Gated on the eval schedule: the Θ(mU) error matmul would
-            # otherwise run every iteration and erase the sublinear win.
-            err = jax.lax.cond(
-                t % eval_every == 0,
-                lambda _: max_error(Qm, h, new_state.p_sum / t.astype(jnp.float32)),
-                lambda _: jnp.float32(jnp.nan),
-                operand=None,
-            )
-            ys = ys + (err,)
+            ys = ys + (eval_ys(t, new_state.p_sum),)
         return new_state, ys
 
-    ts = jnp.arange(1, T + 1)
     return jax.lax.scan(body, state0, (ts, sel_keys, meas_keys))
 
 
@@ -379,7 +452,8 @@ def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
                       keys: jax.Array, *, batch_query_fn: Callable, T: int,
                       mode: str, rule: str, eta: float, scale: float,
                       lap_scale: float, k: int, tail_cap: int,
-                      margin_slack: float, eval_every: int):
+                      margin_slack: float, eval_every: int,
+                      use_pallas: str = "auto"):
     """The batched fused loop with a *wave-batched* probe (DESIGN.md §3).
 
     `run_mwem_batch`'s default shape is `vmap(_fused_core)`: every lane
@@ -398,8 +472,10 @@ def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
     """
     m = Qm.shape[0]
     B = keys.shape[0]
+    U = state0.log_w.shape[-1]
     if mode != "fast":
         raise ValueError("the waved core only serves mode='fast' probes")
+    mega, kernel = _mega_route(use_pallas, U)
     sel_keys, meas_keys = jax.vmap(lambda kk: split_chain(kk, T))(keys)
     sel_keys = jnp.moveaxis(sel_keys, 0, 1)    # (T, B, key)
     meas_keys = jnp.moveaxis(meas_keys, 0, 1)
@@ -415,38 +491,75 @@ def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
         )
         sel = jax.lax.cond(
             out.overflow,
-            lambda _: _exact_argmax(k_sel, Qm, v, scale),
+            lambda _: _exact_argmax(fallback_key(k_sel), Qm, v, scale),
             lambda _: (out.index % m).astype(jnp.int32),
             operand=None,
         )
         n_scored = jnp.where(out.overflow, jnp.int32(m), out.n_scored)
         return sel, n_scored, out.tail_count, out.overflow
 
-    def body(state, xs):
-        t, k_sel, k_meas = xs                   # keys (B, ...)
-        p = jax.nn.softmax(state.log_w, axis=-1)   # (B, U)
-        v = h - p                                   # (B, U)
-        aug_idx, raw = batch_query_fn(v, k)         # (B, k) each
-        sel, n_scored, tail_count, overflow = jax.vmap(select_one)(
-            k_sel, v, aug_idx, raw)
-        new_state = jax.vmap(mwu, in_axes=(0, 0, 0, 0 if batched_h else None,
-                                           0))(state, p, Qm[sel], h, k_meas)
-        ys = (sel, n_scored, tail_count, overflow)
-        if eval_every:
-            err_fn = jax.vmap(partial(max_error, Qm),
-                              in_axes=(0 if batched_h else None, 0))
-            err = jax.lax.cond(
-                t % eval_every == 0,
-                lambda _: err_fn(h, new_state.p_sum / t.astype(jnp.float32)),
-                lambda _: jnp.full((B,), jnp.nan, jnp.float32),
-                operand=None,
-            )
-            ys = ys + (err,)
-        return new_state, ys
+    def eval_ys(t, p_sum):
+        err_fn = jax.vmap(partial(max_error, Qm),
+                          in_axes=(0 if batched_h else None, 0))
+        return jax.lax.cond(
+            t % eval_every == 0,
+            lambda _: err_fn(h, p_sum / t.astype(jnp.float32)),
+            lambda _: jnp.full((B,), jnp.nan, jnp.float32),
+            operand=None,
+        )
 
     ts = jnp.arange(1, T + 1)
-    final_state, traces = jax.lax.scan(body, state0,
-                                       (ts, sel_keys, meas_keys))
+
+    if mega:
+        noise_fn = jax.vmap(partial(_measure_noise, rule=rule,
+                                    lap_scale=lap_scale))
+        step_ref = partial(mwem_step_ref, rule=rule, eta=eta)
+
+        def body(carry, xs):
+            state, p = carry                        # (B, U) each
+            t, k_sel, k_meas = xs                   # keys (B, ...)
+            v = h - p                               # (B, U)
+            aug_idx, raw = batch_query_fn(v, k)     # (B, k) each
+            sel, n_scored, tail_count, overflow = jax.vmap(select_one)(
+                k_sel, v, aug_idx, raw)
+            noise = noise_fn(k_meas)                # (B,)
+            if kernel:
+                lw, p_new, ps = step_ops.mwem_step_batch(
+                    state.log_w, p, state.p_sum, Qm, sel, h, noise,
+                    rule=rule, eta=eta)
+            else:
+                lw, p_new, ps = jax.vmap(
+                    step_ref, in_axes=(0, 0, 0, 0, 0 if batched_h else None,
+                                       0))(state.log_w, p, state.p_sum,
+                                           Qm[sel], h, noise)
+            new_state = MWEMState(log_w=lw, p_sum=ps)
+            ys = (sel, n_scored, tail_count, overflow)
+            if eval_every:
+                ys = ys + (eval_ys(t, new_state.p_sum),)
+            return (new_state, p_new), ys
+
+        carry0 = (state0, jax.nn.softmax(state0.log_w, axis=-1))
+        (final_state, _), traces = jax.lax.scan(
+            body, carry0, (ts, sel_keys, meas_keys))
+    else:
+        def body(state, xs):
+            t, k_sel, k_meas = xs                   # keys (B, ...)
+            p = jax.nn.softmax(state.log_w, axis=-1)   # (B, U)
+            v = h - p                                   # (B, U)
+            aug_idx, raw = batch_query_fn(v, k)         # (B, k) each
+            sel, n_scored, tail_count, overflow = jax.vmap(select_one)(
+                k_sel, v, aug_idx, raw)
+            new_state = jax.vmap(mwu, in_axes=(0, 0, 0,
+                                               0 if batched_h else None,
+                                               0))(state, p, Qm[sel], h,
+                                                   k_meas)
+            ys = (sel, n_scored, tail_count, overflow)
+            if eval_every:
+                ys = ys + (eval_ys(t, new_state.p_sum),)
+            return new_state, ys
+
+        final_state, traces = jax.lax.scan(body, state0,
+                                           (ts, sel_keys, meas_keys))
     # (T, B) stacked scan outputs → the (B, T) layout vmap(core) produces
     traces = jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), traces)
     return final_state, traces
@@ -520,7 +633,7 @@ def _fused_statics(cfg: MWEMConfig, cal: _Calibration) -> dict:
     return dict(T=cfg.T, mode=cfg.mode, rule=cfg.update_rule, eta=cal.eta,
                 scale=cal.scale, lap_scale=cal.lap_scale, k=cal.k,
                 tail_cap=cal.tail_cap, margin_slack=cfg.margin_slack,
-                eval_every=cfg.eval_every)
+                eval_every=cfg.eval_every, use_pallas=cfg.use_pallas)
 
 
 def _check_fast_index(cfg: MWEMConfig, index, fused: bool) -> float:
@@ -744,7 +857,11 @@ def _run_mwem_host(
             aug_idx, raw = index.query(v, cal.k)
             out = fast_select(k_sel, aug_idx, raw, Q, v)
             if bool(out.overflow):
-                sel = int(_exact_select(k_sel, Q, v, scale=cal.scale))
+                # fresh fold of k_sel (lazy_em.fallback_key) — the lazy pass
+                # already consumed k_sel's Gumbels; the fused drivers fold
+                # identically in-graph so selection parity holds
+                sel = int(_exact_select(fallback_key(k_sel), Q, v,
+                                        scale=cal.scale))
                 res.overflow_count += 1
                 res.n_scored.append(m)
             else:
@@ -752,8 +869,8 @@ def _run_mwem_host(
                 res.n_scored.append(int(out.n_scored))
         _record_iteration(res.ledger, cfg.mode, cfg.update_rule, cal,
                           c_idx, cfg.margin_slack)
-        state = _mwu_update(state, p, Q[sel], h, k_meas, rule=cfg.update_rule,
-                            eta=cal.eta, lap_scale=cal.lap_scale)
+        state = _mwu_step(state, p, Q[sel], h, k_meas, rule=cfg.update_rule,
+                          eta=cal.eta, lap_scale=cal.lap_scale)
         jax.block_until_ready(state.log_w)
         res.iter_seconds.append(time.perf_counter() - t0)
         res.selected.append(sel)
@@ -838,9 +955,10 @@ def run_mwem(
         ``driver="auto"`` shards the run across devices when more than one
         is visible (or a ``mesh`` is passed) and the index has a per-shard
         structure (`ShardedIVFIndex`); otherwise it fuses the loop
-        on-device whenever the index's query is traceable (all
-        flat/IVF/LSH indices); NSW and other host-only indices fall back
-        to the Python loop.
+        on-device whenever the index's query is traceable (all built-in
+        indices — flat/IVF/LSH/NSW); host-only third-party indices fall
+        back to the Python loop. ``cfg.use_pallas`` picks the fused scan's
+        step body (megakernel vs classic — DESIGN.md §7).
       key: PRNG key.
       index: a k-MIPS index over the complement-augmented queries
         (see repro.mips); must expose ``query(v, k) -> (aug_idx, raw_scores)``

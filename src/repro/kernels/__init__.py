@@ -15,6 +15,11 @@ Kernels:
                     candidate matrix) and amortizes the stream across a
                     serve wave of probes via a dedup + MXU-batched variant
   mwu_update      — fused multiplicative-weights update + online softmax stats
+  mwem_step       — the iteration megakernel: measure → MWU → renormalize →
+                    accumulate in one VMEM-resident pass per scan lane, the
+                    winner row scalar-prefetched straight from the query
+                    table, plus the gather-score kernel that streams the
+                    lazy-EM tail candidates once (DESIGN.md §7)
   flash_attention — GQA flash attention (full/causal/window/chunk masking)
   ssd_scan        — Mamba-2 SSD chunked state-passing scan
 """

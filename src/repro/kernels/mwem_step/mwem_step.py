@@ -1,0 +1,141 @@
+"""VMEM-resident fused MWEM step (measure → MWU → renormalize) kernel.
+
+One grid program per scan lane: the lane's whole (U,) weight state —
+log-weights, density, output accumulator — lives in VMEM for the entire
+step, and the *selected* query row streams HBM→VMEM exactly once, picked
+straight out of the (m, U) row table by a scalar-prefetched index_map (the
+`ivf_probe` cell-id trick applied to the winner id), so the step never
+materializes an XLA gather of ``Q[sel]`` in HBM. Per-iteration HBM traffic
+for the MWU half drops from the classic route's read/write per sub-op
+(~11 U-vectors: softmax, measure/estimate dots, update, max-shift,
+renormalize, accumulate — each a separate HBM round-trip) to 9 U-vector
+moves total (5 reads: log_w, p, p_sum, q_row, h; 3 writes + noise), and the
+carried density means the *next* step skips its softmax reads too.
+
+What stays outside (DESIGN.md §7): the probe, the lazy-EM Gumbel top-k,
+and the `lax.cond` exhaustive overflow fallback — they branch on data the
+kernel cannot see (tail membership, overflow flag) and keeping them in XLA
+is what preserves bitwise host parity and the PR 5 conformance tier. The
+kernel receives only the resolved winner id ``sel`` and the realized
+Laplace noise.
+
+Bitwise contract vs `ref.mwem_step_ref`: the body is whole-U single-block
+(no tiling, no online rescaling), reductions go through `jnp.dot`/
+`jnp.max`/`jnp.sum` — the same primitives the ref lowers to — and
+``softmax(lw - max(lw))`` is computed as ``e = exp(lw - max); e / sum(e)``,
+which equals `jax.nn.softmax` bit-for-bit because the max-shift is explicit
+in both. `ops.mwem_step_supported` gates the route to lane-aligned U so no
+padding lanes ever enter the reductions.
+
+Grid: (B,); all state blocks (1, U); the row table block (1, U) indexed by
+the prefetched ``sel[b]``; h broadcast or per-lane; noise (1,) per lane.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(sel_ref, lw_ref, p_ref, ps_ref, q_ref, h_ref, noise_ref,
+            out_lw_ref, out_p_ref, out_ps_ref, *, rule: str, eta: float):
+    del sel_ref  # consumed by q_ref's index_map (scalar-prefetched row pick)
+    lw = lw_ref[0].astype(jnp.float32)
+    q = q_ref[0].astype(jnp.float32)
+    if rule == "paper":
+        lw1 = lw - eta * q
+    else:
+        measured = jnp.dot(q, h_ref[0].astype(jnp.float32)) + noise_ref[0]
+        est = jnp.dot(q, p_ref[0])
+        if rule == "signed":
+            lw1 = lw + eta * jnp.sign(measured - est) * q
+        else:  # "hardt" (ops validates the rule set)
+            lw1 = lw + q * (measured - est) / 2.0
+    lw2 = lw1 - jnp.max(lw1)
+    e = jnp.exp(lw2)
+    p_new = e / jnp.sum(e)   # max(lw2) == 0 ⇒ bitwise jax.nn.softmax(lw2)
+    out_lw_ref[0] = lw2
+    out_p_ref[0] = p_new
+    out_ps_ref[0] = ps_ref[0] + p_new
+
+
+def mwem_step_pallas(sel: jax.Array, lw: jax.Array, p: jax.Array,
+                     ps: jax.Array, q_rows: jax.Array, h: jax.Array,
+                     noise: jax.Array, *, rule: str, eta: float,
+                     interpret: bool):
+    """Apply one fused MWEM step to B lanes.
+
+    Args:
+      sel: (B,) int32 winner row ids into ``q_rows`` (scalar-prefetched).
+      lw/p/ps: (B, U) carried log-weights / density / output accumulator.
+      q_rows: (R, U) row table — only the ``sel[b]`` rows cross HBM→VMEM.
+      h: (1, U) shared or (B, U) per-lane histogram.
+      noise: (B,) realized Laplace measurement noise.
+
+    Returns ``(lw', p', ps')``, each (B, U) f32.
+    """
+    B, U = lw.shape
+    per_lane_h = h.shape[0] > 1
+    kern = functools.partial(_kernel, rule=rule, eta=eta)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, U), lambda b, sel_ref: (b, 0)),
+            pl.BlockSpec((1, U), lambda b, sel_ref: (b, 0)),
+            pl.BlockSpec((1, U), lambda b, sel_ref: (b, 0)),
+            pl.BlockSpec((1, U), lambda b, sel_ref: (sel_ref[b], 0)),
+            pl.BlockSpec((1, U), (lambda b, sel_ref: (b, 0)) if per_lane_h
+                         else (lambda b, sel_ref: (0, 0))),
+            pl.BlockSpec((1,), lambda b, sel_ref: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, U), lambda b, sel_ref: (b, 0)),
+            pl.BlockSpec((1, U), lambda b, sel_ref: (b, 0)),
+            pl.BlockSpec((1, U), lambda b, sel_ref: (b, 0)),
+        ],
+    )
+    out_shape = [jax.ShapeDtypeStruct((B, U), jnp.float32)] * 3
+    return pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(sel, lw, p, ps, q_rows, h,
+                                               noise)
+
+
+def _score_kernel(ids_ref, rows_ref, v_ref, sign_ref, out_ref):
+    del ids_ref  # consumed by rows_ref's index_map
+    out_ref[0] = jnp.dot(rows_ref[0].astype(jnp.float32), v_ref[0]) * sign_ref[0]
+
+
+def gather_score_pallas(base: jax.Array, sign: jax.Array, q_rows: jax.Array,
+                        v: jax.Array, *, interpret: bool):
+    """Scalar-prefetched gather-and-score: ``sign[c] · ⟨q_rows[base[c]], v⟩``.
+
+    The lazy-EM tail's candidate scoring without the XLA gather: each of
+    the C candidate rows streams HBM→VMEM exactly once (1× the row bytes
+    instead of the gather's read + materialize + matvec re-read ≈ 3×),
+    picked by the prefetched id like the megakernel's winner row. Row-wise
+    `jnp.dot` keeps the per-row reduction order of the reference matvec —
+    bitwise `(q_rows[base] @ v) * sign`.
+
+    Args: base (C,) int32 row ids; sign (C,) f32 ±1; q_rows (R, U); v (U,).
+    Returns (C,) f32 scores.
+    """
+    C = base.shape[0]
+    U = q_rows.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, U), lambda c, ids_ref: (ids_ref[c], 0)),
+            pl.BlockSpec((1, U), lambda c, ids_ref: (0, 0)),
+            pl.BlockSpec((1,), lambda c, ids_ref: (c,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda c, ids_ref: (c,)),
+    )
+    return pl.pallas_call(_score_kernel, grid_spec=grid_spec,
+                          out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
+                          interpret=interpret)(base, q_rows, v[None], sign)

@@ -1,0 +1,145 @@
+"""Public jit'd wrappers for the fused MWEM-step megakernel.
+
+Dispatch contract (the drivers rely on it): every wrapper takes the full
+row table plus the winner id — selection, lazy-EM and the overflow
+`lax.cond` happen *before* this seam — and every wrapper degrades to
+`ref.mwem_step_ref` when `mwem_step_supported` says the shape cannot take
+the kernel route (U not lane-aligned, or the whole-U working set would not
+fit VMEM). The ref is op-for-op the host `_mwu_step` math, so the fallback
+is bitwise, not approximate.
+
+``interpret=None`` resolves to interpret mode off-TPU, same as the other
+kernel packages — CPU/GPU CI exercises the real kernel body.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mwem_step.mwem_step import (gather_score_pallas,
+                                               mwem_step_pallas)
+from repro.kernels.mwem_step.ref import UPDATE_RULES, mwem_step_ref
+
+# Whole-U residency budget: each program keeps ~7 (1, U) f32 blocks live
+# (3 state in + row + h + 3 out, noise negligible) and Pallas double-buffers
+# the pipeline, so peak VMEM ≈ 2·7·4·U bytes. Cap well under the 16 MB/core
+# of a v5e so the probe kernel's scratch still fits alongside.
+_VMEM_BUDGET_BYTES = 8 * 2**20
+
+
+def mwem_step_supported(U: int, batch: int = 1) -> bool:
+    """Static gate for the kernel route (the drivers' automatic fallback).
+
+    The kernel is whole-U single-block — bitwise parity with the ref comes
+    from never tiling the reductions — so U must fill TPU lanes exactly
+    (padding would enter max/sum) and one lane's working set must fit VMEM.
+    """
+    del batch  # grid is (B,): per-program residency is batch-independent
+    return U % 128 == 0 and 2 * 7 * 4 * U <= _VMEM_BUDGET_BYTES
+
+
+def _resolve_interpret(interpret):
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def _check_rule(rule: str) -> None:
+    if rule not in UPDATE_RULES:
+        raise ValueError(f"unknown update rule {rule!r}")
+
+
+@partial(jax.jit, static_argnames=("rule", "eta", "interpret"))
+def mwem_step(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
+              q_rows: jax.Array, sel: jax.Array, h: jax.Array,
+              noise: jax.Array, *, rule: str, eta: float,
+              interpret: bool | None = None):
+    """Single-lane fused step: ``(log_w', p', p_sum')`` from winner ``sel``.
+
+    Args:
+      log_w/p/p_sum: (U,) carried state (``p == softmax(log_w)``).
+      q_rows: (R, U) row table; only row ``sel`` is streamed on the kernel
+        route.
+      sel: scalar int winner id into ``q_rows``.
+      h: (U,) histogram.
+      noise: scalar realized Laplace noise (0.0 for ``rule="paper"``).
+    """
+    _check_rule(rule)
+    U = log_w.shape[0]
+    if not mwem_step_supported(U):
+        return mwem_step_ref(log_w, p, p_sum, q_rows[sel], h, noise,
+                             rule=rule, eta=eta)
+    interpret = _resolve_interpret(interpret)
+    out = mwem_step_pallas(
+        jnp.reshape(sel, (1,)).astype(jnp.int32),
+        log_w[None], p[None], p_sum[None], q_rows, h[None],
+        jnp.reshape(jnp.asarray(noise, jnp.float32), (1,)),
+        rule=rule, eta=eta, interpret=interpret)
+    return tuple(o[0] for o in out)
+
+
+@partial(jax.jit, static_argnames=("rule", "eta", "interpret"))
+def mwem_step_batch(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
+                    q_rows: jax.Array, sel: jax.Array, h: jax.Array,
+                    noise: jax.Array, *, rule: str, eta: float,
+                    interpret: bool | None = None):
+    """Wave-batched fused step over B lanes.
+
+    ``log_w/p/p_sum`` are (B, U); ``sel``/``noise`` are (B,); ``h`` is a
+    shared (U,) or per-lane (B, U) histogram. Lane b reproduces
+    `mwem_step` for its slice bitwise (grid programs are independent).
+    """
+    _check_rule(rule)
+    B, U = log_w.shape
+    if not mwem_step_supported(U, B):
+        h_ax = 0 if h.ndim == 2 else None
+        step = partial(mwem_step_ref, rule=rule, eta=eta)
+        return jax.vmap(step, in_axes=(0, 0, 0, 0, h_ax, 0))(
+            log_w, p, p_sum, q_rows[sel], h, noise)
+    interpret = _resolve_interpret(interpret)
+    h2 = h if h.ndim == 2 else h[None]
+    return mwem_step_pallas(sel.astype(jnp.int32), log_w, p, p_sum, q_rows,
+                            h2, noise.astype(jnp.float32),
+                            rule=rule, eta=eta, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def aug_gather_score(q_rows: jax.Array, v: jax.Array, aug_idx: jax.Array, *,
+                     interpret: bool | None = None):
+    """Complement-augmented candidate scores, rows streamed once.
+
+    ``aug_idx`` (C,) encodes query ``j % m`` with sign +1 for ``j < m``
+    else −1 (the §3.4 closure); returns ``sign · ⟨q_rows[j % m], v⟩`` —
+    bitwise `core.mwem._aug_score`, at 1× the row bytes instead of the XLA
+    gather's ~3×. Unsupported shapes fall back to the gather.
+    """
+    m, U = q_rows.shape
+    base = (aug_idx % m).astype(jnp.int32)
+    sign = jnp.where(aug_idx < m, 1.0, -1.0).astype(jnp.float32)
+    if not mwem_step_supported(U):
+        return (q_rows[base] @ v) * sign
+    interpret = _resolve_interpret(interpret)
+    return gather_score_pallas(base, sign, q_rows, v, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("rule", "eta", "interpret"))
+def mwu_apply(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
+              q_row: jax.Array, h: jax.Array, noise: jax.Array, *,
+              rule: str, eta: float, interpret: bool | None = None):
+    """Materialized-row variant (no prefetch table): the sharded driver's
+    model tail, where the winner row arrives via a one-hot psum instead of
+    an id into a local table. Same kernel body, ``sel = [0]`` into the
+    (1, U) row."""
+    _check_rule(rule)
+    U = log_w.shape[0]
+    if not mwem_step_supported(U):
+        return mwem_step_ref(log_w, p, p_sum, q_row, h, noise,
+                             rule=rule, eta=eta)
+    interpret = _resolve_interpret(interpret)
+    out = mwem_step_pallas(
+        jnp.zeros((1,), jnp.int32),
+        log_w[None], p[None], p_sum[None], q_row[None], h[None],
+        jnp.reshape(jnp.asarray(noise, jnp.float32), (1,)),
+        rule=rule, eta=eta, interpret=interpret)
+    return tuple(o[0] for o in out)

@@ -98,11 +98,14 @@ def _nsw_query(V, adj, seeds, q, k: int, max_steps: int):
 
 
 class NSWIndex:
-    # The data-dependent-depth beam search (while_loop over an (n,) visited
-    # mask) is kept out of the fused scan: tracing it per iteration bloats
-    # the graph and serializes poorly under vmap. MWEM drives NSW through
-    # the host loop.
-    supports_in_graph = False
+    # The beam search is a fixed-shape `lax.while_loop` (fixed-fanout padded
+    # adjacency, (n,) boolean visited mask), so it traces into the fused
+    # scan like any other index — the loop's data-dependent *depth* is
+    # bounded by `max_steps` and both drivers run the same jitted
+    # `_nsw_query`, so host/fused selection parity is bitwise. Under vmap
+    # the while_loop runs to the slowest lane's depth — the price of
+    # batching a search with data-dependent work.
+    supports_in_graph = True
 
     def __init__(self, vectors, deg: int = 32, ef: int = 64, rounds: int = 6,
                  rand_frac: float = 0.25, max_steps: int | None = None, seed: int = 0,
@@ -136,7 +139,9 @@ class NSWIndex:
                           jnp.asarray(v, jnp.float32), k, self.max_steps)
 
     def query_in_graph(self, v, k: int):
-        raise NotImplementedError("NSW beam search is host-loop only")
+        # same jitted search as `query` — inlined into the caller's trace
+        return _nsw_query(self._v, self._adj, self._seeds,
+                          jnp.asarray(v, jnp.float32), k, self.max_steps)
 
     def query_cost(self, k: int) -> int:
         # ~log-depth beam search: ef·deg scored rows per hop.

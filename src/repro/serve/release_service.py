@@ -125,7 +125,10 @@ class ReleaseService:
                  mesh=None, use_pallas: str = "auto"):
         self.Q = jnp.asarray(Q, jnp.float32)
         self.m, self.U = self.Q.shape
-        self.cfg = cfg
+        # the service-level knob also drives the drivers' fused step body
+        # (megakernel vs classic — DESIGN.md §7), so batched waves pick up
+        # the VMEM-resident `kernels.mwem_step` route alongside the probe
+        self.cfg = replace(cfg, use_pallas=use_pallas)
         self.wave_size = int(wave_size)
         self.auto_flush = auto_flush
         # a mesh routes waves through the sharded driver (one mesh-wide

@@ -330,13 +330,18 @@ class TestShardedDriver:
     def test_overflow_falls_back_to_exhaustive_exactly(self):
         """tail_cap=1 forces every shard's binomial past the buffer; the
         iteration must lax.cond into the exhaustive per-shard scan — which
-        is bitwise the host driver's exhaustive redo on the same keys."""
+        redraws under `lazy_em.fallback_key(k_sel)` (the lazy pass already
+        consumed k_sel's stream), the same fold the host driver applies.
+        With every step overflowing, the index never decides anything, so
+        the sharded run matches the host fast-mode driver selection-for-
+        selection."""
         out = _run("""
             import jax, jax.numpy as jnp, numpy as np
             from repro.core import MWEMConfig, run_mwem, run_mwem_sharded
             from repro.core.queries import (gaussian_histogram,
                                             random_binary_queries)
-            from repro.mips import ShardedIVFIndex
+            from repro.mips import (IVFIndex, ShardedIVFIndex,
+                                    augment_complement)
             from repro.launch.mesh import make_mesh_compat
             kh, kq = jax.random.split(jax.random.PRNGKey(0))
             U, m, n = 64, 512, 300
@@ -350,12 +355,12 @@ class TestShardedDriver:
                                   mesh=mesh, index=idx)
             assert rs.overflow_count == T
             assert rs.n_scored == [m] * T  # fallback scores every row
-            # the exhaustive redo consumes k_sel exactly like the host
-            # exact-mode oracle, so the whole run matches it selection-for-
-            # selection
-            cfg_exact = MWEMConfig(T=T, mode="exact", n_records=n,
-                                   driver="host")
-            rh = run_mwem(Q, h, cfg_exact, jax.random.PRNGKey(7))
+            hidx = IVFIndex(augment_complement(np.asarray(Q)), seed=0,
+                            train_iters=4)
+            cfg_h = MWEMConfig(T=T, mode="fast", n_records=n, tail_cap=1,
+                               driver="host")
+            rh = run_mwem(Q, h, cfg_h, jax.random.PRNGKey(7), index=hidx)
+            assert rh.overflow_count == T  # same all-overflow regime
             assert rs.selected == rh.selected, (rs.selected, rh.selected)
             print("OK")
         """)

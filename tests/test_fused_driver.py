@@ -45,11 +45,24 @@ class TestEquivalence:
         from repro.core.mwem import _resolve_driver
 
         assert _resolve_driver(MWEMConfig(n_records=n), index) == "fused"
-        assert _resolve_driver(MWEMConfig(n_records=n), nsw) == "host"
+        # NSW's fixed-shape beam search traces since the megakernel PR —
+        # auto-routing sends it through the fused scan like every other
+        # built-in index (host remains available explicitly)
+        assert _resolve_driver(MWEMConfig(n_records=n), nsw) == "fused"
         assert _resolve_driver(MWEMConfig(mode="exact", n_records=n), None) == "fused"
-        cfg = MWEMConfig(n_records=n, driver="fused")
+        res = run_mwem(Q, h, MWEMConfig(T=4, n_records=n, driver="fused"),
+                       jax.random.PRNGKey(0), index=nsw)
+        assert len(res.selected) == 4
+
+        class HostOnly:
+            supports_in_graph = False
+            approx_margin = 0.0
+            failure_mass = 0.0
+
+        assert _resolve_driver(MWEMConfig(n_records=n), HostOnly()) == "host"
         with pytest.raises(ValueError, match="host"):
-            run_mwem(Q, h, cfg, jax.random.PRNGKey(0), index=nsw)
+            run_mwem(Q, h, MWEMConfig(n_records=n, driver="fused"),
+                     jax.random.PRNGKey(0), index=HostOnly())
 
     def test_selection_distributions_match(self, workload, index):
         """TV distance between fused and host-loop selection frequencies

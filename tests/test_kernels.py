@@ -17,6 +17,8 @@ from repro.kernels.mips_topk.ops import mips_topk
 from repro.kernels.mips_topk.ref import mips_topk_ref
 from repro.kernels.mwu_update.ops import mwu_update
 from repro.kernels.mwu_update.ref import mwu_update_ref
+from repro.kernels.mwem_step import ops as step_ops
+from repro.kernels.mwem_step.ref import UPDATE_RULES, mwem_step_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd_scan.ops import ssd_scan
@@ -199,6 +201,127 @@ class TestMWUUpdate:
         np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_r),
                                    rtol=2e-5, atol=1e-7)
         assert np.isclose(np.asarray(p_k).sum(), 1.0, atol=1e-5)
+
+
+def _step_state(u, seed):
+    """A carried (log_w, p, p_sum) triple honoring the max-shift invariant
+    (max(log_w) == 0, p == softmax(log_w)) plus a row table and histogram."""
+    rng = np.random.default_rng(seed)
+    lw = rng.standard_normal(u).astype(np.float32) * 2
+    lw = jnp.asarray(lw)
+    lw = lw - jnp.max(lw)
+    p = jax.nn.softmax(lw)
+    ps = jnp.asarray(rng.uniform(0, 3, u).astype(np.float32))
+    rows = jnp.asarray(rng.integers(0, 2, size=(16, u)).astype(np.float32))
+    h = jnp.asarray(rng.uniform(0, 1, u).astype(np.float32))
+    h = h / jnp.sum(h)
+    return lw, p, ps, rows, h
+
+
+class TestMWEMStep:
+    """The iteration megakernel must be *bitwise* against the jit'd oracle —
+    the fused drivers interleave kernel and XLA steps (overflow fallback),
+    so any drift would break the host-vs-fused trace conformance tier."""
+
+    @pytest.mark.parametrize("rule", UPDATE_RULES)
+    @pytest.mark.parametrize("u", [128, 256])
+    def test_bitwise_vs_ref(self, rule, u):
+        lw, p, ps, rows, h = _step_state(u, seed=u)
+        noise = jnp.float32(0.37)
+        sel = jnp.int32(5)
+        ref = jax.jit(lambda *a: mwem_step_ref(*a, rule=rule, eta=0.5))
+        out_k = step_ops.mwem_step(lw, p, ps, rows, sel, h, noise,
+                                   rule=rule, eta=0.5)
+        out_r = ref(lw, p, ps, rows[5], h, noise)
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # invariant out: max-shifted log-weights, density sums to 1
+        assert float(jnp.max(out_k[0])) == 0.0
+        np.testing.assert_allclose(float(jnp.sum(out_k[1])), 1.0, atol=1e-5)
+
+    @given(seed=st.integers(0, 10_000), sel=st.integers(0, 15),
+           rule=st.sampled_from(UPDATE_RULES))
+    @settings(max_examples=15, deadline=None)
+    def test_bitwise_sweep(self, seed, sel, rule):
+        lw, p, ps, rows, h = _step_state(128, seed)
+        noise = jnp.float32(np.random.default_rng(seed).laplace() * 0.1)
+        ref = jax.jit(lambda *a: mwem_step_ref(*a, rule=rule, eta=0.3))
+        out_k = step_ops.mwem_step(lw, p, ps, rows, jnp.int32(sel), h, noise,
+                                   rule=rule, eta=0.3)
+        out_r = ref(lw, p, ps, rows[sel], h, noise)
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("shared_h", [True, False])
+    def test_batch_matches_single_lanes(self, shared_h):
+        B, u = 5, 128
+        states = [_step_state(u, seed=100 + b) for b in range(B)]
+        lw = jnp.stack([s[0] for s in states])
+        p = jnp.stack([s[1] for s in states])
+        ps = jnp.stack([s[2] for s in states])
+        rows = states[0][3]
+        h = states[0][4] if shared_h else jnp.stack([s[4] for s in states])
+        sel = jnp.arange(B, dtype=jnp.int32) % rows.shape[0]
+        noise = jnp.linspace(-0.2, 0.2, B, dtype=jnp.float32)
+        out_b = step_ops.mwem_step_batch(lw, p, ps, rows, sel, h, noise,
+                                         rule="hardt", eta=0.5)
+        for b in range(B):
+            hb = h if shared_h else h[b]
+            out_1 = step_ops.mwem_step(lw[b], p[b], ps[b], rows, sel[b], hb,
+                                       noise[b], rule="hardt", eta=0.5)
+            # batch and single are *different jit programs*: on CPU the
+            # interpret-mode emulation may fuse the dot reductions
+            # differently, so lanes agree to 1 ulp here (on TPU the grid
+            # programs share one kernel body and match bitwise)
+            for a, s in zip(out_b, out_1):
+                np.testing.assert_allclose(np.asarray(a[b]), np.asarray(s),
+                                           rtol=3e-7, atol=3e-7)
+
+    def test_unsupported_shape_falls_back(self):
+        # U = 96 is not lane-aligned: the wrapper must silently take the ref
+        lw, p, ps, rows, h = _step_state(96, seed=9)
+        ref = jax.jit(lambda *a: mwem_step_ref(*a, rule="signed", eta=0.4))
+        out_k = step_ops.mwem_step(lw, p, ps, rows, jnp.int32(3), h,
+                                   jnp.float32(0.1), rule="signed", eta=0.4)
+        out_r = ref(lw, p, ps, rows[3], h, jnp.float32(0.1))
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_supported_gate(self):
+        assert step_ops.mwem_step_supported(128)
+        assert step_ops.mwem_step_supported(1024)
+        assert not step_ops.mwem_step_supported(96)       # not lane-aligned
+        assert not step_ops.mwem_step_supported(1 << 20)  # VMEM blowout
+
+    def test_bad_rule_raises(self):
+        lw, p, ps, rows, h = _step_state(128, seed=1)
+        with pytest.raises(ValueError, match="rule"):
+            step_ops.mwem_step(lw, p, ps, rows, jnp.int32(0), h,
+                               jnp.float32(0.0), rule="nope", eta=0.5)
+
+    @given(seed=st.integers(0, 10_000), c=st.integers(1, 40))
+    @settings(max_examples=15, deadline=None)
+    def test_aug_gather_score_bitwise(self, seed, c):
+        rng = np.random.default_rng(seed)
+        m, u = 64, 128
+        Q = jnp.asarray(rng.integers(0, 2, size=(m, u)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal(u).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, 2 * m, size=c).astype(np.int32))
+        ref = jax.jit(lambda Q, v, i: (Q[i % m] @ v)
+                      * jnp.where(i < m, 1.0, -1.0))
+        got = step_ops.aug_gather_score(Q, v, idx)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref(Q, v, idx)))
+
+    def test_mwu_apply_matches_step(self):
+        """The sharded tail's materialized-row variant is the same body."""
+        lw, p, ps, rows, h = _step_state(128, seed=21)
+        out_a = step_ops.mwu_apply(lw, p, ps, rows[7], h, jnp.float32(0.2),
+                                   rule="hardt", eta=0.5)
+        out_s = step_ops.mwem_step(lw, p, ps, rows, jnp.int32(7), h,
+                                   jnp.float32(0.2), rule="hardt", eta=0.5)
+        for a, b in zip(out_a, out_s):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 class TestFlashAttention:

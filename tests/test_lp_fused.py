@@ -248,11 +248,20 @@ class TestRouting:
         flat = _index("flat", rows)
         nsw = NSWIndex(rows, deg=8, ef=16, rounds=2, seed=0)
         assert _resolve_lp_driver(ScalarLPConfig(), flat) == "fused"
-        assert _resolve_lp_driver(ScalarLPConfig(), nsw) == "host"
+        # NSW's beam search traces since the megakernel PR: it fuses like
+        # every other built-in index
+        assert _resolve_lp_driver(ScalarLPConfig(), nsw) == "fused"
         assert _resolve_lp_driver(ScalarLPConfig(mode="exact"), None) == "fused"
+
+        class HostOnly:
+            supports_in_graph = False
+            approx_margin = 0.0
+            failure_mass = 0.0
+
+        assert _resolve_lp_driver(ScalarLPConfig(), HostOnly()) == "host"
         with pytest.raises(ValueError, match="host"):
             solve_scalar_lp(A, b, ScalarLPConfig(T=4, driver="fused"),
-                            jax.random.PRNGKey(0), index=nsw)
+                            jax.random.PRNGKey(0), index=HostOnly())
         with pytest.raises(ValueError, match="unknown driver"):
             solve_scalar_lp(A, b, ScalarLPConfig(T=4, driver="warp"),
                             jax.random.PRNGKey(0), index=flat)
@@ -260,13 +269,20 @@ class TestRouting:
             solve_scalar_lp(A, b, ScalarLPConfig(T=4, mode="fast"),
                             jax.random.PRNGKey(0))
 
-    def test_host_only_index_still_solves(self, scalar_lp):
+    def test_nsw_fuses_with_host_parity(self, scalar_lp):
+        """The former host-only index now rides both drivers — and they
+        must tell the same selection story (full matrix closure)."""
         A, b, rows = scalar_lp
         nsw = NSWIndex(rows, deg=8, ef=16, rounds=2, seed=0)
         res = solve_scalar_lp(A, b, ScalarLPConfig(T=8, mode="fast"),
                               jax.random.PRNGKey(1), index=nsw)
+        host = solve_scalar_lp(A, b,
+                               ScalarLPConfig(T=8, mode="fast",
+                                              driver="host"),
+                               jax.random.PRNGKey(1), index=nsw)
         assert len(res.selected) == 8
         assert np.isfinite(res.violated_frac)
+        assert res.selected == host.selected
 
 
 class TestLedgerContract:
