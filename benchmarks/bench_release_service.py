@@ -93,6 +93,15 @@ def run(quick: bool = True):
         assert ticket.status == "rejected"
     rows.append(row("release_service/reject", _med_us(lat),
                     f"rejected={svc.stats.rejected}"))
+
+    # --- obs: admission→answer latency quantiles from the service registry --
+    snap = svc.metrics_snapshot()
+    hist = snap["histograms"].get('admission_to_answer_seconds{kind=mwem}')
+    if hist is not None:
+        rows.append(row("release_service/obs_latency_mwem",
+                        hist["p50"] * 1e6,
+                        f"p95_us={hist['p95'] * 1e6:.0f}"
+                        f";count={hist['count']}"))
     return rows
 
 

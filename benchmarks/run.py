@@ -76,6 +76,13 @@ def main() -> None:
             "platform": platform.platform(),
             "benches": results,
         }
+        try:  # obs snapshot: mechanism telemetry + serving latencies the
+            # benches accumulated in the default registry during this run
+            from repro.obs.metrics import default_registry
+
+            artifact["metrics"] = default_registry().snapshot()
+        except Exception as e:  # never let obs break the artifact
+            artifact["metrics"] = {"error": f"{type(e).__name__}: {e}"}
         with open(args.json, "w") as f:
             json.dump(artifact, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)

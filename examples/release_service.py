@@ -62,3 +62,16 @@ svc.flush()
 print(f"\nalpha second release: {t2.status}, "
       f"spent ε={svc.session('alpha').spent()[0]:.3f} of "
       f"{svc.session('alpha').eps_budget}")
+
+# --- obs: the same story, read back from the metrics registry ----------------
+snap = svc.metrics_snapshot()
+lat = snap["histograms"]['admission_to_answer_seconds{kind=mwem}']
+print(f"\nmetrics: admission→answer (mwem) "
+      f"p50={lat['p50'] * 1e3:.1f}ms p95={lat['p95'] * 1e3:.1f}ms "
+      f"over {lat['count']} releases")
+print(f"metrics: cache hits={snap['counters']['answer_cache_hits_total']} "
+      f"misses={snap['counters']['answer_cache_misses_total']}, "
+      f"rejections={sum(v for k, v in snap['counters'].items() if k.startswith('admission_rejections_total'))}")
+print(f"metrics: alpha ε-spent gauge="
+      f"{snap['gauges']['tenant_eps_spent{tenant=alpha}']:.3f} "
+      f"(matches ledger: {svc.session('alpha').spent()[0]:.3f})")

@@ -50,17 +50,32 @@ class PrivacyLedger:
     events: list = field(default_factory=list)
     index_failure_mass: float = 0.0  # γ: P[k-MIPS structure answers wrongly]
     approx_slack: float = 0.0        # Σ 2c from runtime-preserving approx top-k (Thm F.2)
+    # observers called with (self) after every mutating record — the obs
+    # layer hangs per-tenant ε/δ-spent gauges here. Excluded from repr/eq
+    # so ledgers still compare by their privacy state alone.
+    hooks: list = field(default_factory=list, repr=False, compare=False)
+
+    def add_hook(self, fn) -> None:
+        """Register ``fn(ledger)`` to fire after every mutating record."""
+        self.hooks.append(fn)
+
+    def _notify(self) -> None:
+        for fn in self.hooks:
+            fn(self)
 
     def record(self, eps0: float, delta0: float = 0.0, label: str = "") -> None:
         self.events.append((eps0, delta0, label))
+        self._notify()
 
     def record_index_failure(self, gamma: float) -> None:
         """Thm 3.3: an imperfect index adds γ to the δ of the whole run."""
         self.index_failure_mass += gamma
+        self._notify()
 
     def record_approx_slack(self, c: float) -> None:
         """Thm F.2: a c-approximate top-k costs +2c in ε for that invocation."""
         self.approx_slack += 2.0 * c
+        self._notify()
 
     def record_events(self, events, gamma: float = 0.0, slack: float = 0.0) -> None:
         """Append a pre-computed cost bundle (the admitted counterpart of
@@ -69,6 +84,7 @@ class PrivacyLedger:
         self.events.extend((e0, d0, label) for e0, d0, label in events)
         self.index_failure_mass += gamma
         self.approx_slack += slack
+        self._notify()
 
     def bundle(self) -> tuple[list, float, float]:
         """Snapshot of the ledger's raw cost state ``(events, γ, Σ2c)`` —

@@ -42,7 +42,6 @@ the same `_record_iteration` path as the other drivers.
 from __future__ import annotations
 
 import math
-import time
 from functools import partial
 from typing import Optional
 
@@ -69,6 +68,9 @@ from repro.core.mwem import (
 )
 from repro.core.queries import max_error
 from repro.kernels.mwem_step.ops import mwem_step_supported, mwu_apply
+from repro.obs.clock import perf_counter
+from repro.obs.telemetry import aggregate_traces, record_run
+from repro.obs.trace import annotate as obs_annotate
 
 
 def _fold_axes(key, axes):
@@ -578,10 +580,11 @@ def run_mwem_sharded(
 
     args = (Qd, cents_d, cells_d, h_d, logw0, p_sum0, sel_keys, meas_keys)
     driver = _compiled_driver(entry, *args)
-    t0 = time.perf_counter()
-    logw, p_sum, traces = driver(*args)
-    jax.block_until_ready(p_sum)
-    total = time.perf_counter() - t0
+    t0 = perf_counter()
+    with obs_annotate("mwem/sharded"):
+        logw, p_sum, traces = driver(*args)
+        jax.block_until_ready(p_sum)
+    total = perf_counter() - t0
 
     traces = jax.device_get(traces)
     res.selected = [int(w) for w in traces["winner"]]
@@ -600,6 +603,10 @@ def run_mwem_sharded(
     res.final_error = float(max_error(jnp.asarray(Q, jnp.float32),
                                       jnp.asarray(h, jnp.float32),
                                       res.p_hat))
+    res.telemetry = record_run(
+        workload="mwem", driver="sharded", mode=cfg.mode, m=m,
+        n_scored=res.n_scored, overflow_count=res.overflow_count,
+        total_seconds=total, amortized=True)
     return res
 
 
@@ -643,7 +650,7 @@ def run_mwem_sharded_batch(
                        NamedSharding(mesh, P(data_axes, "model")))
 
     results = []
-    t0 = time.perf_counter()
+    t0 = perf_counter()
     for b in range(B):
         lane_ledger = ledgers[b] if ledgers is not None else None
         if ledgers is not None and lane_ledger is None:
@@ -651,13 +658,20 @@ def run_mwem_sharded_batch(
         results.append(run_mwem_sharded(
             Q, h[b] if batched_h else h, cfg, keys[b], mesh=mesh,
             index=index, ledger=lane_ledger))
-    total = time.perf_counter() - t0
+    total = perf_counter() - t0
 
     per_run = PrivacyLedger()
     per_run.record_events(*release_cost(cfg, m, U, index=index))
     errors = None
     if cfg.eval_every:
         errors = np.asarray([[e for _, e in r.errors] for r in results])
+    # aggregate only (no publish): each lane's run_mwem_sharded already
+    # published its own record — re-publishing here would double-count
+    telemetry = aggregate_traces(
+        workload="mwem", driver="sharded", mode=cfg.mode, m=m,
+        n_scored=np.asarray([r.n_scored for r in results]),
+        overflow_count=int(sum(r.overflow_count for r in results)),
+        total_seconds=total, amortized=True, lanes=B)
     return MWEMBatchResult(
         p_hat=jnp.stack([r.p_hat for r in results]),
         final_errors=np.asarray([r.final_error for r in results]),
@@ -669,6 +683,7 @@ def run_mwem_sharded_batch(
         total_seconds=total,
         ledger=per_run,
         ledgers=list(ledgers) if ledgers is not None else None,
+        telemetry=telemetry,
     )
 
 

@@ -24,7 +24,6 @@ key chain, so they are bitwise interchangeable (tests/test_lp_fused.py).
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass, field
 from typing import NamedTuple, Optional
 
@@ -41,6 +40,9 @@ from repro.core.lp_scalar import (ScalarLPConfig, _check_lp_fast_index,
                                   _lp_fused_driver, _record_lp_iteration,
                                   _resolve_lp_driver, lp_split_chain,
                                   scalar_lp_release_cost)
+from repro.obs.clock import perf_counter
+from repro.obs.telemetry import MechanismTelemetry, record_run
+from repro.obs.trace import annotate as obs_annotate
 
 
 @dataclass(frozen=True)
@@ -68,6 +70,7 @@ class DualLPResult:
     overflow_count: int = 0
     iter_seconds: list = field(default_factory=list)
     ledger: PrivacyLedger = field(default_factory=PrivacyLedger)
+    telemetry: Optional[MechanismTelemetry] = None  # repro.obs aggregation
 
 
 class _DualCalibration(NamedTuple):
@@ -260,16 +263,23 @@ def solve_constraint_private_lp_fused(
                              _dual_core, _dual_statics(cfg, cal, opt), "dual")
     args = (A, b, c, N, key)
     driver = _compiled_driver(entry, *args)
-    t0 = time.perf_counter()
-    x_bar, traces = driver(*args)
-    jax.block_until_ready(x_bar)
-    total = time.perf_counter() - t0
+    t0 = perf_counter()
+    with obs_annotate("lp_dual/fused"):
+        x_bar, traces = driver(*args)
+        jax.block_until_ready(x_bar)
+    total = perf_counter() - t0
 
     sel_t, n_scored_t, _tail_t, over_t = jax.device_get(traces)
     res.selected = [int(s) for s in sel_t]
     res.n_scored = [int(s) for s in n_scored_t]
     res.overflow_count = int(np.sum(over_t))
     res.iter_seconds = [total / cal.T] * cal.T
+    # the dual oracle scores the d vertices {N_j}, so d is this
+    # mechanism's candidate-set size ("m" in telemetry terms)
+    res.telemetry = record_run(
+        workload="lp_dual", driver="fused", mode=cfg.mode, m=d,
+        n_scored=n_scored_t, overflow_count=res.overflow_count,
+        total_seconds=total, amortized=True)
     for _ in range(cal.T):
         _record_lp_iteration(res.ledger, cfg.mode, cal.eps_prime,
                              "dual_oracle", c_idx, cfg.margin_slack)
@@ -320,7 +330,7 @@ def _solve_constraint_private_lp_host(
 
     for _ in range(cal.T):
         key, k_sel = jax.random.split(key)
-        t0 = time.perf_counter()
+        t0 = perf_counter()
         if cfg.mode == "exact":
             j = int(_exact_select_dual(k_sel, N, y, cal.scale))
             res.n_scored.append(d)
@@ -343,13 +353,17 @@ def _solve_constraint_private_lp_host(
         logY, y = _dual_update(logY, x_vertex, A, b, cal.eta, cal.rho,
                                int(cfg.s))
         jax.block_until_ready(y)
-        res.iter_seconds.append(time.perf_counter() - t0)
+        res.iter_seconds.append(perf_counter() - t0)
         res.selected.append(j)
 
     x_bar = x_sum / cal.T
     res.x_bar = x_bar
     res.violations = A @ x_bar - b
     res.n_violated = int(jnp.sum(res.violations > cfg.alpha))
+    res.telemetry = record_run(
+        workload="lp_dual", driver="host", mode=cfg.mode, m=d,
+        n_scored=res.n_scored, overflow_count=res.overflow_count,
+        total_seconds=sum(res.iter_seconds), amortized=False)
     return res
 
 

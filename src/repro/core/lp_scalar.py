@@ -36,7 +36,6 @@ decorrelated from the failed lazy draw (both drivers, bitwise-aligned).
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import NamedTuple, Optional
@@ -49,6 +48,9 @@ from repro.core.accountant import PrivacyLedger, calibrate_eps0
 from repro.core.gumbel import gumbel
 from repro.core.lazy_em import (default_tail_cap, fallback_key,
                                 lazy_em_from_topk)
+from repro.obs.clock import perf_counter
+from repro.obs.telemetry import MechanismTelemetry, record_run
+from repro.obs.trace import annotate as obs_annotate
 
 
 @dataclass(frozen=True)
@@ -76,6 +78,7 @@ class ScalarLPResult:
     overflow_count: int = 0
     iter_seconds: list = field(default_factory=list)
     ledger: PrivacyLedger = field(default_factory=PrivacyLedger)
+    telemetry: Optional[MechanismTelemetry] = None  # repro.obs aggregation
 
 
 @dataclass
@@ -90,6 +93,7 @@ class ScalarLPBatchResult:
     total_seconds: float = 0.0
     ledger: PrivacyLedger = field(default_factory=PrivacyLedger)  # per run
     ledgers: Optional[list] = None  # per-lane ledgers when the caller passed them
+    telemetry: Optional[MechanismTelemetry] = None  # whole-batch aggregation
 
 
 class _LPCalibration(NamedTuple):
@@ -336,16 +340,21 @@ def solve_scalar_lp_fused(
                              _scalar_core, _scalar_statics(cfg, cal), "scalar")
     args = (A, b, key)
     driver = _compiled_driver(entry, *args)
-    t0 = time.perf_counter()
-    x_bar, traces = driver(*args)
-    jax.block_until_ready(x_bar)
-    total = time.perf_counter() - t0
+    t0 = perf_counter()
+    with obs_annotate("lp_scalar/fused"):
+        x_bar, traces = driver(*args)
+        jax.block_until_ready(x_bar)
+    total = perf_counter() - t0
 
     sel_t, n_scored_t, _tail_t, over_t = jax.device_get(traces)
     res.selected = [int(s) for s in sel_t]
     res.n_scored = [int(s) for s in n_scored_t]
     res.overflow_count = int(np.sum(over_t))
     res.iter_seconds = [total / cal.T] * cal.T
+    res.telemetry = record_run(
+        workload="lp_scalar", driver="fused", mode=cfg.mode, m=m,
+        n_scored=n_scored_t, overflow_count=res.overflow_count,
+        total_seconds=total, amortized=True)
     for _ in range(cal.T):
         _record_lp_iteration(res.ledger, cfg.mode, cal.eps0, "lp_em",
                              c_idx, cfg.margin_slack)
@@ -409,10 +418,11 @@ def solve_lp_batch(
                              batch_axes=(None, 0 if batched_b else None, 0))
     args = (A, b, keys)
     driver = _compiled_driver(entry, *args)
-    t0 = time.perf_counter()
-    x_bar, traces = driver(*args)
-    jax.block_until_ready(x_bar)
-    total = time.perf_counter() - t0
+    t0 = perf_counter()
+    with obs_annotate("lp_scalar/batch"):
+        x_bar, traces = driver(*args)
+        jax.block_until_ready(x_bar)
+    total = perf_counter() - t0
 
     viol = x_bar @ A.T - (b if batched_b else b[None, :])   # (B, m)
     violated_fracs = np.asarray(jnp.mean(viol > cfg.alpha, axis=1))
@@ -430,6 +440,11 @@ def solve_lp_batch(
                                    ledger.approx_slack)
 
     traces = jax.device_get(traces)
+    telemetry = record_run(
+        workload="lp_scalar", driver="fused", mode=cfg.mode, m=m,
+        n_scored=np.asarray(traces[1]),
+        overflow_count=int(np.asarray(traces[3]).sum()),
+        total_seconds=total, amortized=True, lanes=B)
     return ScalarLPBatchResult(
         x_bar=x_bar,
         violated_fracs=violated_fracs,
@@ -439,6 +454,7 @@ def solve_lp_batch(
         total_seconds=total,
         ledger=ledger,
         ledgers=list(ledgers) if ledgers is not None else None,
+        telemetry=telemetry,
     )
 
 
@@ -482,7 +498,7 @@ def _solve_scalar_lp_host(
 
     for _ in range(cal.T):
         key, k_sel = jax.random.split(key)
-        t0 = time.perf_counter()
+        t0 = perf_counter()
         if cfg.mode == "exact":
             sel = int(_exact_select_lp(k_sel, A, b, x, cal.scale))
             res.n_scored.append(m)
@@ -504,13 +520,17 @@ def _solve_scalar_lp_host(
         logX, x = _lp_update(logX, A[sel], cal.eta, cal.rho)
         x_sum = x_sum + x
         jax.block_until_ready(x)
-        res.iter_seconds.append(time.perf_counter() - t0)
+        res.iter_seconds.append(perf_counter() - t0)
         res.selected.append(sel)
 
     x_bar = x_sum / cal.T
     res.x_bar = x_bar
     res.violations = A @ x_bar - b
     res.violated_frac = float(jnp.mean(res.violations > cfg.alpha))
+    res.telemetry = record_run(
+        workload="lp_scalar", driver="host", mode=cfg.mode, m=m,
+        n_scored=res.n_scored, overflow_count=res.overflow_count,
+        total_seconds=sum(res.iter_seconds), amortized=False)
     return res
 
 

@@ -51,7 +51,6 @@ Implementation notes:
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable, NamedTuple, Optional
@@ -61,6 +60,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accountant import PrivacyLedger, calibrate_eps0
+from repro.obs.clock import perf_counter
+from repro.obs.telemetry import MechanismTelemetry, aggregate_traces, record_run
+from repro.obs.trace import annotate as obs_annotate
 from repro.core.gumbel import gumbel
 from repro.core.lazy_em import default_tail_cap, fallback_key, lazy_em_from_topk
 from repro.core.queries import max_error
@@ -116,6 +118,10 @@ class MWEMResult:
     overflow_count: int = 0
     iter_seconds: list = field(default_factory=list)
     ledger: PrivacyLedger = field(default_factory=PrivacyLedger)
+    # host-side aggregation of the scan traces (repro.obs.telemetry) —
+    # always populated by the drivers; `amortized=True` marks timing that
+    # covers a whole scan/batch rather than measured per-iteration steps
+    telemetry: Optional[MechanismTelemetry] = None
 
 
 @dataclass
@@ -132,6 +138,7 @@ class MWEMBatchResult:
     total_seconds: float = 0.0
     ledger: PrivacyLedger = field(default_factory=PrivacyLedger)  # per run
     ledgers: Optional[list] = None  # per-lane ledgers when the caller passed them
+    telemetry: Optional[MechanismTelemetry] = None  # whole-batch aggregation
 
     def unbatch(self) -> list:
         """Materialize one MWEMResult per batch element.
@@ -139,9 +146,12 @@ class MWEMBatchResult:
         Each element carries its own ledger when the caller passed per-lane
         ledgers to `run_mwem_batch`; otherwise all elements share the
         per-run ledger (and the B× composition is the caller's contract —
-        DESIGN.md §2). Lanes execute concurrently under vmap, so each
-        element's ``iter_seconds`` is the whole batch's wall-clock over T —
-        per-run latency, not per-lane throughput.
+        DESIGN.md §2). Lanes execute concurrently under vmap, so there is
+        no honest per-lane, per-iteration wall-clock: ``iter_seconds``
+        stays empty and each element's ``telemetry`` record carries the
+        whole batch's ``total_seconds`` with ``amortized=True`` — callers
+        that need timing read it there instead of mistaking an invented
+        ``total/T`` split for a measurement.
         """
         B, T = self.selected.shape
         out = []
@@ -151,6 +161,19 @@ class MWEMBatchResult:
                 errors = [(t, float(e)) for t, e in
                           zip(range(self.eval_every, T + 1, self.eval_every),
                               self.errors[b])]
+            tel = None
+            if self.telemetry is not None:
+                tel = aggregate_traces(
+                    workload=self.telemetry.workload,
+                    driver=self.telemetry.driver,
+                    mode=self.telemetry.mode,
+                    m=self.telemetry.m,
+                    n_scored=self.n_scored[b],
+                    overflow_count=int(self.overflow_counts[b]),
+                    total_seconds=self.total_seconds,  # whole-batch wall-clock
+                    amortized=True,
+                    lanes=1,
+                )
             out.append(MWEMResult(
                 p_hat=self.p_hat[b],
                 final_error=float(self.final_errors[b]),
@@ -158,8 +181,9 @@ class MWEMBatchResult:
                 selected=[int(s) for s in self.selected[b]],
                 n_scored=[int(s) for s in self.n_scored[b]],
                 overflow_count=int(self.overflow_counts[b]),
-                iter_seconds=[self.total_seconds / T] * T,
+                iter_seconds=[],
                 ledger=self.ledgers[b] if self.ledgers is not None else self.ledger,
+                telemetry=tel,
             ))
         return out
 
@@ -684,10 +708,11 @@ def run_mwem_fused(
     args = (jnp.asarray(Q, jnp.float32), jnp.asarray(h, jnp.float32),
             state0, key)
     driver = _compiled_driver(entry, *args)
-    t0 = time.perf_counter()
-    final_state, traces = driver(*args)
-    jax.block_until_ready(final_state.p_sum)
-    total = time.perf_counter() - t0
+    t0 = perf_counter()
+    with obs_annotate("mwem/fused"):
+        final_state, traces = driver(*args)
+        jax.block_until_ready(final_state.p_sum)
+    total = perf_counter() - t0
 
     traces = jax.device_get(traces)
     sel_t, n_scored_t, _tail_t, over_t = traces[:4]
@@ -695,6 +720,10 @@ def run_mwem_fused(
     res.n_scored = [int(s) for s in n_scored_t]
     res.overflow_count = int(np.sum(over_t))
     res.iter_seconds = [total / cfg.T] * cfg.T
+    res.telemetry = record_run(
+        workload="mwem", driver="fused", mode=cfg.mode, m=m,
+        n_scored=n_scored_t, overflow_count=res.overflow_count,
+        total_seconds=total, amortized=True)
     for _ in range(cfg.T):
         _record_iteration(res.ledger, cfg.mode, cfg.update_rule, cal,
                           c_idx, cfg.margin_slack)
@@ -763,17 +792,23 @@ def run_mwem_batch(
     cal = _calibrate(cfg, m, U)
     c_idx = _check_fast_index(cfg, index, fused=True)
 
+    batch_axes = (None, 0 if batched_h else None, 0, 0)
     entry = _fused_driver(index if cfg.mode == "fast" else None,
                           _fused_statics(cfg, cal),
-                          batch_axes=(None, 0 if batched_h else None, 0, 0))
+                          batch_axes=batch_axes)
+    driver_label = ("waved"
+                    if _waved_route(index if cfg.mode == "fast" else None,
+                                    batch_axes)
+                    else "fused")
     state0 = MWEMState(log_w=jnp.zeros((B, U), jnp.float32),
                        p_sum=jnp.zeros((B, U), jnp.float32))
     args = (jnp.asarray(Q, jnp.float32), h, state0, keys)
     driver = _compiled_driver(entry, *args)
-    t0 = time.perf_counter()
-    final_state, traces = driver(*args)
-    jax.block_until_ready(final_state.p_sum)
-    total = time.perf_counter() - t0
+    t0 = perf_counter()
+    with obs_annotate(f"mwem/batch/{driver_label}"):
+        final_state, traces = driver(*args)
+        jax.block_until_ready(final_state.p_sum)
+    total = perf_counter() - t0
 
     p_hat = final_state.p_sum / cfg.T
     final_errors = jnp.max(jnp.abs((h - p_hat) @ Q.T), axis=-1)
@@ -795,6 +830,11 @@ def run_mwem_batch(
     if cfg.eval_every:
         eval_ts = range(cfg.eval_every, cfg.T + 1, cfg.eval_every)
         errors = np.asarray(traces[4])[:, [t - 1 for t in eval_ts]]
+    telemetry = record_run(
+        workload="mwem", driver=driver_label, mode=cfg.mode, m=m,
+        n_scored=np.asarray(traces[1]),
+        overflow_count=int(np.asarray(traces[3]).sum()),
+        total_seconds=total, amortized=True, lanes=B)
     return MWEMBatchResult(
         p_hat=p_hat,
         final_errors=np.asarray(final_errors),
@@ -806,6 +846,7 @@ def run_mwem_batch(
         total_seconds=total,
         ledger=ledger,
         ledgers=list(ledgers) if ledgers is not None else None,
+        telemetry=telemetry,
     )
 
 
@@ -845,42 +886,48 @@ def _run_mwem_host(
                 margin_slack=cfg.margin_slack * cal.scale if cfg.margin_slack else 0.0,
             )
 
-    for t in range(cfg.T):
-        key, k_sel, k_meas = jax.random.split(key, 3)
-        t0 = time.perf_counter()
-        p = jax.nn.softmax(state.log_w)
-        v = h - p
-        if cfg.mode == "exact":
-            sel = int(_exact_select(k_sel, Q, v, scale=cal.scale))
-            res.n_scored.append(m)
-        else:
-            aug_idx, raw = index.query(v, cal.k)
-            out = fast_select(k_sel, aug_idx, raw, Q, v)
-            if bool(out.overflow):
-                # fresh fold of k_sel (lazy_em.fallback_key) — the lazy pass
-                # already consumed k_sel's Gumbels; the fused drivers fold
-                # identically in-graph so selection parity holds
-                sel = int(_exact_select(fallback_key(k_sel), Q, v,
-                                        scale=cal.scale))
-                res.overflow_count += 1
+    with obs_annotate("mwem/host"):
+        for t in range(cfg.T):
+            key, k_sel, k_meas = jax.random.split(key, 3)
+            t0 = perf_counter()
+            p = jax.nn.softmax(state.log_w)
+            v = h - p
+            if cfg.mode == "exact":
+                sel = int(_exact_select(k_sel, Q, v, scale=cal.scale))
                 res.n_scored.append(m)
             else:
-                sel = int(out.index) % m
-                res.n_scored.append(int(out.n_scored))
-        _record_iteration(res.ledger, cfg.mode, cfg.update_rule, cal,
-                          c_idx, cfg.margin_slack)
-        state = _mwu_step(state, p, Q[sel], h, k_meas, rule=cfg.update_rule,
-                          eta=cal.eta, lap_scale=cal.lap_scale)
-        jax.block_until_ready(state.log_w)
-        res.iter_seconds.append(time.perf_counter() - t0)
-        res.selected.append(sel)
-        if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
-            p_avg = state.p_sum / (t + 1)
-            res.errors.append((t + 1, float(max_error(Q, h, p_avg))))
+                aug_idx, raw = index.query(v, cal.k)
+                out = fast_select(k_sel, aug_idx, raw, Q, v)
+                if bool(out.overflow):
+                    # fresh fold of k_sel (lazy_em.fallback_key) — the lazy
+                    # pass already consumed k_sel's Gumbels; the fused
+                    # drivers fold identically in-graph so parity holds
+                    sel = int(_exact_select(fallback_key(k_sel), Q, v,
+                                            scale=cal.scale))
+                    res.overflow_count += 1
+                    res.n_scored.append(m)
+                else:
+                    sel = int(out.index) % m
+                    res.n_scored.append(int(out.n_scored))
+            _record_iteration(res.ledger, cfg.mode, cfg.update_rule, cal,
+                              c_idx, cfg.margin_slack)
+            state = _mwu_step(state, p, Q[sel], h, k_meas,
+                              rule=cfg.update_rule, eta=cal.eta,
+                              lap_scale=cal.lap_scale)
+            jax.block_until_ready(state.log_w)
+            res.iter_seconds.append(perf_counter() - t0)
+            res.selected.append(sel)
+            if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
+                p_avg = state.p_sum / (t + 1)
+                res.errors.append((t + 1, float(max_error(Q, h, p_avg))))
 
     p_hat = state.p_sum / cfg.T
     res.p_hat = p_hat
     res.final_error = float(max_error(Q, h, p_hat))
+    res.telemetry = record_run(
+        workload="mwem", driver="host", mode=cfg.mode, m=m,
+        n_scored=res.n_scored, overflow_count=res.overflow_count,
+        total_seconds=sum(res.iter_seconds), amortized=False)
     return res
 
 

@@ -26,6 +26,7 @@ from repro.kernels.ivf_probe.ivf_probe import (ivf_probe_stream_batch_pallas,
                                                ivf_probe_stream_pallas)
 from repro.kernels.ivf_probe.ref import batch_probe_slots
 from repro.kernels.mips_topk.ops import _pad_to, mips_topk
+from repro.obs.trace import scope as obs_scope
 
 
 def _pad_cell_blocks(cell_rows, cells, block_d: int, cap_mult: int = 8):
@@ -66,9 +67,10 @@ def ivf_probe_topk(cents: jax.Array, cell_rows: jax.Array, cells: jax.Array,
                          interpret=interpret, absolute=absolute)
     rows_p, ids_p = _pad_cell_blocks(cell_rows, cells, block_d)
     qp = _pad_to(q, 0, block_d)
-    out_i, out_s = ivf_probe_stream_pallas(
-        probe, rows_p, ids_p, qp, k, block_d=block_d, interpret=interpret,
-        absolute=absolute)
+    with obs_scope("kernel/ivf_probe"):
+        out_i, out_s = ivf_probe_stream_pallas(
+            probe, rows_p, ids_p, qp, k, block_d=block_d, interpret=interpret,
+            absolute=absolute)
     n_valid = jnp.sum(cells[probe] >= 0).astype(jnp.int32)
     return out_i, out_s, n_valid
 
@@ -97,8 +99,9 @@ def ivf_probe_topk_batch(cents: jax.Array, cell_rows: jax.Array,
                                              absolute)
     rows_p, ids_p = _pad_cell_blocks(cell_rows, cells, block_d)
     qbp = _pad_to(Vb.T, 0, block_d)                       # (dp, B)
-    out_i, out_s = ivf_probe_stream_batch_pallas(
-        slots, rows_p, ids_p, qbp, member, k, block_d=block_d,
-        interpret=interpret, absolute=absolute)
+    with obs_scope("kernel/ivf_probe_batch"):
+        out_i, out_s = ivf_probe_stream_batch_pallas(
+            slots, rows_p, ids_p, qbp, member, k, block_d=block_d,
+            interpret=interpret, absolute=absolute)
     n_valid = jnp.sum(cells[probe] >= 0, axis=(1, 2)).astype(jnp.int32)
     return out_i, out_s, n_valid

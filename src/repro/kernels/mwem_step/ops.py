@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.kernels.mwem_step.mwem_step import (gather_score_pallas,
                                                mwem_step_pallas)
 from repro.kernels.mwem_step.ref import UPDATE_RULES, mwem_step_ref
+from repro.obs.trace import scope as obs_scope
 
 # Whole-U residency budget: each program keeps ~7 (1, U) f32 blocks live
 # (3 state in + row + h + 3 out, noise negligible) and Pallas double-buffers
@@ -71,11 +72,12 @@ def mwem_step(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
         return mwem_step_ref(log_w, p, p_sum, q_rows[sel], h, noise,
                              rule=rule, eta=eta)
     interpret = _resolve_interpret(interpret)
-    out = mwem_step_pallas(
-        jnp.reshape(sel, (1,)).astype(jnp.int32),
-        log_w[None], p[None], p_sum[None], q_rows, h[None],
-        jnp.reshape(jnp.asarray(noise, jnp.float32), (1,)),
-        rule=rule, eta=eta, interpret=interpret)
+    with obs_scope("kernel/mwem_step"):
+        out = mwem_step_pallas(
+            jnp.reshape(sel, (1,)).astype(jnp.int32),
+            log_w[None], p[None], p_sum[None], q_rows, h[None],
+            jnp.reshape(jnp.asarray(noise, jnp.float32), (1,)),
+            rule=rule, eta=eta, interpret=interpret)
     return tuple(o[0] for o in out)
 
 
@@ -99,9 +101,10 @@ def mwem_step_batch(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
             log_w, p, p_sum, q_rows[sel], h, noise)
     interpret = _resolve_interpret(interpret)
     h2 = h if h.ndim == 2 else h[None]
-    return mwem_step_pallas(sel.astype(jnp.int32), log_w, p, p_sum, q_rows,
-                            h2, noise.astype(jnp.float32),
-                            rule=rule, eta=eta, interpret=interpret)
+    with obs_scope("kernel/mwem_step_batch"):
+        return mwem_step_pallas(sel.astype(jnp.int32), log_w, p, p_sum,
+                                q_rows, h2, noise.astype(jnp.float32),
+                                rule=rule, eta=eta, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -120,7 +123,8 @@ def aug_gather_score(q_rows: jax.Array, v: jax.Array, aug_idx: jax.Array, *,
     if not mwem_step_supported(U):
         return (q_rows[base] @ v) * sign
     interpret = _resolve_interpret(interpret)
-    return gather_score_pallas(base, sign, q_rows, v, interpret=interpret)
+    with obs_scope("kernel/aug_gather_score"):
+        return gather_score_pallas(base, sign, q_rows, v, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("rule", "eta", "interpret"))
@@ -137,9 +141,10 @@ def mwu_apply(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
         return mwem_step_ref(log_w, p, p_sum, q_row, h, noise,
                              rule=rule, eta=eta)
     interpret = _resolve_interpret(interpret)
-    out = mwem_step_pallas(
-        jnp.zeros((1,), jnp.int32),
-        log_w[None], p[None], p_sum[None], q_row[None], h[None],
-        jnp.reshape(jnp.asarray(noise, jnp.float32), (1,)),
-        rule=rule, eta=eta, interpret=interpret)
+    with obs_scope("kernel/mwu_apply"):
+        out = mwem_step_pallas(
+            jnp.zeros((1,), jnp.int32),
+            log_w[None], p[None], p_sum[None], q_row[None], h[None],
+            jnp.reshape(jnp.asarray(noise, jnp.float32), (1,)),
+            rule=rule, eta=eta, interpret=interpret)
     return tuple(o[0] for o in out)

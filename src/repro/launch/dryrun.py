@@ -20,7 +20,7 @@ skipped unless --force.
 
 import argparse
 import json
-import time
+from repro.obs.clock import perf_counter
 import traceback
 
 
@@ -40,16 +40,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         with open(out_path) as f:
             return json.load(f)
 
-    t0 = time.time()
+    t0 = perf_counter()
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     cell = build_cell(arch, shape_name, mesh, multi_pod)
 
     with mesh:
         lowered = jax.jit(cell.fn).lower(*cell.args)
-        t_lower = time.time() - t0
+        t_lower = perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         ca = compiled.cost_analysis()
         hlo = analyze_hlo(compiled.as_text())
@@ -127,7 +127,7 @@ def run_paper_cell(multi_pod: bool, out_dir: str, force: bool = False,
         with open(out_path) as f:
             return json.load(f)
 
-    t0 = time.time()
+    t0 = perf_counter()
     mesh = make_production_mesh(multi_pod=multi_pod)
     fn, args, meta = build_distributed_mwem_cell(mesh, multi_pod, mode=mode,
                                                  T=scan_steps)
@@ -139,7 +139,7 @@ def run_paper_cell(multi_pod: bool, out_dir: str, force: bool = False,
     record = {
         **meta,
         "mesh": mesh_tag,
-        "compile_s": round(time.time() - t0, 2),
+        "compile_s": round(perf_counter() - t0, 2),
         "memory": {
             "argument_bytes_per_dev": mem.argument_size_in_bytes,
             "temp_bytes_per_dev": mem.temp_size_in_bytes,

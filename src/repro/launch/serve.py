@@ -7,7 +7,7 @@
 from __future__ import annotations
 
 import argparse
-import time
+from repro.obs.clock import perf_counter
 
 import jax
 import numpy as np
@@ -46,9 +46,9 @@ def main():
     engine = ServeEngine(model, params, batch_size=args.batch_size,
                          max_len=args.prompt_len + args.new_tokens + 4,
                          seed=args.seed)
-    t0 = time.time()
+    t0 = perf_counter()
     engine.run(requests)
-    dt = time.time() - t0
+    dt = perf_counter() - t0
     total = sum(len(r.out_tokens) for r in requests)
     print(f"served {len(requests)} requests, {total} tokens "
           f"in {dt:.2f}s ({total/dt:.1f} tok/s)")

@@ -13,7 +13,7 @@ elasticity hooks from repro.train.elastic.
 from __future__ import annotations
 
 import argparse
-import time
+from repro.obs.clock import perf_counter
 
 import jax
 import jax.numpy as jnp
@@ -88,7 +88,7 @@ def main():
                 print(f"resumed from step {step}")
 
     losses = []
-    t0 = time.time()
+    t0 = perf_counter()
     for step in range(start_step, args.steps):
         if pipeline is not None:
             tokens = pipeline.sample_batch(step, 0, args.batch, args.seq)
@@ -99,7 +99,7 @@ def main():
         losses.append(float(metrics["loss"]))
         if (step + 1) % args.log_every == 0:
             rate = (step + 1 - start_step) * args.batch * args.seq \
-                / (time.time() - t0)
+                / (perf_counter() - t0)
             print(f"step {step+1:5d} loss {losses[-1]:.4f} "
                   f"tok/s {rate:,.0f}")
         if ckpt and (step + 1) % args.ckpt_every == 0:

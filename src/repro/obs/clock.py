@@ -1,0 +1,23 @@
+"""The repo's single timing seam.
+
+Every piece of `src/` that needs a clock imports it from here —
+`tools/check_timing_lint.py` (run in CI) rejects raw ``time.time()`` /
+``time.perf_counter()`` calls anywhere else under ``src/``, so timing
+policy has one place to change:
+
+* `perf_counter` — monotonic high-resolution clock for *durations*
+  (driver dispatch timing, latency histograms).
+* `monotonic` — monotonic clock for *event ordering* (the obs event
+  sink, elastic fail/recover stamps): wall-clock `time.time()` can jump
+  backwards under NTP skew and reorder events; this cannot.
+* `wall_time` — the one sanctioned wall-clock read, for human-facing
+  timestamps only (never for ordering or arithmetic between events).
+"""
+
+from __future__ import annotations
+
+import time as _time
+
+perf_counter = _time.perf_counter
+monotonic = _time.monotonic
+wall_time = _time.time

@@ -1,0 +1,64 @@
+"""Monotonic-stamped event sink for discrete occurrences.
+
+Elastic fail/recover, admission rejections, cache flushes — anything
+that happens *at a moment* rather than *over a duration* goes through
+an `EventSink`. Stamps come from `clock.monotonic()` so ordering
+survives wall-clock (NTP) skew; each emit also bumps a per-kind counter
+in the registry when obs is enabled, so event rates show up in the same
+snapshot as everything else.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.obs import clock
+from repro.obs import trace as _trace
+from repro.obs.metrics import MetricsRegistry, default_registry
+
+
+@dataclass(frozen=True)
+class ObsEvent:
+    kind: str
+    t_mono: float  # monotonic stamp — order-comparable, not wall time
+    attrs: Tuple[Tuple[str, object], ...]
+
+    def attr(self, key: str, default=None):
+        for k, v in self.attrs:
+            if k == key:
+                return v
+        return default
+
+
+class EventSink:
+    """Append-only in-process event log + per-kind rate counters."""
+
+    def __init__(
+        self, registry: Optional[MetricsRegistry] = None, name: str = "events"
+    ) -> None:
+        self.events: List[ObsEvent] = []
+        self._registry = registry
+        self._name = name
+
+    def emit(self, kind: str, **attrs) -> ObsEvent:
+        ev = ObsEvent(
+            kind=kind,
+            t_mono=clock.monotonic(),
+            attrs=tuple(sorted(attrs.items())),
+        )
+        self.events.append(ev)
+        if _trace.enabled():
+            reg = self._registry if self._registry is not None else default_registry()
+            reg.counter(f"{self._name}_total", kind=kind).inc()
+        return ev
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+_default_sink = EventSink()
+
+
+def default_sink() -> EventSink:
+    return _default_sink

@@ -1,0 +1,266 @@
+"""Metrics core: counters, gauges, log-bucketed histograms, one registry.
+
+Design constraints (DESIGN.md §8):
+
+* **No sample storage.** The serving tier observes one latency per
+  release; a histogram that keeps raw samples grows without bound under
+  "millions of users" traffic. Buckets are log-spaced with growth factor
+  ``GROWTH = 2**0.25`` (~19% per bucket), so any quantile estimate is
+  within ~±9% of the true value — plenty for p50/p95/p99 dashboards —
+  while storage is O(log(max/min)) ints per series.
+* **Pull, don't push.** Instruments mutate plain Python state under one
+  registry lock; `snapshot()` / `to_json()` / `to_prometheus()` render
+  on demand. Nothing here touches JAX, so the obs layer can never
+  perturb a trace.
+* **Label sets are part of series identity**, Prometheus-style:
+  ``registry.counter("waves_total", kind="mwem")`` and ``kind="lp"`` are
+  distinct series under one name; mixing instrument kinds under one name
+  is an error.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+from typing import Dict, Iterable, Mapping, Optional, Tuple
+
+GROWTH = 2.0 ** 0.25
+_LOG_GROWTH = math.log(GROWTH)
+
+LabelItems = Tuple[Tuple[str, str], ...]
+
+
+def _label_items(labels: Mapping[str, object]) -> LabelItems:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def series_key(name: str, labels: LabelItems) -> str:
+    """Render ``name{k=v,...}`` — the snapshot/JSON dict key for a series."""
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={v}" for k, v in labels)
+    return f"{name}{{{inner}}}"
+
+
+class Counter:
+    """Monotonically non-decreasing count (events, rejections, overflows)."""
+
+    kind = "counter"
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counters only go up (inc({amount}))")
+        self.value += float(amount)
+
+    def snapshot(self) -> float:
+        return self.value
+
+
+class Gauge:
+    """Last-write-wins scalar (occupancy, remaining budget, ratios)."""
+
+    kind = "gauge"
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = float("nan")
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        base = 0.0 if math.isnan(self.value) else self.value
+        self.value = base + float(amount)
+
+    def dec(self, amount: float = 1.0) -> None:
+        self.inc(-amount)
+
+    def snapshot(self) -> float:
+        return self.value
+
+
+class Histogram:
+    """Log-bucketed value distribution with quantile estimation.
+
+    A value ``v > 0`` lands in integer bucket ``floor(log(v)/log(GROWTH))``;
+    ``v <= 0`` lands in a dedicated zero-bucket (durations can round to 0
+    on coarse clocks). Quantiles are estimated by walking the cumulative
+    bucket counts and returning the hit bucket's geometric midpoint, so
+    the estimate is exact in rank and within one bucket width in value.
+    """
+
+    kind = "histogram"
+    __slots__ = ("buckets", "zero_count", "count", "sum", "min", "max")
+
+    def __init__(self) -> None:
+        self.buckets: Dict[int, int] = {}
+        self.zero_count = 0
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        if math.isnan(v):
+            raise ValueError("histogram.observe(nan)")
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+        if v <= 0.0:
+            self.zero_count += 1
+        else:
+            idx = math.floor(math.log(v) / _LOG_GROWTH)
+            self.buckets[idx] = self.buckets.get(idx, 0) + 1
+
+    def quantile(self, q: float) -> float:
+        """Estimated q-quantile (q in [0, 1]); nan when empty."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        if self.count == 0:
+            return float("nan")
+        # nearest-rank on the cumulative bucket counts
+        rank = q * (self.count - 1)
+        cum = self.zero_count
+        if cum > rank:
+            return 0.0
+        for idx in sorted(self.buckets):
+            cum += self.buckets[idx]
+            if cum > rank:
+                # geometric midpoint of [GROWTH**idx, GROWTH**(idx+1)),
+                # clamped to the observed range so p0/p100 stay honest
+                mid = GROWTH ** (idx + 0.5)
+                return min(max(mid, self.min), self.max)
+        return self.max  # unreachable unless float dust; be safe
+
+    def snapshot(self) -> Dict[str, float]:
+        if self.count == 0:
+            return {"count": 0, "sum": 0.0}
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "min": self.min,
+            "max": self.max,
+            "mean": self.sum / self.count,
+            "p50": self.quantile(0.50),
+            "p90": self.quantile(0.90),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+        }
+
+
+_INSTRUMENTS = {cls.kind: cls for cls in (Counter, Gauge, Histogram)}
+
+
+class MetricsRegistry:
+    """Holds every (name, labels) series; thread-safe get-or-create."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        # (name, label items) -> instrument; kind recorded per name
+        self._series: Dict[Tuple[str, LabelItems], object] = {}
+        self._kinds: Dict[str, str] = {}
+
+    def _get(self, kind: str, name: str, labels: Mapping[str, object]):
+        items = _label_items(labels)
+        with self._lock:
+            prior = self._kinds.get(name)
+            if prior is not None and prior != kind:
+                raise TypeError(
+                    f"metric {name!r} already registered as {prior}, not {kind}"
+                )
+            self._kinds[name] = kind
+            inst = self._series.get((name, items))
+            if inst is None:
+                inst = _INSTRUMENTS[kind]()
+                self._series[(name, items)] = inst
+            return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get("histogram", name, labels)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._series.clear()
+            self._kinds.clear()
+
+    def snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Plain-dict view: {"counters": {...}, "gauges": {...}, "histograms": {...}}."""
+        out: Dict[str, Dict[str, object]] = {
+            "counters": {},
+            "gauges": {},
+            "histograms": {},
+        }
+        with self._lock:
+            items = sorted(self._series.items())
+        for (name, labels), inst in items:
+            out[inst.kind + "s"][series_key(name, labels)] = inst.snapshot()
+        return out
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition (histograms as summary-style quantiles)."""
+        with self._lock:
+            items = sorted(self._series.items())
+            kinds = dict(self._kinds)
+        lines = []
+        seen_type = set()
+        for (name, labels), inst in items:
+            if name not in seen_type:
+                # log-bucket histograms export as precomputed quantiles,
+                # which is Prometheus's "summary" type
+                ptype = "summary" if kinds[name] == "histogram" else kinds[name]
+                lines.append(f"# TYPE {name} {ptype}")
+                seen_type.add(name)
+            if inst.kind == "histogram":
+                for q in (0.5, 0.9, 0.95, 0.99):
+                    qlabels = labels + (("quantile", f"{q:g}"),)
+                    lines.append(
+                        f"{name}{_prom_labels(qlabels)} {_prom_num(inst.quantile(q))}"
+                    )
+                lines.append(f"{name}_sum{_prom_labels(labels)} {_prom_num(inst.sum)}")
+                lines.append(f"{name}_count{_prom_labels(labels)} {inst.count}")
+            else:
+                lines.append(f"{name}{_prom_labels(labels)} {_prom_num(inst.value)}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+def _prom_labels(items: Iterable[Tuple[str, str]]) -> str:
+    items = tuple(items)
+    if not items:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in items)
+    return f"{{{inner}}}"
+
+
+def _prom_num(v: float) -> str:
+    if isinstance(v, float) and math.isnan(v):
+        return "NaN"
+    return f"{v:g}"
+
+
+_default = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-wide registry every layer publishes into by default."""
+    return _default
+
+
+def reset_default_registry() -> None:
+    """Drop all default-registry series (tests; fresh bench runs)."""
+    _default.reset()

@@ -1,0 +1,74 @@
+"""The `obs.enabled` switch and profiler annotation wrappers.
+
+Two annotation flavors, matching where the code runs:
+
+* `scope(name)` — **in-graph**: `jax.named_scope`, legal inside jitted
+  functions / scan bodies. Attaches the name to the emitted HLO ops so
+  XLA profiler timelines line up with logical phases (kernel call sites
+  in `kernels/*/ops.py`). Pure metadata: cannot change numerics.
+* `annotate(name)` — **host-side**: `jax.named_scope` *plus*
+  `jax.profiler.TraceAnnotation`, for driver dispatch and wave
+  execution on the host. TraceAnnotation shows up on the host timeline
+  when a profiler session is active and is a no-op otherwise.
+
+Both collapse to `nullcontext()` when obs is disabled. Neither path
+touches the key chain or any traced value, so enabled-vs-disabled
+results are bitwise identical (asserted in tests/test_obs.py).
+
+jit-cache caveat: `enabled()` is read at *trace* time, so flipping the
+switch after a shape is compiled will not re-trace — the cached
+executable keeps (or keeps lacking) its scope names. Harmless: names
+are metadata, and the bitwise-parity contract holds either way.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import ContextManager
+
+import jax
+
+try:  # host-side profiler annotation; absent on some minimal builds
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+except ImportError:  # pragma: no cover - jax always ships it in CI
+    _TraceAnnotation = None
+
+_enabled = True
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def set_enabled(flag: bool) -> None:
+    global _enabled
+    _enabled = bool(flag)
+
+
+@contextlib.contextmanager
+def disabled():
+    """Temporarily switch obs off (parity tests; silent bench lanes)."""
+    prev = _enabled
+    set_enabled(False)
+    try:
+        yield
+    finally:
+        set_enabled(prev)
+
+
+def scope(name: str) -> ContextManager:
+    """In-graph named scope; safe inside jit/scan bodies."""
+    if not _enabled:
+        return contextlib.nullcontext()
+    return jax.named_scope(name)
+
+
+def annotate(name: str) -> ContextManager:
+    """Host-side phase marker: named scope + profiler TraceAnnotation."""
+    if not _enabled:
+        return contextlib.nullcontext()
+    stack = contextlib.ExitStack()
+    stack.enter_context(jax.named_scope(name))
+    if _TraceAnnotation is not None:
+        stack.enter_context(_TraceAnnotation(name))
+    return stack

@@ -23,6 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs
+from repro.obs.metrics import default_registry
+
 
 @dataclass
 class Request:
@@ -95,7 +98,7 @@ class ServeEngine:
         so the batch axis is axis 1 on every leaf.
         """
         tokens = self._left_pad([req.prompt], pos)
-        with self._mesh_ctx():
+        with self._mesh_ctx(), obs.annotate("serve/engine/refill_prefill"):
             logits1, cache1 = self.model.prefill(self.params,
                                                  {"tokens": tokens},
                                                  max_len=self.max_len)
@@ -103,12 +106,16 @@ class ServeEngine:
             lambda c, c1: c.at[:, slot].set(c1[:, 0]), cache, cache1)
         first = self._sample(logits1, np.array([req.temperature], np.float32))
         self.refill_count += 1
+        if obs.enabled():
+            default_registry().counter("engine_refills_total").inc()
         return cache, int(first[0])
 
     def _run_wave(self, wave: List[Request], queue: Optional[Deque[Request]] = None):
         prompt_len = max(len(r.prompt) for r in wave)
         batch = {"tokens": self._left_pad([r.prompt for r in wave], prompt_len)}
-        with self._mesh_ctx():
+        if obs.enabled():
+            default_registry().counter("engine_waves_total").inc()
+        with self._mesh_ctx(), obs.annotate("serve/engine/prefill"):
             logits, cache = self.model.prefill(self.params, batch,
                                                max_len=self.max_len)
         slots: List[Optional[Request]] = list(wave)
@@ -143,7 +150,7 @@ class ServeEngine:
                     if r is not None:
                         r.done = True
                 break
-            with self._mesh_ctx():
+            with self._mesh_ctx(), obs.annotate("serve/engine/decode"):
                 logits, cache = self._decode(
                     self.params, cache,
                     next_tok[:, None].astype(jnp.int32), jnp.int32(pos))

@@ -51,6 +51,9 @@ from repro.core.lp_scalar import ScalarLPConfig, solve_lp_batch
 from repro.core.mwem import MWEMConfig, release_cost, run_mwem_batch
 from repro.mips import (FlatAbsIndex, FlatIndex, IVFIndex, LSHIndex,
                         ShardedIVFIndex, augment_complement, lp_scalar_rows)
+from repro.obs import trace as obs
+from repro.obs.clock import monotonic
+from repro.obs.metrics import MetricsRegistry, default_registry
 from repro.serve.admission import AdmissionController, AdmissionDecision
 from repro.serve.session import (Answer, ReleasedHistogram, ReleasedLP,
                                  TenantSession)
@@ -70,6 +73,8 @@ class ReleaseTicket:
     cost_bundle: tuple = ()          # (events, gamma, slack) reservation
     release: Optional[object] = None  # ReleasedHistogram | ReleasedLP
     final_error: float = float("nan")
+    submit_time: float = float("nan")   # monotonic stamp at submit()
+    latency_seconds: float = float("nan")  # admission → answered
 
 
 @dataclass
@@ -122,9 +127,13 @@ class ReleaseService:
     def __init__(self, Q, cfg: MWEMConfig, wave_size: int = 8,
                  index_kind: str = "flat", seed: int = 0,
                  tight_composition: bool = False, auto_flush: bool = True,
-                 mesh=None, use_pallas: str = "auto"):
+                 mesh=None, use_pallas: str = "auto",
+                 registry: Optional[MetricsRegistry] = None):
         self.Q = jnp.asarray(Q, jnp.float32)
         self.m, self.U = self.Q.shape
+        # where this service publishes its metrics; the process-wide
+        # default registry unless the caller isolates it (tests do)
+        self.metrics = registry if registry is not None else default_registry()
         # the service-level knob also drives the drivers' fused step body
         # (megakernel vs classic — DESIGN.md §7), so batched waves pick up
         # the VMEM-resident `kernels.mwem_step` route alongside the probe
@@ -189,7 +198,31 @@ class ReleaseService:
                                  eps_budget=eps_budget,
                                  delta_budget=delta_budget)
         self.sessions[tenant_id] = sess
+        self._register_ledger_gauges(sess)
         return sess
+
+    def _register_ledger_gauges(self, sess: TenantSession) -> None:
+        """Hang the obs gauges off the tenant's ledger: after every
+        mutating record, the per-tenant ε/δ-spent and remaining-budget
+        gauges recompute from `ledger.composed()` in the service's
+        composition mode — the snapshot always agrees with the ledger."""
+        tight = self.admission.tight
+        metrics = self.metrics
+
+        def update(ledger, sess=sess):
+            if not obs.enabled():
+                return
+            eps, delta = ledger.composed(tight=tight)
+            labels = dict(tenant=sess.tenant_id)
+            metrics.gauge("tenant_eps_spent", **labels).set(eps)
+            metrics.gauge("tenant_delta_spent", **labels).set(delta)
+            metrics.gauge("tenant_eps_remaining", **labels).set(
+                sess.eps_budget - eps)
+            metrics.gauge("tenant_delta_remaining", **labels).set(
+                sess.delta_budget - delta)
+
+        sess.ledger.add_hook(update)
+        update(sess.ledger)  # publish the zero-spend baseline immediately
 
     def session(self, tenant_id: str) -> TenantSession:
         return self.sessions[tenant_id]
@@ -235,6 +268,7 @@ class ReleaseService:
             seed=self._next_seed if seed is None else seed,
             status="queued" if decision.admitted else "rejected",
             decision=decision, cost_bundle=bundle,
+            submit_time=monotonic(),
         )
         self._next_ticket += 1
         if seed is None:
@@ -242,6 +276,9 @@ class ReleaseService:
         if not decision.admitted:
             sess.rejected_count += 1
             self.stats.rejected += 1
+            if obs.enabled():
+                self.metrics.counter("admission_rejections_total",
+                                     kind="mwem", tenant=tenant_id).inc()
             return ticket
         self._pending.setdefault(sess.n_records, []).append(ticket)
         if self.auto_flush and len(self._pending[sess.n_records]) >= self.wave_size:
@@ -306,6 +343,7 @@ class ReleaseService:
             seed=self._next_seed if seed is None else seed,
             status="queued" if decision.admitted else "rejected",
             decision=decision, kind="lp", cost_bundle=self.lp.cost,
+            submit_time=monotonic(),
         )
         self._next_ticket += 1
         if seed is None:
@@ -313,6 +351,9 @@ class ReleaseService:
         if not decision.admitted:
             sess.rejected_count += 1
             self.stats.rejected += 1
+            if obs.enabled():
+                self.metrics.counter("admission_rejections_total",
+                                     kind="lp", tenant=tenant_id).inc()
             return ticket
         self.lp.pending.append(ticket)
         if self.auto_flush and len(self.lp.pending) >= self.wave_size:
@@ -356,6 +397,27 @@ class ReleaseService:
                                 per_run.approx_slack, tight=tight)
         return after[0] - before[0], after[1] - before[1]
 
+    def _record_wave_metrics(self, kind: str, n_real: int, n_pad: int) -> None:
+        """Per-dispatch wave health: occupancy (real lanes / wave_size) and
+        the padding waste the replication trick pays for short waves."""
+        if not obs.enabled():
+            return
+        self.metrics.counter("wave_dispatches_total", kind=kind).inc()
+        self.metrics.counter("wave_padded_slots_total", kind=kind).inc(n_pad)
+        self.metrics.gauge("wave_occupancy", kind=kind).set(
+            n_real / self.wave_size)
+        self.metrics.gauge("wave_padding_waste", kind=kind).set(
+            n_pad / self.wave_size)
+
+    def _record_ticket_latency(self, ticket: ReleaseTicket) -> None:
+        """Admission→answer latency for one resolved ticket, bucketed per
+        workload kind ("mwem" | "lp"); the ticket keeps its own stamp too."""
+        ticket.latency_seconds = monotonic() - ticket.submit_time
+        if obs.enabled():
+            self.metrics.histogram("admission_to_answer_seconds",
+                                   kind=ticket.kind).observe(
+                                       ticket.latency_seconds)
+
     def _run_lp_wave(self) -> List[ReleaseTicket]:
         """Execute one LP wave: exactly ``wave_size`` seed lanes through one
         `solve_lp_batch` dispatch — the same pad-by-replication, per-lane
@@ -372,9 +434,11 @@ class ReleaseService:
         ] + [None] * n_pad
         snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
                  for t in wave}
-        result = solve_lp_batch(lp.A, lp.b, lp.cfg, keys, index=lp.index,
-                                ledgers=ledgers)
+        with obs.annotate("serve/wave/lp"):
+            result = solve_lp_batch(lp.A, lp.b, lp.cfg, keys, index=lp.index,
+                                    ledgers=ledgers)
         self.stats.dispatches += 1
+        self._record_wave_metrics("lp", len(wave), n_pad)
         x_bar = np.asarray(result.x_bar)
         lanes_seen: Dict[str, int] = {}
         for i, ticket in enumerate(wave):
@@ -397,6 +461,7 @@ class ReleaseService:
             ticket.final_error = rel.violated_frac
             ticket.status = "done"
             self.stats.lp_released += 1
+            self._record_ticket_latency(ticket)
         return wave
 
     def _run_wave(self, n_records: int) -> List[ReleaseTicket]:
@@ -427,14 +492,17 @@ class ReleaseService:
         # pre-dispatch ledger snapshots, for per-ticket marginal costs
         snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
                  for t in wave}
-        if self.mesh is not None:
-            result = run_mwem_sharded_batch(self.Q, h_stack, cfg, keys,
-                                            mesh=self.mesh, index=self.index,
-                                            ledgers=ledgers)
-        else:
-            result = run_mwem_batch(self.Q, h_stack, cfg, keys,
-                                    index=self.index, ledgers=ledgers)
+        with obs.annotate("serve/wave/mwem"):
+            if self.mesh is not None:
+                result = run_mwem_sharded_batch(self.Q, h_stack, cfg, keys,
+                                                mesh=self.mesh,
+                                                index=self.index,
+                                                ledgers=ledgers)
+            else:
+                result = run_mwem_batch(self.Q, h_stack, cfg, keys,
+                                        index=self.index, ledgers=ledgers)
         self.stats.dispatches += 1
+        self._record_wave_metrics("mwem", len(wave), n_pad)
         p_hat = np.asarray(result.p_hat)
         lanes_seen: Dict[str, int] = {}
         for i, ticket in enumerate(wave):
@@ -457,6 +525,7 @@ class ReleaseService:
             ticket.final_error = rel.final_error
             ticket.status = "done"
             self.stats.released += 1
+            self._record_ticket_latency(ticket)
         return wave
 
     # ------------------------------------------------------------- answers
@@ -464,9 +533,35 @@ class ReleaseService:
                release_id: Optional[int] = None) -> Answer:
         """Answer a linear query from the tenant's released histogram(s) —
         post-processing, zero additional ε; repeats served from the cache."""
-        return self.sessions[tenant_id].answer(q, release_id=release_id)
+        t0 = monotonic()
+        ans = self.sessions[tenant_id].answer(q, release_id=release_id)
+        self._record_answer(ans, t0)
+        return ans
 
     def answer_derived(self, tenant_id: str, coeffs,
                        release_id: Optional[int] = None) -> Optional[Answer]:
-        return self.sessions[tenant_id].answer_derived(coeffs,
-                                                       release_id=release_id)
+        t0 = monotonic()
+        ans = self.sessions[tenant_id].answer_derived(coeffs,
+                                                      release_id=release_id)
+        if ans is not None:
+            self._record_answer(ans, t0)
+        return ans
+
+    def _record_answer(self, ans: Answer, t0: float) -> None:
+        if not obs.enabled():
+            return
+        self.metrics.histogram("admission_to_answer_seconds",
+                               kind="answer").observe(monotonic() - t0)
+        name = ("answer_cache_hits_total" if ans.cached
+                else "answer_cache_misses_total")
+        self.metrics.counter(name).inc()
+
+    # ------------------------------------------------------------- metrics
+    def metrics_snapshot(self) -> dict:
+        """Plain-dict view of the service's registry — admission→answer
+        latency quantiles (p50/p95/p99) per workload kind, wave occupancy /
+        padding gauges, per-tenant ε/δ-spent gauges kept consistent with
+        each session ledger by its hook, cache and rejection counters, and
+        the mechanism telemetry the drivers published. `benchmarks/run.py`
+        embeds the same snapshot into BENCH_results.json."""
+        return self.metrics.snapshot()

@@ -18,9 +18,10 @@ Design (simulated here, since the container has one host):
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Optional
+
+from repro.obs.events import EventSink, default_sink
 
 
 def plan_mesh(n_healthy: int, model_degree: int, pods: int = 1):
@@ -76,25 +77,39 @@ class StragglerWatchdog:
 
 @dataclass
 class ElasticController:
-    """Controller loop state machine (simulation-friendly)."""
+    """Controller loop state machine (simulation-friendly).
+
+    Fail/recover events route through the obs event sink and are stamped
+    with a *monotonic* clock (`repro.obs.clock.monotonic`): recovery logic
+    orders events by stamp, and wall-clock time can jump backwards under
+    NTP skew mid-incident — exactly when these events fire. The local
+    ``events`` list keeps the familiar ``(kind, ids, stamp)`` triples.
+    """
     n_devices: int
     model_degree: int
     pods: int = 1
     watchdog: StragglerWatchdog = field(default_factory=StragglerWatchdog)
     healthy: Optional[set] = None
     events: list = field(default_factory=list)
+    sink: Optional[EventSink] = None   # default: the process-wide obs sink
 
     def __post_init__(self):
         if self.healthy is None:
             self.healthy = set(range(self.n_devices))
+        if self.sink is None:
+            self.sink = default_sink()
 
     def fail(self, device_ids):
         self.healthy -= set(device_ids)
-        self.events.append(("fail", tuple(device_ids), time.time()))
+        ev = self.sink.emit("elastic_fail", devices=tuple(device_ids),
+                            n_healthy=len(self.healthy))
+        self.events.append(("fail", tuple(device_ids), ev.t_mono))
 
     def recover(self, device_ids):
         self.healthy |= set(device_ids)
-        self.events.append(("recover", tuple(device_ids), time.time()))
+        ev = self.sink.emit("elastic_recover", devices=tuple(device_ids),
+                            n_healthy=len(self.healthy))
+        self.events.append(("recover", tuple(device_ids), ev.t_mono))
 
     def current_plan(self):
         shape, used = plan_mesh(len(self.healthy), self.model_degree, self.pods)

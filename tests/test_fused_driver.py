@@ -296,8 +296,8 @@ class TestBatch:
 
     def test_unbatch_full_trace_fields(self, workload, index):
         """unbatch() must reproduce every per-lane trace field of a
-        standalone fused run — n_scored, overflow_count, iter_seconds
-        length, and the shared-ledger default."""
+        standalone fused run — n_scored, overflow_count, honest timing
+        via the telemetry record, and the shared-ledger default."""
         Q, h, n = workload
         B, T = 3, 8
         cfg = MWEMConfig(T=T, mode="fast", n_records=n)
@@ -310,12 +310,23 @@ class TestBatch:
         assert results[2].overflow_count == single.overflow_count
         np.testing.assert_allclose(np.asarray(results[2].p_hat),
                                    np.asarray(single.p_hat), atol=1e-6)
-        for res in results:
-            assert len(res.iter_seconds) == T
+        for b, res in enumerate(results):
+            # a lane has no per-iteration wall clock of its own — unbatch
+            # refuses to fabricate one (it used to hand out total/T per lane)
+            assert res.iter_seconds == []
+            assert res.telemetry is not None
+            assert res.telemetry.amortized
+            assert res.telemetry.total_seconds == pytest.approx(
+                batch.total_seconds, rel=1e-9)
+            assert res.telemetry.lanes == 1
+            assert res.telemetry.T == T
+            assert res.telemetry.overflow_count == res.overflow_count
+            assert res.telemetry.n_scored_total == sum(res.n_scored)
             assert res.ledger is batch.ledger  # shared per-run ledger
-        # amortized batch wall-clock, not per-lane throughput
-        assert sum(results[0].iter_seconds) == pytest.approx(
-            batch.total_seconds, rel=1e-9)
+        # the batch record itself covers all lanes
+        assert batch.telemetry.lanes == B
+        assert batch.telemetry.n_scored_total == int(
+            np.asarray(batch.n_scored).sum())
 
 
 class TestBatchLedgerContract:

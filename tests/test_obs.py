@@ -1,0 +1,427 @@
+"""Observability layer (DESIGN.md §8): metrics core, mechanism telemetry,
+ledger-fed budget gauges, and the zero-effect contract.
+
+The load-bearing invariant is the last one: with obs enabled vs disabled,
+every driver's *results* (p_hat, selected, n_scored) must be bitwise
+identical — the obs layer only ever reads traces the drivers already
+return and attaches pure-metadata profiler scopes.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MWEMConfig, run_mwem, run_mwem_batch, run_mwem_fused
+from repro.core.queries import gaussian_histogram, random_binary_queries
+from repro.mips import FlatAbsIndex
+from repro.obs import trace as obs_trace
+from repro.obs.events import EventSink
+from repro.obs.metrics import (GROWTH, Histogram, MetricsRegistry,
+                               default_registry, series_key)
+from repro.obs.telemetry import aggregate_traces, publish
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(0)
+    kh, kq = jax.random.split(key)
+    U, m, n = 64, 128, 300
+    h = gaussian_histogram(kh, n, U)
+    Q = random_binary_queries(kq, m, U)
+    return Q, h, n
+
+
+@pytest.fixture(autouse=True)
+def _obs_enabled():
+    """Every test starts from the default switch state."""
+    obs_trace.set_enabled(True)
+    yield
+    obs_trace.set_enabled(True)
+
+
+class TestHistogram:
+    def test_counts_and_extremes_are_exact(self):
+        hist = Histogram()
+        vals = [0.001, 0.5, 0.5, 2.0, 100.0]
+        for v in vals:
+            hist.observe(v)
+        snap = hist.snapshot()
+        assert snap["count"] == len(vals)
+        assert snap["sum"] == pytest.approx(sum(vals))
+        assert snap["min"] == 0.001 and snap["max"] == 100.0
+        assert snap["mean"] == pytest.approx(sum(vals) / len(vals))
+
+    def test_quantile_within_one_bucket(self):
+        """The log-bucket estimate must land within one GROWTH factor of
+        the true quantile, at every probe point of a geometric series."""
+        hist = Histogram()
+        vals = [1.5 ** i for i in range(40)]
+        for v in vals:
+            hist.observe(v)
+        for q in (0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+            # the estimator is nearest-rank with floor(q·(n−1))
+            true = vals[int(q * (len(vals) - 1))]
+            est = hist.quantile(q)
+            assert true / GROWTH <= est <= true * GROWTH, (q, true, est)
+
+    def test_zero_bucket_and_clamping(self):
+        hist = Histogram()
+        hist.observe(0.0)
+        hist.observe(-1.0)  # durations can round to/below 0 on coarse clocks
+        hist.observe(3.0)
+        assert hist.quantile(0.0) == 0.0
+        # the top bucket's geometric midpoint clamps to the observed max
+        assert hist.quantile(1.0) <= 3.0
+        assert hist.snapshot()["min"] == -1.0
+
+    def test_single_value_all_quantiles_exact(self):
+        hist = Histogram()
+        hist.observe(0.042)
+        for q in (0.0, 0.5, 0.99, 1.0):
+            assert hist.quantile(q) == pytest.approx(0.042, rel=GROWTH - 1)
+
+    def test_empty_and_invalid(self):
+        hist = Histogram()
+        assert math.isnan(hist.quantile(0.5))
+        assert hist.snapshot() == {"count": 0, "sum": 0.0}
+        with pytest.raises(ValueError):
+            hist.observe(float("nan"))
+        with pytest.raises(ValueError):
+            hist.quantile(1.5)
+
+
+class TestRegistry:
+    def test_counter_gauge_snapshot_round_trip(self):
+        reg = MetricsRegistry()
+        reg.counter("reqs_total", kind="lp").inc()
+        reg.counter("reqs_total", kind="lp").inc(2)
+        reg.counter("reqs_total", kind="mwem").inc()
+        reg.gauge("occupancy").set(0.75)
+        reg.histogram("lat_seconds", kind="lp").observe(0.1)
+        snap = reg.snapshot()
+        assert snap["counters"]["reqs_total{kind=lp}"] == 3.0
+        assert snap["counters"]["reqs_total{kind=mwem}"] == 1.0
+        assert snap["gauges"]["occupancy"] == 0.75
+        assert snap["histograms"]["lat_seconds{kind=lp}"]["count"] == 1
+        # snapshot survives JSON round-trip (the BENCH artifact path)
+        assert json.loads(reg.to_json()) == json.loads(json.dumps(snap))
+
+    def test_series_identity_is_name_plus_sorted_labels(self):
+        reg = MetricsRegistry()
+        a = reg.counter("c", x="1", y="2")
+        b = reg.counter("c", y="2", x="1")  # label order irrelevant
+        assert a is b
+        assert series_key("c", (("x", "1"), ("y", "2"))) == "c{x=1,y=2}"
+
+    def test_kind_conflict_and_monotonic_counter(self):
+        reg = MetricsRegistry()
+        reg.counter("n").inc()
+        with pytest.raises(TypeError):
+            reg.gauge("n")
+        with pytest.raises(ValueError):
+            reg.counter("n").inc(-1)
+
+    def test_prometheus_exposition(self):
+        reg = MetricsRegistry()
+        reg.counter("waves_total", kind="mwem").inc(4)
+        reg.histogram("lat_seconds").observe(0.25)
+        text = reg.to_prometheus()
+        assert "# TYPE waves_total counter" in text
+        assert '# TYPE lat_seconds summary' in text
+        assert 'waves_total{kind="mwem"} 4' in text
+        assert 'lat_seconds{quantile="0.95"}' in text
+        assert "lat_seconds_count 1" in text
+
+    def test_reset(self):
+        reg = MetricsRegistry()
+        reg.counter("x").inc()
+        reg.reset()
+        assert reg.snapshot() == {"counters": {}, "gauges": {},
+                                  "histograms": {}}
+
+
+class TestTelemetry:
+    def test_aggregate_traces_math(self):
+        m = 100
+        tel = aggregate_traces(workload="mwem", driver="fused", mode="fast",
+                               m=m, n_scored=[10, 20, 100, 30],
+                               overflow_count=1, total_seconds=2.0,
+                               amortized=True)
+        assert tel.T == 4 and tel.lanes == 1
+        assert tel.n_scored_total == 160 and tel.n_scored_max == 100
+        assert tel.n_scored_mean == pytest.approx(40.0)
+        assert tel.overflow_rate == pytest.approx(0.25)
+        assert tel.lazy_fraction == pytest.approx(0.75)  # 3 of 4 iters < m
+        assert tel.sqrt_m_ratio == pytest.approx(40.0 / math.sqrt(m))
+        d = tel.as_dict()
+        assert d["driver"] == "fused" and d["total_seconds"] == 2.0
+
+    def test_lanes_divide_iterations(self):
+        tel = aggregate_traces(workload="mwem", driver="waved", mode="fast",
+                               m=64, n_scored=np.full((3, 5), 8),
+                               overflow_count=0, total_seconds=1.0,
+                               amortized=True, lanes=3)
+        assert tel.T == 5 and tel.lanes == 3
+        assert tel.n_scored_total == 120
+
+    def test_publish_gated_on_switch(self):
+        tel = aggregate_traces(workload="mwem", driver="host", mode="exact",
+                               m=64, n_scored=[64, 64], overflow_count=0,
+                               total_seconds=0.1, amortized=False)
+        reg = MetricsRegistry()
+        with obs_trace.disabled():
+            publish(tel, registry=reg)
+        assert reg.snapshot()["counters"] == {}  # nothing published
+        publish(tel, registry=reg)
+        snap = reg.snapshot()
+        key = "mechanism_runs_total{driver=host,mode=exact,workload=mwem}"
+        assert snap["counters"][key] == 1.0
+        assert snap["gauges"][
+            "mechanism_lazy_fraction{driver=host,mode=exact,workload=mwem}"
+        ] == 0.0
+
+
+class TestDriverTelemetry:
+    """Every driver's result carries a telemetry record regardless of the
+    switch — the record is part of the result; only *publication* and
+    profiler annotation are gated."""
+
+    def test_fused_record(self, workload):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=6, mode="fast", n_records=n)
+        res = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(0),
+                             index=FlatAbsIndex(Q))
+        tel = res.telemetry
+        assert tel is not None and tel.driver == "fused"
+        assert tel.workload == "mwem" and tel.mode == "fast"
+        assert tel.m == Q.shape[0] and tel.T == 6
+        assert tel.n_scored_total == sum(res.n_scored)
+        assert tel.overflow_count == res.overflow_count
+        assert tel.total_seconds == pytest.approx(sum(res.iter_seconds))
+
+    def test_record_present_even_when_disabled(self, workload):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=4, mode="exact", n_records=n)
+        with obs_trace.disabled():
+            res = run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(0))
+        assert res.telemetry is not None
+        assert res.telemetry.lazy_fraction == 0.0  # exact scores all m rows
+
+    def test_host_record_not_amortized(self, workload):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=4, mode="exact", n_records=n, driver="host")
+        res = run_mwem(Q, h, cfg, jax.random.PRNGKey(0))
+        assert res.telemetry.driver == "host"
+        assert not res.telemetry.amortized
+        assert res.telemetry.lanes == 1
+
+    def test_batch_record_spans_lanes(self, workload):
+        Q, h, n = workload
+        B, T = 3, 5
+        cfg = MWEMConfig(T=T, mode="fast", n_records=n)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in range(B)])
+        batch = run_mwem_batch(Q, h, cfg, keys, index=FlatAbsIndex(Q))
+        assert batch.telemetry.lanes == B and batch.telemetry.T == T
+        assert batch.telemetry.n_scored_total == int(
+            np.asarray(batch.n_scored).sum())
+
+
+class TestBitwiseParity:
+    """ISSUE acceptance: obs enabled vs disabled changes nothing about the
+    mechanism outputs — bitwise, per driver, per mode."""
+
+    @staticmethod
+    def _pair(run):
+        obs_trace.set_enabled(True)
+        on = run()
+        with obs_trace.disabled():
+            off = run()
+        assert np.asarray(on.p_hat).tobytes() == np.asarray(off.p_hat).tobytes()
+        assert on.selected == off.selected
+        assert on.n_scored == off.n_scored
+        assert on.overflow_count == off.overflow_count
+
+    @pytest.mark.parametrize("mode", ["exact", "fast"])
+    def test_fused(self, workload, mode):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=5, mode=mode, n_records=n)
+        index = FlatAbsIndex(Q) if mode == "fast" else None
+        self._pair(lambda: run_mwem_fused(Q, h, cfg, jax.random.PRNGKey(3),
+                                          index=index))
+
+    @pytest.mark.parametrize("mode", ["exact", "fast"])
+    def test_host(self, workload, mode):
+        Q, h, n = workload
+        cfg = MWEMConfig(T=5, mode=mode, n_records=n, driver="host")
+        index = FlatAbsIndex(Q) if mode == "fast" else None
+        self._pair(lambda: run_mwem(Q, h, cfg, jax.random.PRNGKey(3),
+                                    index=index))
+
+    @pytest.mark.parametrize("mode", ["exact", "fast"])
+    def test_sharded(self, workload, mode):
+        from repro.core.distributed import run_mwem_sharded
+
+        Q, h, n = workload
+        cfg = MWEMConfig(T=4, mode=mode, n_records=n)
+        # one-device mesh: same code path (shard_map scan), no subprocess
+        index = None  # fast mode builds ShardedIVFIndex(Q, n_shards=1)
+        self._pair(lambda: run_mwem_sharded(Q, h, cfg, jax.random.PRNGKey(3),
+                                            index=index))
+
+
+class TestLedgerGauges:
+    """The ledger hook keeps the per-tenant budget gauges equal to
+    `PrivacyLedger.composed()` in the service's composition mode."""
+
+    @pytest.mark.parametrize("tight", [False, True])
+    def test_gauges_track_composed(self, workload, tight):
+        from repro.serve import ReleaseService
+
+        Q, h, n = workload
+        reg = MetricsRegistry()
+        svc = ReleaseService(Q, MWEMConfig(eps=0.5, delta=1e-3, T=4,
+                                           mode="exact"),
+                             wave_size=2, auto_flush=False,
+                             tight_composition=tight, registry=reg)
+        svc.create_session("t0", eps_budget=50.0, delta_budget=0.5,
+                           h=np.asarray(h), n_records=n)
+        snap = reg.snapshot()["gauges"]
+        assert snap["tenant_eps_spent{tenant=t0}"] == 0.0  # registered at 0
+        svc.submit("t0")
+        svc.flush()
+        sess = svc.session("t0")
+        eps, delta = sess.ledger.composed(tight=tight)
+        assert eps > 0
+        snap = reg.snapshot()["gauges"]
+        assert snap["tenant_eps_spent{tenant=t0}"] == pytest.approx(eps)
+        assert snap["tenant_delta_spent{tenant=t0}"] == pytest.approx(delta)
+        assert snap["tenant_eps_remaining{tenant=t0}"] == pytest.approx(
+            50.0 - eps)
+        assert snap["tenant_delta_remaining{tenant=t0}"] == pytest.approx(
+            0.5 - delta)
+
+    def test_hooks_do_not_change_ledger_equality(self):
+        from repro.core.accountant import PrivacyLedger
+
+        a, b = PrivacyLedger(), PrivacyLedger()
+        a.add_hook(lambda ledger: None)
+        a.record(0.1, label="x")
+        b.record(0.1, label="x")
+        assert a == b  # hooks excluded from dataclass comparison
+
+
+class TestServiceMetrics:
+    @pytest.fixture(scope="class")
+    def served(self, workload):
+        from repro.serve import ReleaseService
+
+        Q, h, n = workload
+        reg = MetricsRegistry()
+        svc = ReleaseService(Q, MWEMConfig(eps=0.5, delta=1e-3, T=4,
+                                           mode="exact"),
+                             wave_size=4, auto_flush=False, registry=reg)
+        for t in ("a", "b"):
+            svc.create_session(t, eps_budget=50.0, delta_budget=0.5,
+                               h=np.asarray(h), n_records=n)
+            svc.submit(t)
+        svc.flush()
+        q = np.asarray(Q)[0]
+        svc.answer("a", q)
+        svc.answer("a", q)  # repeat → cache hit
+        svc.create_session("broke", eps_budget=1e-9, delta_budget=0.5,
+                           h=np.asarray(h), n_records=n)
+        svc.submit("broke")
+        return svc
+
+    def test_latency_histogram_quantiles(self, served):
+        snap = served.metrics_snapshot()
+        lat = snap["histograms"]["admission_to_answer_seconds{kind=mwem}"]
+        assert lat["count"] == 2
+        for p in ("p50", "p95", "p99"):
+            assert lat[p] > 0
+        ans = snap["histograms"]["admission_to_answer_seconds{kind=answer}"]
+        assert ans["count"] == 2
+
+    def test_wave_gauges_and_counters(self, served):
+        snap = served.metrics_snapshot()
+        assert snap["counters"]["wave_dispatches_total{kind=mwem}"] == 1.0
+        # wave of 2 real tickets padded to wave_size 4
+        assert snap["counters"]["wave_padded_slots_total{kind=mwem}"] == 2.0
+        assert snap["gauges"]["wave_occupancy{kind=mwem}"] == 0.5
+        assert snap["gauges"]["wave_padding_waste{kind=mwem}"] == 0.5
+
+    def test_cache_and_rejection_counters(self, served):
+        snap = served.metrics_snapshot()
+        assert snap["counters"]["answer_cache_hits_total"] == 1.0
+        assert snap["counters"]["answer_cache_misses_total"] == 1.0
+        key = "admission_rejections_total{kind=mwem,tenant=broke}"
+        assert snap["counters"][key] == 1.0
+
+    def test_ticket_latency_stamped(self, served):
+        # resolved tickets carry their admission→answer latency
+        assert served.stats.released == 2
+
+
+class TestEventSink:
+    def test_monotonic_ordering_and_counter(self):
+        reg = MetricsRegistry()
+        sink = EventSink(registry=reg)
+        e1 = sink.emit("fail", device=3)
+        e2 = sink.emit("recover", device=3)
+        assert e2.t_mono >= e1.t_mono
+        assert e1.attr("device") == 3 and e1.attr("missing", 7) == 7
+        assert len(sink) == 2
+        snap = reg.snapshot()["counters"]
+        assert snap["events_total{kind=fail}"] == 1.0
+
+    def test_elastic_controller_uses_sink(self):
+        from repro.train.elastic import ElasticController
+
+        reg = MetricsRegistry()
+        sink = EventSink(registry=reg)
+        ctl = ElasticController(n_devices=4, model_degree=2, sink=sink)
+        ctl.fail([1])
+        ctl.recover([1])
+        kinds = [e.kind for e in sink.events]
+        assert kinds == ["elastic_fail", "elastic_recover"]
+        # the legacy 3-tuple event log keeps its shape, stamps now monotonic
+        (k1, ids1, t1), (k2, ids2, t2) = ctl.events
+        assert (k1, ids1) == ("fail", (1,))
+        assert (k2, ids2) == ("recover", (1,))
+        assert t2 >= t1
+
+
+class TestTimingLint:
+    def test_src_is_clean(self):
+        out = subprocess.run(
+            [sys.executable, os.path.join(REPO, "tools",
+                                          "check_timing_lint.py")],
+            capture_output=True, text=True)
+        assert out.returncode == 0, out.stdout + out.stderr
+
+    def test_lint_catches_raw_time(self, tmp_path):
+        """The lint actually rejects what it claims to (guard against the
+        patterns rotting as the tree moves)."""
+        import importlib.util
+
+        spec = importlib.util.spec_from_file_location(
+            "check_timing_lint",
+            os.path.join(REPO, "tools", "check_timing_lint.py"))
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        check = mod.check
+
+        bad = tmp_path / "bad.py"
+        bad.write_text("import time\nx = time.time()\n"
+                       "y = 1  # time.time() in a comment is fine\n")
+        hits = check(bad)
+        assert [lineno for lineno, _ in hits] == [1, 2]

@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Lint: all timing in src/ must go through repro.obs.clock.
+
+Raw ``time.time()`` stamps break event ordering under wall-clock (NTP)
+skew, and scattered ``perf_counter`` imports make it impossible to fake
+or audit timing from one place. `repro/obs/clock.py` is the single
+sanctioned seam — everything else in src/ must import from it.
+
+Rejected in ``src/**/*.py`` outside ``src/repro/obs/``:
+
+* ``import time`` / ``from time import ...``
+* ``time.time(`` / ``time.perf_counter(`` / ``time.monotonic(``
+* bare ``perf_counter()`` not imported from repro.obs.clock
+
+Exit 0 when clean; exit 1 printing ``path:line: offending text``.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
+EXEMPT = SRC / "repro" / "obs"
+
+PATTERNS = [
+    re.compile(r"^\s*import\s+time\b"),
+    re.compile(r"^\s*from\s+time\s+import\b"),
+    re.compile(r"\btime\.time\("),
+    re.compile(r"\btime\.perf_counter\("),
+    re.compile(r"\btime\.monotonic\("),
+]
+
+
+def check(path: Path) -> list[tuple[int, str]]:
+    hits = []
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        stripped = line.split("#", 1)[0]
+        for pat in PATTERNS:
+            if pat.search(stripped):
+                hits.append((lineno, line.strip()))
+                break
+    return hits
+
+
+def main() -> int:
+    bad = 0
+    for path in sorted(SRC.rglob("*.py")):
+        if EXEMPT in path.parents:
+            continue
+        for lineno, text in check(path):
+            print(f"{path.relative_to(ROOT)}:{lineno}: {text}")
+            bad += 1
+    if bad:
+        print(f"timing lint: {bad} raw `time` use(s) in src/ — "
+              "route them through repro.obs.clock", file=sys.stderr)
+        return 1
+    print("timing lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
