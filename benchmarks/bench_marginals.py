@@ -1,0 +1,100 @@
+"""Factored-vs-dense marginal workloads (DESIGN.md §9).
+
+Two claims, measured:
+
+* **bytes** — a `MarginalWorkload` carries O(m + n_cliques·kmax) int32s
+  where the dense (m, U) table carries 4·m·U bytes; the rows report both
+  and their ratio at matched shapes, ending at a *dense-infeasible* shape
+  (15 binary attributes) where the dense table would cross the 2 GiB
+  densify limit and the factored run must complete inside a hard memory
+  budget (asserted, not just printed — CI's bench-smoke lane runs this).
+* **runtime** — per-iteration Fast-MWEM time, dense `FlatAbsIndex` vs the
+  factored flat probe vs the clique-structured `MarginalIVFIndex`, on the
+  same fused driver.
+"""
+
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+import jax
+import numpy as np
+
+from benchmarks.common import med_us, row
+from repro.core import MWEMConfig, run_mwem
+from repro.core.workload import MarginalWorkload, _DENSIFY_LIMIT_BYTES
+from repro.mips import FlatAbsIndex, MarginalIVFIndex
+
+
+def _workload_nbytes(W: MarginalWorkload) -> int:
+    return int(sum(np.asarray(leaf).nbytes
+                   for leaf in jax.tree_util.tree_leaves(W)))
+
+
+def _iter_us(W_or_Q, h, index, T: int, reps: int) -> float:
+    cfg = MWEMConfig(eps=1.0, delta=1e-3, T=T, mode="fast", n_records=10_000,
+                     k=32, use_pallas="never")
+    times = []
+    for r in range(reps):
+        t0 = time.perf_counter()
+        res = run_mwem(W_or_Q, h, cfg, jax.random.PRNGKey(r), index=index)
+        jax.block_until_ready(res.p_hat)
+        times.append((time.perf_counter() - t0) / T)
+    return med_us(times, skip=1)
+
+
+def run(quick: bool = True):
+    rows = []
+    T = 8 if quick else 30
+    reps = 3 if quick else 6
+
+    # -- matched-shape runtime + bytes: dense table vs factored ----------
+    n_attr = 8 if quick else 10
+    W = MarginalWorkload.all_kway((2,) * n_attr, 3)
+    key = jax.random.PRNGKey(0)
+    h = jax.nn.softmax(jax.random.normal(key, (W.U,)) * 2.0)
+    Qd = W.densify()
+    dense_b = int(Qd.size * 4)
+    fact_b = _workload_nbytes(W)
+    rows.append(row(f"marginals/bytes_m{W.m}_U{W.U}", 0.0,
+                    {"dense_bytes": dense_b, "factored_bytes": fact_b,
+                     "ratio": round(dense_b / fact_b, 1)}))
+
+    dense_us = _iter_us(Qd, h, FlatAbsIndex(Qd, use_pallas="never"), T, reps)
+    rows.append(row("marginals/dense_flat", dense_us,
+                    {"m": W.m, "U": W.U}))
+    fact_us = _iter_us(W, h, FlatAbsIndex(W, use_pallas="never"), T, reps)
+    rows.append(row("marginals/factored_flat", fact_us,
+                    {"m": W.m, "U": W.U,
+                     "vs_dense": round(fact_us / dense_us, 2)}))
+    mivf_us = _iter_us(W, h, MarginalIVFIndex(W), T, reps)
+    rows.append(row("marginals/factored_marginal_ivf", mivf_us,
+                    {"m": W.m, "U": W.U,
+                     "vs_dense": round(mivf_us / dense_us, 2)}))
+
+    # -- dense-infeasible shape: 15 binary attrs, all 4-way cliques ------
+    # capped to keep quick mode fast, but always past the densify limit
+    Wb = MarginalWorkload.all_kway((2,) * 15, 4,
+                                   max_cliques=1100 if quick else None)
+    assert Wb.dense_nbytes > _DENSIFY_LIMIT_BYTES, Wb.dense_nbytes
+    hb = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1),
+                                          (Wb.U,)) * 2.0)
+    # memory-budget assert: the factored release must stay far below the
+    # dense table it replaces — host-side allocations under 1/4 of it
+    budget = _DENSIFY_LIMIT_BYTES // 4
+    tracemalloc.start()
+    big_us = _iter_us(Wb, hb, MarginalIVFIndex(Wb), 3 if quick else T, 2)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    if peak > budget:
+        raise MemoryError(
+            f"factored run peaked at {peak} host bytes > budget {budget} "
+            f"(dense table would be {Wb.dense_nbytes})")
+    rows.append(row("marginals/dense_infeasible", big_us,
+                    {"m": Wb.m, "U": Wb.U,
+                     "dense_bytes_avoided": Wb.dense_nbytes,
+                     "factored_bytes": _workload_nbytes(Wb),
+                     "host_peak_bytes": int(peak),
+                     "budget_bytes": int(budget)}))
+    return rows

@@ -29,8 +29,9 @@ def main() -> None:
 
     from benchmarks import (bench_distributed, bench_error_parity,
                             bench_ivf_probe, bench_linear_queries, bench_lp,
-                            bench_margin, bench_mwem_step, bench_n_ablation,
-                            bench_release_service, roofline_report)
+                            bench_margin, bench_marginals, bench_mwem_step,
+                            bench_n_ablation, bench_release_service,
+                            roofline_report)
     from benchmarks.common import print_rows
 
     benches = {
@@ -42,6 +43,7 @@ def main() -> None:
         "release_service": bench_release_service,
         "distributed": bench_distributed,
         "ivf_probe": bench_ivf_probe,
+        "marginals": bench_marginals,
         "mwem_step": bench_mwem_step,
         "roofline": roofline_report,
     }

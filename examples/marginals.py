@@ -1,0 +1,69 @@
+"""Factored k-way marginal release — no (m, U) query table, ever.
+
+A 12-attribute categorical domain (|X| = 32 768) with all 3-way
+marginals is m = 3 328 queries over 220 cliques; the dense table would
+be ~440 MB and at 15+ attributes it stops fitting at all. `MarginalWorkload` keeps the workload
+as structured index maps (a few int32 arrays), and everything downstream
+— Fast-MWEM selection via the clique-structured `MarginalIVFIndex`, the
+adaptive worst-marginal loop, and the multi-tenant `ReleaseService` —
+runs factored end to end (DESIGN.md §9).
+
+    PYTHONPATH=src python examples/marginals.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AdaptiveConfig, MarginalWorkload, MWEMConfig,
+                        run_adaptive_marginals, run_mwem)
+from repro.core.queries import max_error
+from repro.mips import MarginalIVFIndex
+from repro.serve.release_service import ReleaseService
+
+card = (4, 4, 4, 2, 2, 2, 2, 2, 2, 2, 2, 2)   # 12 attributes, |X| = 4096
+W = MarginalWorkload.all_kway(card, 3)
+n, T = 10_000, 40
+key = jax.random.PRNGKey(0)
+h = jax.nn.softmax(jax.random.normal(key, (W.U,)) * 2.0)
+
+print(f"domain |X|={W.U}, {W.n_cliques} cliques, m={W.m} marginal queries")
+print(f"dense table would be {W.dense_nbytes/1e6:.0f} MB; factored state is "
+      f"{sum(np.asarray(l).nbytes for l in jax.tree_util.tree_leaves(W))/1e3:.0f} KB")
+uniform = float(max_error(W, h, jnp.full((W.U,), 1.0 / W.U)))
+print(f"uniform-baseline error: {uniform:.4f}\n")
+
+# --- Fast-MWEM over the factored workload ------------------------------
+t0 = time.time()
+res = run_mwem(W, h, MWEMConfig(eps=1.0, delta=1e-3, T=T, mode="fast",
+                                n_records=n),
+               jax.random.PRNGKey(1), index=MarginalIVFIndex(W))
+eps, delta = res.ledger.composed()
+print(f"Fast-MWEM (marginal_ivf): err={res.final_error:.4f}  "
+      f"scored/iter={int(np.mean(res.n_scored))} of {2*W.m}  "
+      f"wall={time.time()-t0:.1f}s  (ε={eps:.2f}, δ={delta:.1e})")
+
+# --- adaptive worst-marginal loop: whole tables per round --------------
+t0 = time.time()
+ad = run_adaptive_marginals(W, h, AdaptiveConfig(eps=1.0, delta=1e-3, T=12,
+                                                 n_records=n),
+                            jax.random.PRNGKey(2))
+print(f"adaptive marginals:       err={float(ad.final_error):.4f}  "
+      f"{len(set(map(int, ad.selected)))} distinct cliques measured  "
+      f"wall={time.time()-t0:.1f}s  (ε={ad.eps_spent:.2f})")
+
+# --- the same workload through the serving tier ------------------------
+svc = ReleaseService(W, MWEMConfig(eps=1.0, delta=1e-3, T=T, mode="fast",
+                                   n_records=n, use_pallas="never"),
+                     wave_size=2, index_kind="marginal_ivf")
+svc.create_session("tenant-a", eps_budget=10.0, delta_budget=1e-2,
+                   h=np.asarray(h, np.float32), n_records=n)
+svc.create_session("tenant-b", eps_budget=10.0, delta_budget=1e-2,
+                   h=np.asarray(h, np.float32), n_records=n)
+t1, t2 = svc.submit("tenant-a"), svc.submit("tenant-b")
+print(f"\nservice wave: tickets {t1.status}/{t2.status}, "
+      f"errs {t1.final_error:.4f}/{t2.final_error:.4f}")
+ans = svc.answer("tenant-a", np.ones(W.U, np.float32))
+print(f"post-processing answer ⟨1, p̂⟩ = {ans.value:.4f} (zero extra ε)")

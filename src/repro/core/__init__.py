@@ -14,6 +14,18 @@ from repro.core.accountant import (
     calibrate_eps0,
 )
 from repro.core.bregman import bregman_project_dense
+from repro.core.workload import (
+    DenseWorkload,
+    MarginalWorkload,
+    Workload,
+    as_workload,
+)
+from repro.core.adaptive import (
+    AdaptiveConfig,
+    AdaptiveResult,
+    run_adaptive_marginals,
+    select_worst_marginal,
+)
 from repro.core.mwem import (
     MWEMBatchResult,
     MWEMConfig,
@@ -59,6 +71,14 @@ __all__ = [
     "advanced_composition",
     "calibrate_eps0",
     "bregman_project_dense",
+    "DenseWorkload",
+    "MarginalWorkload",
+    "Workload",
+    "as_workload",
+    "AdaptiveConfig",
+    "AdaptiveResult",
+    "run_adaptive_marginals",
+    "select_worst_marginal",
     "MWEMBatchResult",
     "MWEMConfig",
     "MWEMResult",

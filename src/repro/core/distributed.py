@@ -495,10 +495,17 @@ def run_mwem_sharded(
     is bitwise host-parity (global-sliced Gumbels, same key chain), and
     privacy events flow through the same `_record_iteration`/`_calibrate`
     path, so sharded runs compose to identical (ε, δ).
+
+    Workload note: this driver shards explicit rows over the data axes, so
+    factored workloads take the documented densify-fallback —
+    `Workload.require_dense` materializes the (m, U) table or raises past
+    the densify limit (auto-routing never sends such workloads here).
     """
+    from repro.core.workload import as_workload
     from repro.launch.mesh import make_driver_mesh
     from repro.mips.ivf import ShardedIVFIndex
 
+    Q = as_workload(Q).require_dense("run_mwem_sharded")
     m, U = Q.shape
     if mesh is None:
         mesh = make_driver_mesh()
@@ -629,8 +636,10 @@ def run_mwem_sharded_batch(
     per-run ledger carries one lane's event bundle (the B× composition is
     the caller's contract, DESIGN.md §2).
     """
+    from repro.core.workload import as_workload
     from repro.mips.ivf import ShardedIVFIndex
 
+    Q = as_workload(Q).require_dense("run_mwem_sharded_batch")
     m, U = Q.shape
     keys = jnp.asarray(keys)
     B = keys.shape[0]

@@ -66,6 +66,7 @@ from repro.obs.trace import annotate as obs_annotate
 from repro.core.gumbel import gumbel
 from repro.core.lazy_em import default_tail_cap, fallback_key, lazy_em_from_topk
 from repro.core.queries import max_error
+from repro.core.workload import Workload, as_workload
 from repro.kernels.mwem_step import ops as step_ops
 from repro.kernels.mwem_step.ref import mwem_step_ref, mwu_apply_ref
 from repro.mips.base import resolve_pallas
@@ -222,12 +223,13 @@ def _calibrate(cfg: MWEMConfig, m: int, U: int) -> _Calibration:
     )
 
 
-def _aug_score(Q: jax.Array, v: jax.Array, aug_idx: jax.Array) -> jax.Array:
-    """Scores of augmented ids: ⟨q_{j%m}, v⟩ · sign(j<m) (== |·| at the top)."""
-    m = Q.shape[0]
-    base = aug_idx % m
-    sign = jnp.where(aug_idx < m, 1.0, -1.0)
-    return (Q[base] @ v) * sign
+def _aug_score(W: Workload, v: jax.Array, aug_idx: jax.Array) -> jax.Array:
+    """Scores of augmented ids: ⟨q_{j%m}, v⟩ · sign(j<m) (== |·| at the top).
+
+    Delegates to the workload's traceable `score_in_graph` — on dense
+    workloads this is verbatim the pre-refactor gather (`(Q[base] @ v) ·
+    sign`); factored workloads build the candidate rows implicitly."""
+    return W.score_in_graph(v, aug_idx)
 
 
 def _gumbel_argmax(key: jax.Array, x: jax.Array) -> jax.Array:
@@ -235,9 +237,13 @@ def _gumbel_argmax(key: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.argmax(x + g).astype(jnp.int32)
 
 
-def _exact_argmax(key: jax.Array, Q: jax.Array, v: jax.Array, scale: float) -> jax.Array:
-    """Exhaustive EM (Alg. 1 oracle): score all m queries, Gumbel-max."""
-    return _gumbel_argmax(key, jnp.abs(Q @ v) * scale)
+def _exact_argmax(key: jax.Array, W: Workload, v: jax.Array, scale: float) -> jax.Array:
+    """Exhaustive EM (Alg. 1 oracle): score all m queries, Gumbel-max.
+
+    `Workload.scores` is the parity path: dense is ``Q @ v`` unchanged,
+    factored is the same-shaped implicit-row matmul (bitwise for
+    ``m ≤ score_block``)."""
+    return _gumbel_argmax(key, jnp.abs(W.scores(v)) * scale)
 
 
 _exact_select = jax.jit(_exact_argmax, static_argnames=("scale",))
@@ -346,7 +352,7 @@ def _mega_route(use_pallas: str, U: int) -> tuple[bool, bool]:
     return mega, kernel
 
 
-def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
+def _fused_core(W: Workload, h: jax.Array, state0: MWEMState, key: jax.Array,
                 *, query_fn: Optional[Callable], T: int, mode: str, rule: str,
                 eta: float, scale: float, lap_scale: float, k: int,
                 tail_cap: int, margin_slack: float, eval_every: int,
@@ -369,7 +375,7 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
     only the winning query row. Selection and the overflow `lax.cond` stay
     outside the kernel — bitwise host parity is the contract.
     """
-    m = Qm.shape[0]
+    m = W.m
     U = state0.log_w.shape[-1]
     mega, kernel = _mega_route(use_pallas, U)
     sel_keys, meas_keys = split_chain(key, T)
@@ -385,7 +391,7 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
         run.
         """
         if mode == "exact":
-            return (_exact_argmax(k_sel, Qm, v, scale), jnp.int32(m),
+            return (_exact_argmax(k_sel, W, v, scale), jnp.int32(m),
                     jnp.int32(0), jnp.bool_(False))
         if query_returns_scores:
             aug_idx, raw, s_full = query_fn(v, k)
@@ -395,15 +401,20 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
                 fallback_key(k_sel), jnp.abs(s_full) * scale)
         else:
             aug_idx, raw = query_fn(v, k)
-            if kernel:
+            if kernel and W.is_dense:
                 # tail candidates stream once via the scalar-prefetched
                 # gather-score kernel (bitwise `_aug_score` — per-row dot)
                 score_fn = lambda idx: (  # noqa: E731
-                    step_ops.aug_gather_score(Qm, v, idx) * scale)
+                    step_ops.aug_gather_score(W.Q, v, idx) * scale)
+            elif kernel:
+                # factored row fetch: offsets + implicit one-hot products,
+                # no (m, U) gather anywhere
+                score_fn = lambda idx: (  # noqa: E731
+                    step_ops.marginal_gather_score(W, v, idx) * scale)
             else:
-                score_fn = lambda idx: _aug_score(Qm, v, idx) * scale  # noqa: E731
+                score_fn = lambda idx: _aug_score(W, v, idx) * scale  # noqa: E731
             fallback = lambda _: _exact_argmax(  # noqa: E731
-                fallback_key(k_sel), Qm, v, scale)
+                fallback_key(k_sel), W, v, scale)
         out = lazy_em_from_topk(
             k_sel, aug_idx, raw * scale, 2 * m,
             score_fn=score_fn,
@@ -424,7 +435,7 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
         # otherwise run every iteration and erase the sublinear win.
         return jax.lax.cond(
             t % eval_every == 0,
-            lambda _: max_error(Qm, h, p_sum / t.astype(jnp.float32)),
+            lambda _: max_error(W, h, p_sum / t.astype(jnp.float32)),
             lambda _: jnp.float32(jnp.nan),
             operand=None,
         )
@@ -438,13 +449,20 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
             v = h - p
             sel, n_scored, tail_count, overflow = select(k_sel, v)
             noise = _measure_noise(k_meas, rule, lap_scale)
-            if kernel:
+            if kernel and W.is_dense:
                 lw, p_new, ps = step_ops.mwem_step(
-                    state.log_w, p, state.p_sum, Qm, sel, h, noise,
+                    state.log_w, p, state.p_sum, W.Q, sel, h, noise,
+                    rule=rule, eta=eta)
+            elif kernel:
+                # factored winner row arrives materialized (one implicit
+                # one-hot expansion); same kernel body via the
+                # no-prefetch-table variant
+                lw, p_new, ps = step_ops.mwu_apply(
+                    state.log_w, p, state.p_sum, W.row(sel), h, noise,
                     rule=rule, eta=eta)
             else:
                 lw, p_new, ps = mwem_step_ref(
-                    state.log_w, p, state.p_sum, Qm[sel], h, noise,
+                    state.log_w, p, state.p_sum, W.row(sel), h, noise,
                     rule=rule, eta=eta)
             new_state = MWEMState(log_w=lw, p_sum=ps)
             ys = (sel, n_scored, tail_count, overflow)
@@ -462,7 +480,7 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
         p = jax.nn.softmax(state.log_w)
         v = h - p
         sel, n_scored, tail_count, overflow = select(k_sel, v)
-        new_state = _mwu_step(state, p, Qm[sel], h, k_meas, rule=rule,
+        new_state = _mwu_step(state, p, W.row(sel), h, k_meas, rule=rule,
                               eta=eta, lap_scale=lap_scale)
         ys = (sel, n_scored, tail_count, overflow)
         if eval_every:
@@ -472,7 +490,7 @@ def _fused_core(Qm: jax.Array, h: jax.Array, state0: MWEMState, key: jax.Array,
     return jax.lax.scan(body, state0, (ts, sel_keys, meas_keys))
 
 
-def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
+def _fused_core_waved(W: Workload, h: jax.Array, state0: MWEMState,
                       keys: jax.Array, *, batch_query_fn: Callable, T: int,
                       mode: str, rule: str, eta: float, scale: float,
                       lap_scale: float, k: int, tail_cap: int,
@@ -494,7 +512,7 @@ def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
     equals the per-lane probe — exactly true on the XLA route, up to exact
     score ties on the batch-kernel route).
     """
-    m = Qm.shape[0]
+    m = W.m
     B = keys.shape[0]
     U = state0.log_w.shape[-1]
     if mode != "fast":
@@ -509,13 +527,13 @@ def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
     def select_one(k_sel, v, aug_idx, raw):
         out = lazy_em_from_topk(
             k_sel, aug_idx, raw * scale, 2 * m,
-            score_fn=lambda idx: _aug_score(Qm, v, idx) * scale,
+            score_fn=lambda idx: _aug_score(W, v, idx) * scale,
             tail_cap=tail_cap,
             margin_slack=margin_slack * scale if margin_slack else 0.0,
         )
         sel = jax.lax.cond(
             out.overflow,
-            lambda _: _exact_argmax(fallback_key(k_sel), Qm, v, scale),
+            lambda _: _exact_argmax(fallback_key(k_sel), W, v, scale),
             lambda _: (out.index % m).astype(jnp.int32),
             operand=None,
         )
@@ -523,7 +541,7 @@ def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
         return sel, n_scored, out.tail_count, out.overflow
 
     def eval_ys(t, p_sum):
-        err_fn = jax.vmap(partial(max_error, Qm),
+        err_fn = jax.vmap(partial(max_error, W),
                           in_axes=(0 if batched_h else None, 0))
         return jax.lax.cond(
             t % eval_every == 0,
@@ -547,15 +565,15 @@ def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
             sel, n_scored, tail_count, overflow = jax.vmap(select_one)(
                 k_sel, v, aug_idx, raw)
             noise = noise_fn(k_meas)                # (B,)
-            if kernel:
+            if kernel and W.is_dense:
                 lw, p_new, ps = step_ops.mwem_step_batch(
-                    state.log_w, p, state.p_sum, Qm, sel, h, noise,
+                    state.log_w, p, state.p_sum, W.Q, sel, h, noise,
                     rule=rule, eta=eta)
             else:
                 lw, p_new, ps = jax.vmap(
                     step_ref, in_axes=(0, 0, 0, 0, 0 if batched_h else None,
                                        0))(state.log_w, p, state.p_sum,
-                                           Qm[sel], h, noise)
+                                           W.rows(sel), h, noise)
             new_state = MWEMState(log_w=lw, p_sum=ps)
             ys = (sel, n_scored, tail_count, overflow)
             if eval_every:
@@ -575,7 +593,7 @@ def _fused_core_waved(Qm: jax.Array, h: jax.Array, state0: MWEMState,
                 k_sel, v, aug_idx, raw)
             new_state = jax.vmap(mwu, in_axes=(0, 0, 0,
                                                0 if batched_h else None,
-                                               0))(state, p, Qm[sel], h,
+                                               0))(state, p, W.rows(sel), h,
                                                    k_meas)
             ys = (sel, n_scored, tail_count, overflow)
             if eval_every:
@@ -644,8 +662,11 @@ def _compiled_driver(entry, *args) -> Callable:
     keep trace+compile out of the timed region — fused ``iter_seconds``
     measures execution only."""
     fn, exes = entry
-    skey = tuple((tuple(x.shape), str(x.dtype))
-                 for x in jax.tree_util.tree_leaves(args))
+    # treedef joins the key: workloads are pytrees whose aux (cliques,
+    # chunk sizes) can differ between instances with identical leaf shapes
+    skey = (jax.tree_util.tree_structure(args),
+            tuple((tuple(x.shape), str(x.dtype))
+                  for x in jax.tree_util.tree_leaves(args)))
     exe = exes.get(skey)
     if exe is None:
         exe = fn.lower(*args).compile()
@@ -692,7 +713,8 @@ def run_mwem_fused(
     via a cached AOT executable, and individual steps are not observable
     from the host.
     """
-    m, U = Q.shape
+    W = as_workload(Q)
+    m, U = W.m, W.U
     cal = _calibrate(cfg, m, U)
     c_idx = _check_fast_index(cfg, index, fused=True)
 
@@ -705,8 +727,7 @@ def run_mwem_fused(
                           _fused_statics(cfg, cal))
     state0 = MWEMState(log_w=jnp.zeros((U,), jnp.float32),
                        p_sum=jnp.zeros((U,), jnp.float32))
-    args = (jnp.asarray(Q, jnp.float32), jnp.asarray(h, jnp.float32),
-            state0, key)
+    args = (W, jnp.asarray(h, jnp.float32), state0, key)
     driver = _compiled_driver(entry, *args)
     t0 = perf_counter()
     with obs_annotate("mwem/fused"):
@@ -733,7 +754,7 @@ def run_mwem_fused(
                       for t in range(cfg.eval_every, cfg.T + 1, cfg.eval_every)]
 
     res.p_hat = final_state.p_sum / cfg.T
-    res.final_error = float(max_error(Q, h, res.p_hat))
+    res.final_error = float(max_error(W, h, res.p_hat))
     return res
 
 
@@ -781,7 +802,8 @@ def run_mwem_batch(
     if cfg.driver == "host":
         raise ValueError("run_mwem_batch always uses the fused driver; "
                          "loop run_mwem(..., driver='host') for host runs")
-    m, U = Q.shape
+    W = as_workload(Q)
+    m, U = W.m, W.U
     keys = jnp.asarray(keys)
     B = keys.shape[0]
     if ledgers is not None and len(ledgers) != B:
@@ -802,7 +824,7 @@ def run_mwem_batch(
                     else "fused")
     state0 = MWEMState(log_w=jnp.zeros((B, U), jnp.float32),
                        p_sum=jnp.zeros((B, U), jnp.float32))
-    args = (jnp.asarray(Q, jnp.float32), h, state0, keys)
+    args = (W, h, state0, keys)
     driver = _compiled_driver(entry, *args)
     t0 = perf_counter()
     with obs_annotate(f"mwem/batch/{driver_label}"):
@@ -811,7 +833,12 @@ def run_mwem_batch(
     total = perf_counter() - t0
 
     p_hat = final_state.p_sum / cfg.T
-    final_errors = jnp.max(jnp.abs((h - p_hat) @ Q.T), axis=-1)
+    if W.is_dense:  # pre-refactor expression, kept bitwise
+        final_errors = jnp.max(jnp.abs((h - p_hat) @ W.Q.T), axis=-1)
+    else:
+        final_errors = jax.vmap(
+            lambda hh, pp: max_error(W, hh, pp),
+            in_axes=(0 if batched_h else None, 0))(h, p_hat)
 
     ledger = PrivacyLedger()
     if cfg.mode == "fast":
@@ -863,7 +890,8 @@ def _run_mwem_host(
     ledger: Optional[PrivacyLedger] = None,
 ) -> MWEMResult:
     """One jit dispatch per step; `bool(out.overflow)` syncs to the host."""
-    m, U = Q.shape
+    W = as_workload(Q)
+    m, U = W.m, W.U
     cal = _calibrate(cfg, m, U)
     c_idx = _check_fast_index(cfg, index, fused=False)
 
@@ -876,12 +904,12 @@ def _run_mwem_host(
         res.ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
 
         @jax.jit
-        def fast_select(key, topk_idx, topk_scores, Qm, v):
+        def fast_select(key, topk_idx, topk_scores, Wm, v):
             return lazy_em_from_topk(
                 key, topk_idx,
                 topk_scores * cal.scale,
                 2 * m,
-                score_fn=lambda idx: _aug_score(Qm, v, idx) * cal.scale,
+                score_fn=lambda idx: _aug_score(Wm, v, idx) * cal.scale,
                 tail_cap=cal.tail_cap,
                 margin_slack=cfg.margin_slack * cal.scale if cfg.margin_slack else 0.0,
             )
@@ -893,16 +921,16 @@ def _run_mwem_host(
             p = jax.nn.softmax(state.log_w)
             v = h - p
             if cfg.mode == "exact":
-                sel = int(_exact_select(k_sel, Q, v, scale=cal.scale))
+                sel = int(_exact_select(k_sel, W, v, scale=cal.scale))
                 res.n_scored.append(m)
             else:
                 aug_idx, raw = index.query(v, cal.k)
-                out = fast_select(k_sel, aug_idx, raw, Q, v)
+                out = fast_select(k_sel, aug_idx, raw, W, v)
                 if bool(out.overflow):
                     # fresh fold of k_sel (lazy_em.fallback_key) — the lazy
                     # pass already consumed k_sel's Gumbels; the fused
                     # drivers fold identically in-graph so parity holds
-                    sel = int(_exact_select(fallback_key(k_sel), Q, v,
+                    sel = int(_exact_select(fallback_key(k_sel), W, v,
                                             scale=cal.scale))
                     res.overflow_count += 1
                     res.n_scored.append(m)
@@ -911,7 +939,7 @@ def _run_mwem_host(
                     res.n_scored.append(int(out.n_scored))
             _record_iteration(res.ledger, cfg.mode, cfg.update_rule, cal,
                               c_idx, cfg.margin_slack)
-            state = _mwu_step(state, p, Q[sel], h, k_meas,
+            state = _mwu_step(state, p, W.row(sel), h, k_meas,
                               rule=cfg.update_rule, eta=cal.eta,
                               lap_scale=cal.lap_scale)
             jax.block_until_ready(state.log_w)
@@ -919,11 +947,11 @@ def _run_mwem_host(
             res.selected.append(sel)
             if cfg.eval_every and (t + 1) % cfg.eval_every == 0:
                 p_avg = state.p_sum / (t + 1)
-                res.errors.append((t + 1, float(max_error(Q, h, p_avg))))
+                res.errors.append((t + 1, float(max_error(W, h, p_avg))))
 
     p_hat = state.p_sum / cfg.T
     res.p_hat = p_hat
-    res.final_error = float(max_error(Q, h, p_hat))
+    res.final_error = float(max_error(W, h, p_hat))
     res.telemetry = record_run(
         workload="mwem", driver="host", mode=cfg.mode, m=m,
         n_scored=res.n_scored, overflow_count=res.overflow_count,
@@ -952,7 +980,8 @@ def _sharded_fits(index, mesh, shape) -> bool:
     return m % n_data == 0 and U % n_model == 0
 
 
-def _resolve_driver(cfg: MWEMConfig, index, mesh=None, shape=None) -> str:
+def _resolve_driver(cfg: MWEMConfig, index, mesh=None, shape=None,
+                    densifiable: bool = True) -> str:
     if cfg.driver not in ("auto", "fused", "host", "sharded"):
         raise ValueError(f"unknown driver {cfg.driver!r}")
     if cfg.driver != "auto":
@@ -960,9 +989,12 @@ def _resolve_driver(cfg: MWEMConfig, index, mesh=None, shape=None) -> str:
     # the sharded driver kicks in when there is real device parallelism (or
     # the caller handed us a mesh, or the index only works sharded) and the
     # workload can shard: exact mode always can; fast mode needs a
-    # per-shard index structure
-    sharded_ok = (cfg.mode == "exact"
-                  or getattr(index, "supports_sharded", False))
+    # per-shard index structure. Factored workloads past the densify limit
+    # never auto-shard (the sharded driver's documented fallback is a dense
+    # table) — they stay on the fused/host factored path.
+    sharded_ok = (densifiable
+                  and (cfg.mode == "exact"
+                       or getattr(index, "supports_sharded", False)))
     sharded_only = (getattr(index, "supports_sharded", False)
                     and not getattr(index, "supports_in_graph", False))
     want = mesh is not None or jax.device_count() > 1 or sharded_only
@@ -1012,13 +1044,21 @@ def run_mwem(
         and attributes ``approx_margin`` (c ≥ 0) and ``failure_mass`` (γ).
       mesh: device mesh for the sharded driver (forces ``driver="auto"``
         routing onto it; ignored by the fused/host drivers).
+
+    ``Q`` may be a raw ``(m, U)`` array or any `core.workload.Workload`
+    (`MarginalWorkload` runs factored end to end on the fused/host
+    drivers; the sharded driver densifies — its documented fallback).
     """
-    driver = _resolve_driver(cfg, index, mesh=mesh, shape=Q.shape)
+    W = as_workload(Q)
+    from repro.core.workload import _DENSIFY_LIMIT_BYTES
+    densifiable = W.is_dense or W.dense_nbytes <= _DENSIFY_LIMIT_BYTES
+    driver = _resolve_driver(cfg, index, mesh=mesh, shape=(W.m, W.U),
+                             densifiable=densifiable)
     if driver == "sharded":
         from repro.core.distributed import run_mwem_sharded
 
-        return run_mwem_sharded(Q, h, cfg, key, mesh=mesh, index=index,
+        return run_mwem_sharded(W, h, cfg, key, mesh=mesh, index=index,
                                 ledger=ledger)
     if driver == "fused":
-        return run_mwem_fused(Q, h, cfg, key, index=index, ledger=ledger)
-    return _run_mwem_host(Q, h, cfg, key, index=index, ledger=ledger)
+        return run_mwem_fused(W, h, cfg, key, index=index, ledger=ledger)
+    return _run_mwem_host(W, h, cfg, key, index=index, ledger=ledger)

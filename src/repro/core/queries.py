@@ -44,15 +44,33 @@ def interval_queries(key: jax.Array, m: int, U: int, min_w: int = 1) -> jax.Arra
 
 
 def ngram_marginal_queries(key: jax.Array, m: int, U: int, arity: int = 64) -> jax.Array:
-    """Random subset-marginal queries over a token domain (LM DP pipeline)."""
-    idx = jax.random.randint(key, (m, arity), 0, U)
+    """Random subset-marginal queries over a token domain (LM DP pipeline).
+
+    Each row marks exactly ``arity`` *distinct* bins: indices are drawn
+    without replacement per row (argsort of per-row uniforms — a random
+    ``arity``-subset), so every row sums to ``arity``. The old
+    ``randint``-with-replacement draw silently yielded rows with fewer
+    distinct bins, skewing row norms and the EM utility scale.
+    """
+    if arity > U:
+        raise ValueError(f"arity {arity} exceeds domain size {U}")
+    u = jax.random.uniform(key, (m, U))
+    idx = jnp.argsort(u, axis=1)[:, :arity]     # per-row random subset
     q = jnp.zeros((m, U), jnp.float32)
     rows = jnp.broadcast_to(jnp.arange(m)[:, None], idx.shape)
     return q.at[rows, idx].set(1.0)
 
 
-def max_error(Q: jax.Array, h: jax.Array, p: jax.Array) -> jax.Array:
-    """‖Q(p − h)‖_∞ — the utility objective (Eq. 1)."""
+def max_error(Q, h: jax.Array, p: jax.Array) -> jax.Array:
+    """‖Q(p − h)‖_∞ — the utility objective (Eq. 1).
+
+    ``Q`` is a dense (m, U) matrix or any `core.workload.Workload`:
+    workloads answer through their own ``max_err`` (factored ones without
+    densifying), and the dense array path below is byte-for-byte the
+    pre-workload expression.
+    """
+    if hasattr(Q, "max_err"):
+        return Q.max_err(h, p)
     return jnp.max(jnp.abs(Q @ (p - h)))
 
 

@@ -1,7 +1,8 @@
 from repro.kernels.ivf_probe.ops import ivf_probe_topk, ivf_probe_topk_batch
 from repro.kernels.ivf_probe.ref import (batch_probe_slots,
                                          ivf_probe_topk_batch_ref,
-                                         ivf_probe_topk_ref)
+                                         ivf_probe_topk_ref,
+                                         marginal_probe_topk_ref)
 
 __all__ = [
     "ivf_probe_topk",
@@ -9,4 +10,5 @@ __all__ = [
     "ivf_probe_topk_ref",
     "ivf_probe_topk_batch_ref",
     "batch_probe_slots",
+    "marginal_probe_topk_ref",
 ]

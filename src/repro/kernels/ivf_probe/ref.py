@@ -69,6 +69,48 @@ def batch_probe_slots(cents: jax.Array, cells: jax.Array, Vb: jax.Array,
     return slots.astype(jnp.int32), member, probe
 
 
+def marginal_probe_topk_ref(tabs: jax.Array, cl_cells: jax.Array,
+                            starts: jax.Array, m: int, k: int, nprobe: int):
+    """Clique-structured probe for factored marginal workloads — the
+    `ivf_probe` dataflow with the workload's own cliques as cells.
+
+    The geometric IVF structure (centroids, row gathers) disappears: the
+    per-clique marginal tables of the probe vector (``tabs`` =
+    `MarginalWorkload.marginal_tables(v)`, (n_cliques, max_cells)) already
+    hold every query's exact score, so the "centroid" statistic is the
+    per-clique max |cell| — an exact upper bound, making the probe's top-k
+    exact whenever the probed cliques cover k candidates. No (m, U) gather
+    exists anywhere on this path: scoring is offsets + the segment sums
+    that built ``tabs``.
+
+    Args:
+      tabs: (n_cliques, max_cells) f32 per-clique marginals of ``v``.
+      cl_cells: (n_cliques,) int32 valid cell counts (tail cells are pad).
+      starts: (n_cliques,) int32 first query id of each clique.
+      m: total query count (augmented-id encoding).
+      k / nprobe: top-k size and probed clique count.
+
+    Returns ``(aug_idx (k,) int32, |scores| (k,) f32, n_scored int32)`` —
+    augmented ids under the §3.4 sign convention, and the candidate count
+    the probe actually scored (the n_scored trace term).
+    """
+    nc, mc = tabs.shape
+    valid = jnp.arange(mc)[None, :] < cl_cells[:, None]
+    a = jnp.where(valid, jnp.abs(tabs), -jnp.inf)
+    cstat = jnp.max(a, axis=1)                       # exact per-clique bound
+    _, probe = jax.lax.top_k(cstat, nprobe)
+    cand_s = tabs[probe]                             # (nprobe, mc) signed
+    cand_valid = valid[probe]
+    qid = starts[probe][:, None] + jnp.arange(mc)[None, :]
+    flat_s = cand_s.reshape(-1)
+    flat_a = jnp.where(cand_valid.reshape(-1), jnp.abs(flat_s), -jnp.inf)
+    top_a, pos = jax.lax.top_k(flat_a, k)
+    qid_top = qid.reshape(-1)[pos]
+    aug = jnp.where(flat_s[pos] >= 0, qid_top, qid_top + m)
+    return (aug.astype(jnp.int32), top_a,
+            jnp.sum(cand_valid).astype(jnp.int32))
+
+
 def ivf_probe_topk_batch_ref(cents: jax.Array, cells: jax.Array,
                              V: jax.Array, Vb: jax.Array, k: int, nprobe: int,
                              absolute: bool = False):

@@ -139,3 +139,53 @@ def gather_score_pallas(base: jax.Array, sign: jax.Array, q_rows: jax.Array,
     return pl.pallas_call(_score_kernel, grid_spec=grid_spec,
                           out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
                           interpret=interpret)(base, q_rows, v[None], sign)
+
+
+def _marginal_score_kernel(tab_ref, off_ref, sign_ref, v_ref, out_ref, *,
+                           kmax: int):
+    """One candidate per program: rebuild the implicit marginal-cell row
+    over the U lanes by mixed-radix iota arithmetic and dot it with v.
+
+    ``tab_ref`` (C, 3·kmax) SMEM holds [domain strides | cards | cell
+    strides] for the candidate's clique; ``off_ref`` (C,) its cell offset.
+    No row table exists anywhere — the row is (cm == offset) on the fly,
+    so the only HBM traffic is v (resident across programs) and the SMEM
+    scalars.
+    """
+    c = pl.program_id(0)
+    U = v_ref.shape[1]
+    u = jax.lax.broadcasted_iota(jnp.int32, (1, U), 1)
+    cm = jnp.zeros((1, U), jnp.int32)
+    for j in range(kmax):  # static unroll — kmax is tiny
+        cm = cm + ((u // tab_ref[c, j]) % tab_ref[c, kmax + j]) \
+            * tab_ref[c, 2 * kmax + j]
+    row = (cm == off_ref[c]).astype(jnp.float32)
+    out_ref[0] = jnp.dot(row[0], v_ref[0].astype(jnp.float32)) * sign_ref[0]
+
+
+def marginal_gather_score_pallas(tab: jax.Array, off: jax.Array,
+                                 sign: jax.Array, v: jax.Array, *, kmax: int,
+                                 interpret: bool):
+    """Factored-row gather-and-score: the `gather_score_pallas` contract
+    without any ``(m, U)`` table behind it.
+
+    Args: tab (C, 3·kmax) int32 per-candidate clique params; off (C,) int32
+    cell offsets; sign (C,) f32 ±1; v (U,). Returns (C,) f32 scores
+    ``sign[c] · ⟨q_c, v⟩`` with row-wise `jnp.dot` reduction order (the
+    same contract as the dense gather-score kernel).
+    """
+    C = off.shape[0]
+    U = v.shape[0]
+    kern = functools.partial(_marginal_score_kernel, kmax=kmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda c, tab_ref, off_ref: (c,)),
+            pl.BlockSpec((1, U), lambda c, tab_ref, off_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda c, tab_ref, off_ref: (c,)),
+    )
+    return pl.pallas_call(kern, grid_spec=grid_spec,
+                          out_shape=jax.ShapeDtypeStruct((C,), jnp.float32),
+                          interpret=interpret)(tab, off, sign, v[None])

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.mwem_step.mwem_step import (gather_score_pallas,
+                                               marginal_gather_score_pallas,
                                                mwem_step_pallas)
 from repro.kernels.mwem_step.ref import UPDATE_RULES, mwem_step_ref
 from repro.obs.trace import scope as obs_scope
@@ -125,6 +126,33 @@ def aug_gather_score(q_rows: jax.Array, v: jax.Array, aug_idx: jax.Array, *,
     interpret = _resolve_interpret(interpret)
     with obs_scope("kernel/aug_gather_score"):
         return gather_score_pallas(base, sign, q_rows, v, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def marginal_gather_score(W, v: jax.Array, aug_idx: jax.Array, *,
+                          interpret: bool | None = None):
+    """`aug_gather_score` for factored workloads: candidate rows are
+    rebuilt in-kernel from per-clique mixed-radix parameters — offsets +
+    implicit one-hot products, never an ``(m, U)`` gather.
+
+    ``W`` is a `core.workload.MarginalWorkload` (a pytree — flows through
+    jit as an argument). The XLA side only gathers the (C,) candidate
+    clique parameter rows (int32 scalars) before handing them to the
+    scalar-prefetch grid. Unsupported shapes fall back to the workload's
+    traceable `score_in_graph`.
+    """
+    m = W.m
+    base = (aug_idx % m).astype(jnp.int32)
+    sign = jnp.where(aug_idx < m, 1.0, -1.0).astype(jnp.float32)
+    if not mwem_step_supported(W.U):
+        return W.score_in_graph(v, aug_idx)
+    cl = W.q_clique[base]
+    tab = jnp.concatenate(
+        [W.cl_dstride[cl], W.cl_card[cl], W.cl_stride[cl]], axis=1)
+    interpret = _resolve_interpret(interpret)
+    with obs_scope("kernel/marginal_gather_score"):
+        return marginal_gather_score_pallas(
+            tab, W.q_offset[base], sign, v, kmax=W.kmax, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("rule", "eta", "interpret"))

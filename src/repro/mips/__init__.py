@@ -11,6 +11,7 @@ from repro.mips.base import MIPSIndex, augment_complement
 from repro.mips.flat import FlatIndex, FlatAbsIndex
 from repro.mips.ivf import IVFIndex, ShardedIVFIndex
 from repro.mips.lsh import LSHIndex
+from repro.mips.marginal import MarginalIVFIndex
 from repro.mips.nsw import NSWIndex
 from repro.mips.transform import (lp_dual_rows, lp_scalar_rows,
                                   mips_to_knn_keys, mips_to_knn_query)
@@ -20,6 +21,7 @@ INDEX_TYPES = {
     "ivf": IVFIndex,
     "lsh": LSHIndex,
     "nsw": NSWIndex,
+    "marginal_ivf": MarginalIVFIndex,
 }
 
 
@@ -40,6 +42,7 @@ __all__ = [
     "IVFIndex",
     "ShardedIVFIndex",
     "LSHIndex",
+    "MarginalIVFIndex",
     "NSWIndex",
     "lp_dual_rows",
     "lp_scalar_rows",

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.workload import Workload, as_workload
 from repro.mips.base import resolve_pallas
 
 
@@ -46,6 +47,21 @@ def _flat_abs_query(Qm, v, k: int, pallas: bool):
 def _flat_abs_query_scores(Qm, v, k: int):
     m = Qm.shape[0]
     s = Qm @ v
+    a = jnp.abs(s)
+    top_a, top_i = jax.lax.top_k(a, k)
+    aug = jnp.where(s[top_i] >= 0, top_i, top_i + m)
+    return aug.astype(jnp.int32), top_a, s
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _flat_abs_workload_scores(W, v, k: int):
+    """`_flat_abs_query_scores` over an implicit workload: ``W`` is a
+    `core.workload.Workload` pytree, so factored families probe without a
+    row table. For dense workloads `probe_scores` is the same ``Q @ v`` —
+    and for factored ones within their parity block it is the same-shaped
+    implicit-row matmul, keeping dense-vs-factored selections bitwise."""
+    m = W.m
+    s = W.probe_scores(v)
     a = jnp.abs(s)
     top_a, top_i = jax.lax.top_k(a, k)
     aug = jnp.where(s[top_i] >= 0, top_i, top_i + m)
@@ -102,24 +118,45 @@ class FlatAbsIndex:
     approx_margin = 0.0
     failure_mass = 0.0
     supports_in_graph = True
-    supports_batch_probe = True
 
     def __init__(self, Q, use_pallas: str = "auto"):
-        self._q = jnp.asarray(Q, jnp.float32)
-        self.m, self.dim = self._q.shape
+        """``Q``: a raw (m, U) matrix or any `core.workload.Workload` —
+        factored workloads probe through their implicit score primitives
+        (no dense table is ever built; the Pallas row-streaming kernel,
+        which needs explicit rows, is unavailable for them)."""
+        self._w = as_workload(Q)
+        self._q = self._w.Q if self._w.is_dense else None
+        self.m, self.dim = self._w.m, self._w.U
         self.n = 2 * self.m
         self._use_pallas = use_pallas
 
     def _resolve_pallas(self) -> bool:
+        if not self._w.is_dense:
+            if self._use_pallas == "always":
+                raise ValueError(
+                    "use_pallas='always' needs a dense row table; factored "
+                    "workloads probe via their implicit score path")
+            return False
         return resolve_pallas(self._use_pallas)
+
+    @property
+    def supports_batch_probe(self) -> bool:
+        return self._w.is_dense
 
     def query(self, v, k: int):
         return self.query_in_graph(jnp.asarray(v, jnp.float32), k)
 
     def query_in_graph(self, v, k: int):
+        if not self._w.is_dense:
+            aug, top_a, _ = _flat_abs_workload_scores(self._w, v, k)
+            return aug, top_a
         return _flat_abs_query(self._q, v, k, self._resolve_pallas())
 
     def query_in_graph_batch(self, Vb, k: int):
+        if not self._w.is_dense:
+            aug, top_a, _ = jax.vmap(
+                lambda q: _flat_abs_workload_scores(self._w, q, k))(Vb)
+            return aug, top_a
         return _flat_abs_query_batch(self._q, Vb, k)
 
     @property
@@ -134,6 +171,8 @@ class FlatAbsIndex:
         """Exhaustive probe that also returns the full (m,) signed score
         vector — the fused driver reuses it for tail scoring and the
         overflow fallback instead of re-touching Q (DESIGN.md §2)."""
+        if not self._w.is_dense:
+            return _flat_abs_workload_scores(self._w, v, k)
         return _flat_abs_query_scores(self._q, v, k)
 
     def query_cost(self, k: int) -> int:

@@ -36,6 +36,22 @@ import numpy as np
 from repro.mips.base import resolve_pallas
 
 
+def _vectors_from(vectors, context: str) -> np.ndarray:
+    """Densify-fallback for the geometric IVF families (documented in
+    DESIGN.md §9): k-means centroids and balanced cell assignment need
+    explicit row coordinates, so a `core.workload.Workload` is materialized
+    here — or refused past the densify limit. Callers that index the
+    complement-augmented row space apply `augment_complement` themselves,
+    exactly as with raw matrices. Factored workloads that must scale past
+    the limit use `mips.marginal.MarginalIVFIndex`, whose cells are the
+    workload's own cliques."""
+    from repro.core.workload import Workload
+
+    if isinstance(vectors, Workload):
+        return vectors.require_dense(context)
+    return np.asarray(vectors, np.float32)
+
+
 def _kmeans(V: np.ndarray, nlist: int, iters: int, rng: np.random.Generator) -> np.ndarray:
     n = V.shape[0]
     cents = V[rng.choice(n, size=nlist, replace=False)].copy()
@@ -123,7 +139,7 @@ class IVFIndex:
                  cap_factor: float = 2.0, train_iters: int = 10, seed: int = 0,
                  approx_margin: float = 0.0, failure_mass: float | None = None,
                  use_pallas: str = "auto"):
-        V = np.asarray(vectors, np.float32)
+        V = _vectors_from(vectors, "IVFIndex build")
         self.n, self.dim = V.shape
         self.nlist = min(nlist or max(int(2 * math.sqrt(self.n)), 20), self.n)
         self.nprobe = nprobe or max(1, min(self.nlist // 4, 10))
@@ -226,7 +242,7 @@ class ShardedIVFIndex:
                  approx_margin: float = 0.0,
                  failure_mass: float | None = None,
                  use_pallas: str = "auto"):
-        V = np.asarray(vectors, np.float32)
+        V = _vectors_from(vectors, "ShardedIVFIndex build")
         self.n, self.dim = V.shape
         if self.n % n_shards:
             raise ValueError(f"n={self.n} must divide over {n_shards} shards")

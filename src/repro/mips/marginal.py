@@ -1,0 +1,105 @@
+"""Clique-structured k-MIPS index for factored marginal workloads.
+
+`MarginalIVFIndex` is the IVF idea with the workload's own cliques as the
+inverted cells: probing computes the per-clique marginal tables of ``v``
+(`MarginalWorkload.marginal_tables` — segment sums, ``O(n_cliques · U)``
+work, ``O(chunk · U)`` memory) and ranks cliques by their *exact* best
+|cell| — the per-cell scores are already in hand, so the "centroid"
+statistic is an exact upper bound rather than a geometric proxy. No
+``(m, U)`` table, row gather, or k-means build exists anywhere on this
+path, which is what lets it scale past the dense memory ceiling
+(DESIGN.md §9).
+
+Exactness: the global top-k by |score| lives inside the top-k cliques by
+max |cell|, so with ``nprobe`` covering at least k candidate cells the
+probe's top-k equals the exhaustive top-k (``approx_margin = 0``,
+``failure_mass = 0`` — the statistic pass touches *every* clique). The
+query also surfaces the full (m,) score vector (`has_full_scores`), so the
+fused driver's tail scoring and overflow fallback are O(1) lookups into
+the same tables.
+
+Search paths are module-level jitted functions taking the workload pytree
+as an argument — instances sharing shapes share one compiled program, the
+repo's standing anti-retrace pattern.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workload import MarginalWorkload
+from repro.kernels.ivf_probe.ref import marginal_probe_topk_ref
+
+
+@partial(jax.jit, static_argnames=("k", "nprobe"))
+def _marginal_query_scores(W, starts, v, k: int, nprobe: int):
+    tabs = W.marginal_tables(v)
+    aug, top_a, n_scored = marginal_probe_topk_ref(
+        tabs, W.cl_cells, starts, W.m, k, nprobe)
+    s_full = tabs[W.q_clique, W.q_offset]
+    return aug, top_a, s_full, n_scored
+
+
+class MarginalIVFIndex:
+    """k-MIPS over a `MarginalWorkload` with cliques as inverted cells."""
+
+    approx_margin = 0.0
+    failure_mass = 0.0
+    supports_in_graph = True
+    supports_batch_probe = False
+    has_full_scores = True
+
+    def __init__(self, workload: MarginalWorkload,
+                 nprobe: int | None = None):
+        if not isinstance(workload, MarginalWorkload):
+            raise TypeError(
+                f"MarginalIVFIndex indexes MarginalWorkload, got "
+                f"{type(workload).__name__}; dense workloads use the "
+                "geometric families (flat/ivf/lsh)")
+        self._w = workload
+        self.m = workload.m
+        self.dim = workload.U
+        self.n = 2 * workload.m
+        self.n_cliques = workload.n_cliques
+        cells = np.asarray(workload.cl_cells)
+        self._starts = jnp.asarray(
+            np.concatenate([[0], np.cumsum(cells)[:-1]]).astype(np.int32))
+        self._min_cells = int(cells.min())
+        self.nprobe = min(self.n_cliques,
+                          nprobe or max(4, math.ceil(
+                              math.sqrt(self.n_cliques))))
+
+    @property
+    def workload(self) -> MarginalWorkload:
+        return self._w
+
+    def _nprobe_for(self, k: int) -> int:
+        """Probed cliques for a top-k call: at least enough valid cells to
+        cover k candidates (what makes the probe's top-k exact)."""
+        need = math.ceil(k / max(self._min_cells, 1))
+        return min(self.n_cliques, max(self.nprobe, need))
+
+    def query(self, v, k: int):
+        return self.query_in_graph(jnp.asarray(v, jnp.float32), k)
+
+    def query_in_graph(self, v, k: int):
+        aug, top_a, _, _ = _marginal_query_scores(
+            self._w, self._starts, v, k, self._nprobe_for(k))
+        return aug, top_a
+
+    def query_in_graph_with_scores(self, v, k: int):
+        """Probe + the full (m,) signed score vector the tables already
+        hold — the fused driver's tail/fallback reuse path."""
+        aug, top_a, s_full, _ = _marginal_query_scores(
+            self._w, self._starts, v, k, self._nprobe_for(k))
+        return aug, top_a, s_full
+
+    def query_cost(self, k: int) -> int:
+        """Candidate evaluations per query: the clique-statistic pass plus
+        the probed cells."""
+        return self.n_cliques + self._nprobe_for(k) * self._w.max_cells

@@ -49,8 +49,10 @@ from repro.core.distributed import _data_shards, run_mwem_sharded_batch
 from repro.core.lp_dual import lp_release_cost
 from repro.core.lp_scalar import ScalarLPConfig, solve_lp_batch
 from repro.core.mwem import MWEMConfig, release_cost, run_mwem_batch
+from repro.core.workload import as_workload
 from repro.mips import (FlatAbsIndex, FlatIndex, IVFIndex, LSHIndex,
-                        ShardedIVFIndex, augment_complement, lp_scalar_rows)
+                        MarginalIVFIndex, ShardedIVFIndex,
+                        augment_complement, lp_scalar_rows)
 from repro.obs import trace as obs
 from repro.obs.clock import monotonic
 from repro.obs.metrics import MetricsRegistry, default_registry
@@ -129,8 +131,12 @@ class ReleaseService:
                  tight_composition: bool = False, auto_flush: bool = True,
                  mesh=None, use_pallas: str = "auto",
                  registry: Optional[MetricsRegistry] = None):
-        self.Q = jnp.asarray(Q, jnp.float32)
-        self.m, self.U = self.Q.shape
+        # the workload seam: a raw (m, U) matrix or any `core.workload`
+        # family — `MarginalWorkload` releases run factored end to end
+        # through the same admission/cost/wave path (DESIGN.md §9)
+        self.workload = as_workload(Q)
+        self.Q = self.workload.Q if self.workload.is_dense else None
+        self.m, self.U = self.workload.m, self.workload.U
         # where this service publishes its metrics; the process-wide
         # default registry unless the caller isolates it (tests do)
         self.metrics = registry if registry is not None else default_registry()
@@ -156,21 +162,34 @@ class ReleaseService:
         # (kernels/ivf_probe for IVF, mips_topk for flat) — "auto" falls
         # back to the XLA probe off-TPU automatically
         if cfg.mode == "fast":
+            factored = not self.workload.is_dense
             if mesh is not None:
                 # the sharded driver needs the per-shard structure, whatever
-                # single-device kind was asked for
-                self.index = ShardedIVFIndex(self.Q,
-                                             n_shards=_data_shards(mesh)[1],
-                                             seed=seed,
-                                             use_pallas=use_pallas)
+                # single-device kind was asked for; factored workloads
+                # densify here or fail loudly (the documented fallback)
+                self.index = ShardedIVFIndex(
+                    self.workload.require_dense("ReleaseService[mesh]"),
+                    n_shards=_data_shards(mesh)[1],
+                    seed=seed, use_pallas=use_pallas)
+            elif index_kind in ("ivf", "marginal_ivf") and factored:
+                # the clique-structured family is the factored counterpart
+                # of IVF — exact probe, no row table (DESIGN.md §9)
+                self.index = MarginalIVFIndex(self.workload)
+            elif index_kind == "marginal_ivf":
+                raise ValueError(
+                    "index_kind='marginal_ivf' needs a MarginalWorkload; "
+                    "dense services use flat/ivf/lsh")
             elif index_kind == "flat":
-                self.index = FlatAbsIndex(self.Q, use_pallas=use_pallas)
+                self.index = FlatAbsIndex(self.workload,
+                                          use_pallas=use_pallas)
             elif index_kind == "ivf":
                 self.index = IVFIndex(augment_complement(np.asarray(self.Q)),
                                       seed=seed, use_pallas=use_pallas)
             elif index_kind == "lsh":
-                self.index = LSHIndex(augment_complement(np.asarray(self.Q)),
-                                      seed=seed)
+                self.index = LSHIndex(
+                    augment_complement(np.asarray(self.workload.require_dense(
+                        "ReleaseService[lsh]"))),
+                    seed=seed)
             else:
                 raise ValueError(f"unknown index kind {index_kind!r}")
         else:
@@ -494,12 +513,12 @@ class ReleaseService:
                  for t in wave}
         with obs.annotate("serve/wave/mwem"):
             if self.mesh is not None:
-                result = run_mwem_sharded_batch(self.Q, h_stack, cfg, keys,
-                                                mesh=self.mesh,
+                result = run_mwem_sharded_batch(self.workload, h_stack, cfg,
+                                                keys, mesh=self.mesh,
                                                 index=self.index,
                                                 ledgers=ledgers)
             else:
-                result = run_mwem_batch(self.Q, h_stack, cfg, keys,
+                result = run_mwem_batch(self.workload, h_stack, cfg, keys,
                                         index=self.index, ledgers=ledgers)
         self.stats.dispatches += 1
         self._record_wave_metrics("mwem", len(wave), n_pad)

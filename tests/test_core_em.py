@@ -262,6 +262,39 @@ class TestLPSelectionGeometry:
         assert stat < _chi_square_threshold(d - 1), stat
 
 
+class TestMarginalSelectionStatistics:
+    """Mechanism statistics for the adaptive worst-marginal oracle
+    (`core.adaptive.select_worst_marginal`): lazy Gumbel sampling over
+    per-clique ``max |marg_c(v)|`` utilities must match the EM softmax over
+    exactly those utilities — the `TestLazyEM` distribution contract
+    re-asserted on the factored-workload scoring pipeline (segment-sum
+    tables, no rows)."""
+
+    @pytest.mark.slow
+    def test_selection_matches_em_softmax(self):
+        from repro.core.adaptive import select_worst_marginal
+        from repro.core.workload import MarginalWorkload
+
+        W = MarginalWorkload.all_kway((3, 2, 4, 2), 2)
+        key = jax.random.PRNGKey(0)
+        h = jax.random.dirichlet(key, jnp.ones(W.U) * 0.4)
+        v = h - jnp.full((W.U,), 1.0 / W.U)
+        util = np.asarray(W.clique_abs_err(v))
+        # bound the scaled spread so every clique's expected count is ≳15
+        scale = 4.0 / float(util.max() - util.min())
+        target = np.asarray(jax.nn.softmax(jnp.asarray(util * scale)))
+
+        trials = 40_000
+
+        def sample(k):
+            return select_worst_marginal(k, W, v, scale, k=3).index
+
+        idx = jax.vmap(sample)(jax.random.split(jax.random.PRNGKey(1), trials))
+        counts = np.bincount(np.asarray(idx), minlength=W.n_cliques)
+        stat = _chi_square_stat(counts, target, trials)
+        assert stat < _chi_square_threshold(W.n_cliques - 1), stat
+
+
 class TestLPScoreProperties:
     """Hypothesis property tier for the LP iteration algebra."""
 
