@@ -15,7 +15,7 @@ Two claims, measured:
 
 from __future__ import annotations
 
-import time
+from repro.obs import clock
 import tracemalloc
 
 import jax
@@ -37,10 +37,10 @@ def _iter_us(W_or_Q, h, index, T: int, reps: int) -> float:
                      k=32, use_pallas="never")
     times = []
     for r in range(reps):
-        t0 = time.perf_counter()
+        t0 = clock.perf_counter()
         res = run_mwem(W_or_Q, h, cfg, jax.random.PRNGKey(r), index=index)
         jax.block_until_ready(res.p_hat)
-        times.append((time.perf_counter() - t0) / T)
+        times.append((clock.perf_counter() - t0) / T)
     return med_us(times, skip=1)
 
 

@@ -20,7 +20,7 @@ modeled per-iteration HBM bytes ever creep above the classic body's.
 
 from __future__ import annotations
 
-import time
+from repro.obs import clock
 
 import jax
 import jax.numpy as jnp
@@ -39,10 +39,10 @@ def _time_call(fn, reps: int) -> float:
     fn()  # warm-up: trace + compile
     samples = []
     for _ in range(reps):
-        t0 = time.perf_counter()
+        t0 = clock.perf_counter()
         out = fn()
         jax.block_until_ready(out)
-        samples.append(time.perf_counter() - t0)
+        samples.append(clock.perf_counter() - t0)
     return float(np.median(samples) * 1e6)
 
 

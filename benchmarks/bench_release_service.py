@@ -11,11 +11,14 @@ Three regimes matter for a read-heavy private release tier:
   traffic is shed.
 * ``wave``         — release throughput: N admitted requests drained in
   ⌈N/B⌉ fused `run_mwem_batch` dispatches.
+* ``wave_degraded`` — the same drain with the fault harness armed at a 10%
+  dispatch-failure rate: measures what retry waves (re-dispatch + backoff)
+  cost relative to the clean path. Retried lanes are keyed by the same
+  ``PRNGKey(ticket.seed)``, so degraded throughput buys bitwise-identical
+  releases at zero extra ε.
 """
 
 from __future__ import annotations
-
-import time
 
 import jax
 import numpy as np
@@ -23,6 +26,8 @@ import numpy as np
 from benchmarks.common import row
 from repro.core import MWEMConfig
 from repro.core.queries import gaussian_histogram, random_binary_queries
+from repro.faults import Schedule, inject
+from repro.obs import clock
 from repro.serve import ReleaseService
 
 
@@ -57,24 +62,41 @@ def run(quick: bool = True):
     svc.flush()  # warm-up: trace + compile the wave executable
     for i in range(n_tenants):
         svc.submit(f"t{i}")
-    t0 = time.perf_counter()
+    t0 = clock.perf_counter()
     svc.flush()
-    wave_dt = time.perf_counter() - t0
+    wave_dt = clock.perf_counter() - t0
     rows.append(row(f"release_service/wave_B{B}",
                     wave_dt / n_tenants * 1e6,
                     f"releases_per_s={n_tenants / wave_dt:.1f}"
                     f";dispatches={svc.stats.dispatches}"))
 
+    # --- degraded mode: 10% dispatch-failure rate, retry waves --------------
+    # fail_n=1 forces at least one retry even in the quick lane's handful of
+    # dispatches, so the retry-overhead figure is never vacuous
+    for i in range(n_tenants):
+        svc.submit(f"t{i}")
+    with inject({"wave.dispatch": Schedule(fail_n=1, fail_rate=0.10,
+                                           seed=0)}) as plan:
+        t0 = clock.perf_counter()
+        svc.flush()
+        deg_dt = clock.perf_counter() - t0
+    rows.append(row("release_service/wave_degraded",
+                    deg_dt / n_tenants * 1e6,
+                    f"releases_per_s={n_tenants / deg_dt:.1f}"
+                    f";retries={svc.stats.retries}"
+                    f";failures={plan.failures['wave.dispatch']}"
+                    f";retry_overhead={deg_dt / wave_dt:.2f}x"))
+
     # --- answer path: cold (histogram dot) vs hot (zero-ε cache) ------------
     qidx = np.arange(n_answers) % m
-    t0 = time.perf_counter()
+    t0 = clock.perf_counter()
     for j in qidx:
         svc.answer("t0", Qnp[j])
-    cold_dt = time.perf_counter() - t0
-    t0 = time.perf_counter()
+    cold_dt = clock.perf_counter() - t0
+    t0 = clock.perf_counter()
     for j in qidx:
         svc.answer("t0", Qnp[j])
-    hot_dt = time.perf_counter() - t0
+    hot_dt = clock.perf_counter() - t0
     sess = svc.session("t0")
     rows.append(row("release_service/answer_cold", cold_dt / n_answers * 1e6,
                     f"qps={n_answers / cold_dt:.0f}"))
@@ -87,9 +109,9 @@ def run(quick: bool = True):
                        h=h, n_records=n)
     lat = []
     for _ in range(50 if quick else 500):
-        t0 = time.perf_counter()
+        t0 = clock.perf_counter()
         ticket = svc.submit("broke")
-        lat.append(time.perf_counter() - t0)
+        lat.append(clock.perf_counter() - t0)
         assert ticket.status == "rejected"
     rows.append(row("release_service/reject", _med_us(lat),
                     f"rejected={svc.stats.rejected}"))

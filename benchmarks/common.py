@@ -2,8 +2,6 @@
 
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 

@@ -14,7 +14,8 @@ import argparse
 import json
 import platform
 import sys
-import time
+
+from repro.obs import clock
 
 
 def main() -> None:
@@ -53,17 +54,17 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in selected:
         mod = benches[name]
-        t0 = time.time()
+        t0 = clock.perf_counter()
         try:
             rows = mod.run(quick=quick)
             print_rows(rows)
-            dt = time.time() - t0
+            dt = clock.perf_counter() - t0
             results[name] = {"rows": rows, "seconds": round(dt, 2)}
             print(f"# {name}: {len(rows)} rows in {dt:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # keep the suite running; fail at the end
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
-            results[name] = {"rows": [], "seconds": round(time.time() - t0, 2),
+            results[name] = {"rows": [], "seconds": round(clock.perf_counter() - t0, 2),
                              "error": f"{type(e).__name__}: {e}"}
 
     if args.json:
@@ -72,7 +73,7 @@ def main() -> None:
         artifact = {
             "schema": 1,
             "quick": quick,
-            "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "generated_at": clock.timestamp(),
             "backend": jax.default_backend(),
             "device_count": jax.device_count(),
             "platform": platform.platform(),

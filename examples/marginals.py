@@ -11,7 +11,7 @@ runs factored end to end (DESIGN.md §9).
     PYTHONPATH=src python examples/marginals.py
 """
 
-import time
+from repro.obs import clock
 
 import jax
 import jax.numpy as jnp
@@ -36,23 +36,23 @@ uniform = float(max_error(W, h, jnp.full((W.U,), 1.0 / W.U)))
 print(f"uniform-baseline error: {uniform:.4f}\n")
 
 # --- Fast-MWEM over the factored workload ------------------------------
-t0 = time.time()
+t0 = clock.perf_counter()
 res = run_mwem(W, h, MWEMConfig(eps=1.0, delta=1e-3, T=T, mode="fast",
                                 n_records=n),
                jax.random.PRNGKey(1), index=MarginalIVFIndex(W))
 eps, delta = res.ledger.composed()
 print(f"Fast-MWEM (marginal_ivf): err={res.final_error:.4f}  "
       f"scored/iter={int(np.mean(res.n_scored))} of {2*W.m}  "
-      f"wall={time.time()-t0:.1f}s  (ε={eps:.2f}, δ={delta:.1e})")
+      f"wall={clock.perf_counter()-t0:.1f}s  (ε={eps:.2f}, δ={delta:.1e})")
 
 # --- adaptive worst-marginal loop: whole tables per round --------------
-t0 = time.time()
+t0 = clock.perf_counter()
 ad = run_adaptive_marginals(W, h, AdaptiveConfig(eps=1.0, delta=1e-3, T=12,
                                                  n_records=n),
                             jax.random.PRNGKey(2))
 print(f"adaptive marginals:       err={float(ad.final_error):.4f}  "
       f"{len(set(map(int, ad.selected)))} distinct cliques measured  "
-      f"wall={time.time()-t0:.1f}s  (ε={ad.eps_spent:.2f})")
+      f"wall={clock.perf_counter()-t0:.1f}s  (ε={ad.eps_spent:.2f})")
 
 # --- the same workload through the serving tier ------------------------
 svc = ReleaseService(W, MWEMConfig(eps=1.0, delta=1e-3, T=T, mode="fast",

@@ -12,7 +12,7 @@
     PYTHONPATH=src python examples/private_lp.py
 """
 
-import time
+from repro.obs import clock
 
 import jax
 import jax.numpy as jnp
@@ -29,23 +29,23 @@ m, d = 4000, 20
 A, b, x_star = random_feasible_lp(jax.random.PRNGKey(0), m=m, d=d)
 print(f"scalar-private LP: m={m} constraints, d={d}, Δ∞=0.1, α=0.5")
 
-t0 = time.time()
+t0 = clock.perf_counter()
 exact = solve_scalar_lp(A, b, ScalarLPConfig(T=150, mode="exact"),
                         jax.random.PRNGKey(1))
 print(f"  exhaustive: violated={exact.violated_frac:.4f} "
-      f"wall={time.time()-t0:.1f}s")
+      f"wall={clock.perf_counter()-t0:.1f}s")
 
 Ab = lp_scalar_rows(np.asarray(A), np.asarray(b))
 for name, index in (("flat", FlatIndex(Ab, use_pallas="never")),
                     ("ivf", IVFIndex(Ab, seed=0))):
     for driver in ("host", "fused"):
-        t0 = time.time()
+        t0 = clock.perf_counter()
         cfg = ScalarLPConfig(T=150, mode="fast", driver=driver)
         fast = solve_scalar_lp(A, b, cfg, jax.random.PRNGKey(1), index=index)
         print(f"  fast-{name:4s}/{driver:5s}: "
               f"violated={fast.violated_frac:.4f} "
               f"scored/iter={int(np.mean(fast.n_scored))} "
-              f"wall={time.time()-t0:.1f}s")
+              f"wall={clock.perf_counter()-t0:.1f}s")
 
 # ---- constraint-private packing LP ------------------------------------
 m2, d2 = 300, 128

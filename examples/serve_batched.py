@@ -7,7 +7,7 @@ request engine.
     PYTHONPATH=src python examples/serve_batched.py
 """
 
-import time
+from repro.obs import clock
 
 import jax
 import numpy as np
@@ -26,9 +26,9 @@ requests = [Request(prompt=rng.integers(0, cfg.vocab_size, 12).tolist(),
             for _ in range(12)]
 engine = ServeEngine(model, params, batch_size=4, max_len=48, seed=0)
 
-t0 = time.time()
+t0 = clock.perf_counter()
 engine.run(requests)
-dt = time.time() - t0
+dt = clock.perf_counter() - t0
 total = sum(len(r.out_tokens) for r in requests)
 print(f"served {len(requests)} requests / {total} tokens in {dt:.1f}s "
       f"({total/dt:.1f} tok/s, batch=4 waves)")

@@ -11,7 +11,7 @@ DP by post-processing. Any registry architecture works — this driver uses a
 """
 
 import argparse
-import time
+from repro.obs import clock
 
 import jax
 import numpy as np
@@ -48,11 +48,11 @@ corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
 raw = np.asarray(batch_for_step(corpus, 0, 0, 1, 256, args.seq))
 pipe = PrivateDataPipeline(vocab_size=cfg.vocab_size, eps=args.eps,
                            n_queries=512, T=150, index_kind="ivf", seed=0)
-t0 = time.time()
+t0 = clock.perf_counter()
 pipe.fit(raw)
 eps, delta = pipe.privacy_spent()
 print(f"Fast-MWEM release: (ε={eps:.2f}, δ={delta:.1e}) "
-      f"in {time.time()-t0:.1f}s — training is DP by post-processing")
+      f"in {clock.perf_counter()-t0:.1f}s — training is DP by post-processing")
 
 # ---- train --------------------------------------------------------------
 tcfg = TrainConfig(lr=1e-3, total_steps=args.steps, warmup_steps=20,
@@ -63,14 +63,14 @@ opt_state = opt_init(params)
 ckpt = CheckpointManager(args.ckpt, keep_n=2)
 
 losses = []
-t0 = time.time()
+t0 = clock.perf_counter()
 for step in range(args.steps):
     tokens = pipe.sample_batch(step, 0, args.batch, args.seq)
     params, opt_state, metrics = train_step(params, opt_state,
                                             {"tokens": tokens})
     losses.append(float(metrics["loss"]))
     if (step + 1) % 25 == 0:
-        tok_s = (step + 1) * args.batch * args.seq / (time.time() - t0)
+        tok_s = (step + 1) * args.batch * args.seq / (clock.perf_counter() - t0)
         print(f"step {step+1:4d}  loss {losses[-1]:.4f}  tok/s {tok_s:,.0f}")
     if (step + 1) % 100 == 0:
         ckpt.save(step + 1, {"params": params, "opt": opt_state})

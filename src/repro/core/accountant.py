@@ -17,6 +17,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+from repro.faults import fault_site
+
 
 def advanced_composition(
     eps0: float, delta0: float, k: int, delta_prime: float, tight: bool = False
@@ -44,7 +46,20 @@ def calibrate_eps0(eps: float, delta: float, T: int, scheme: str = "mwem") -> fl
 
 @dataclass
 class PrivacyLedger:
-    """Append-only record of privacy events for one end-to-end run."""
+    """Append-only record of privacy events for one end-to-end run.
+
+    Two-phase budget commit (DESIGN.md §10): a serving tier that charges
+    budget *at dispatch* cannot survive a crash — an exception between the
+    charge and the answer either leaks ε (charged, nothing released) or
+    invites a double charge on retry. `reserve` holds a release's exact
+    cost bundle against the ledger without touching the composed state;
+    `commit` applies it through the very same `record_events` path a direct
+    charge would take (bitwise-equal ledger state in both composition
+    modes), and `abort` refunds it. Outstanding reservations are visible to
+    admission via `reserved_bundle` so queued-but-unexecuted requests still
+    count against the budget — but they survive any crash of the code that
+    queued them, because they live here, not in a transient queue.
+    """
 
     target_delta_prime: float = 1e-9
     events: list = field(default_factory=list)
@@ -54,6 +69,11 @@ class PrivacyLedger:
     # layer hangs per-tenant ε/δ-spent gauges here. Excluded from repr/eq
     # so ledgers still compare by their privacy state alone.
     hooks: list = field(default_factory=list, repr=False, compare=False)
+    # rid -> (events, gamma, slack) bundles reserved but not yet committed.
+    # Excluded from eq: a recovered ledger has resolved every reservation,
+    # and equality means "same composed privacy state".
+    reservations: dict = field(default_factory=dict, repr=False, compare=False)
+    _next_rid: int = field(default=0, repr=False, compare=False)
 
     def add_hook(self, fn) -> None:
         """Register ``fn(ledger)`` to fire after every mutating record."""
@@ -62,6 +82,54 @@ class PrivacyLedger:
     def _notify(self) -> None:
         for fn in self.hooks:
             fn(self)
+
+    # ------------------------------------------------- two-phase commit
+    def reserve(self, events, gamma: float = 0.0, slack: float = 0.0) -> int:
+        """Phase one: hold a cost bundle against this ledger.
+
+        Nothing is spent — `composed()` is unchanged and hooks do NOT fire
+        (the budget gauges report committed spend only). Returns a
+        reservation id for `commit`/`abort`.
+        """
+        rid = self._next_rid
+        self._next_rid += 1
+        self.reservations[rid] = (
+            [(e0, d0, label) for e0, d0, label in events],
+            float(gamma), float(slack))
+        return rid
+
+    def commit(self, rid: int) -> None:
+        """Phase two: apply a reserved bundle to the ledger.
+
+        Routes through `record_events`, so reserve→commit leaves the ledger
+        bitwise equal to a direct `record_events` of the same bundle (and
+        hooks fire here, exactly once)."""
+        fault_site("ledger.commit")
+        try:
+            bundle = self.reservations.pop(rid)
+        except KeyError:
+            raise KeyError(f"unknown or already-resolved reservation {rid}")
+        self.record_events(*bundle)
+
+    def abort(self, rid: int) -> None:
+        """Drop a reservation — the refund path (expired deadline, failed
+        wave, shed load). A no-op on the composed state; hooks don't fire."""
+        try:
+            del self.reservations[rid]
+        except KeyError:
+            raise KeyError(f"unknown or already-resolved reservation {rid}")
+
+    def reserved_bundle(self) -> tuple[list, float, float]:
+        """Aggregate ``(events, γ, Σ2c)`` over all outstanding reservations
+        — the admission controller's ``reserved=`` input, so queued
+        requests count against the budget until committed or aborted."""
+        events: list = []
+        gamma = slack = 0.0
+        for ev, g, s in self.reservations.values():
+            events.extend(ev)
+            gamma += g
+            slack += s
+        return events, gamma, slack
 
     def record(self, eps0: float, delta0: float = 0.0, label: str = "") -> None:
         self.events.append((eps0, delta0, label))

@@ -1,0 +1,146 @@
+"""Deterministic fault injection for the serving tier's chaos suite.
+
+The fault-tolerance layer (DESIGN.md §10) is only trustworthy if its
+failure paths actually execute, so this module plants named *fault sites*
+at the seams a real deployment fails at:
+
+* ``wave.dispatch``    — the release wave's batched driver call
+* ``ledger.commit``    — phase two of the budget commit
+* ``journal.append``   — the write-ahead journal's disk write
+* ``kernel.mwem_step`` — the megakernel step seam (trace/compile path)
+* ``index.probe``      — the k-MIPS probe seam
+
+Each site is one call to `fault_site(name)`; when no plan is armed it is a
+single ``is None`` check — zero overhead, no allocation, nothing touches
+JAX. Arming is scoped through the `inject` context manager with per-site
+`Schedule`s:
+
+    with inject({"wave.dispatch": Schedule(fail_n=2)}) as plan:
+        service.flush()          # first two dispatches raise FaultInjected
+    plan.hits["wave.dispatch"]   # how often the site was reached
+
+Schedules are deterministic: ``fail_n`` fails the first n hits,
+``fail_rate`` draws a seeded per-hit Bernoulli (the seed folds the site
+name through crc32, so two sites armed from one seed fail independently
+but reproducibly), and ``latency`` sleeps through `repro.obs.clock` —
+the repo's single sanctioned time seam — before letting the hit proceed.
+`FaultInjected` subclasses ``RuntimeError`` so the serving tier's
+retryable-failure classification treats it exactly like a device/runtime
+fault (a ``ValueError`` stays a programming error and propagates).
+"""
+
+from __future__ import annotations
+
+import threading
+import zlib
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.obs import clock
+
+SITES = (
+    "wave.dispatch",
+    "ledger.commit",
+    "journal.append",
+    "kernel.mwem_step",
+    "index.probe",
+)
+
+
+class FaultInjected(RuntimeError):
+    """Raised by an armed fault site. Carries the site name so the obs
+    layer can label `dispatch_failures_total{site=...}` per seam."""
+
+    def __init__(self, site: str, hit: int):
+        super().__init__(f"injected fault at {site} (hit #{hit})")
+        self.site = site
+        self.hit = hit
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Per-site failure schedule. All fields compose: an armed site first
+    sleeps ``latency`` seconds, then fails if the hit is scheduled to."""
+
+    fail_n: int = 0          # fail the first n hits (fail-once: fail_n=1)
+    fail_rate: float = 0.0   # seeded per-hit Bernoulli failure probability
+    latency: float = 0.0     # injected delay (seconds) per hit
+    seed: int = 0            # drives the fail_rate draws, per-site folded
+
+
+def fail_once() -> Schedule:
+    return Schedule(fail_n=1)
+
+
+def fail_n(n: int) -> Schedule:
+    return Schedule(fail_n=n)
+
+
+def _site_rng(site: str, seed: int) -> np.random.Generator:
+    # stable across processes (never `hash`, which is salted per run)
+    return np.random.default_rng(np.uint32(seed) + zlib.crc32(site.encode()))
+
+
+class FaultPlan:
+    """An armed set of per-site schedules plus hit/fail accounting."""
+
+    def __init__(self, schedules: Dict[str, Schedule]):
+        unknown = set(schedules) - set(SITES)
+        if unknown:
+            raise ValueError(f"unknown fault site(s) {sorted(unknown)}; "
+                             f"known: {list(SITES)}")
+        self.schedules = dict(schedules)
+        self.hits: Dict[str, int] = {s: 0 for s in schedules}
+        self.failures: Dict[str, int] = {s: 0 for s in schedules}
+        self._rngs = {s: _site_rng(s, sch.seed)
+                      for s, sch in schedules.items()}
+        self._lock = threading.Lock()
+
+    def check(self, site: str) -> None:
+        sched = self.schedules.get(site)
+        if sched is None:
+            return
+        with self._lock:
+            self.hits[site] += 1
+            hit = self.hits[site]
+            fail = hit <= sched.fail_n
+            if not fail and sched.fail_rate > 0.0:
+                fail = bool(self._rngs[site].random() < sched.fail_rate)
+            if fail:
+                self.failures[site] += 1
+        if sched.latency > 0.0:
+            clock.sleep(sched.latency)
+        if fail:
+            raise FaultInjected(site, hit)
+
+
+_active: Optional[FaultPlan] = None
+
+
+def fault_site(site: str) -> None:
+    """The instrumentation hook. Disarmed: one ``is None`` check."""
+    if _active is None:
+        return
+    _active.check(site)
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _active
+
+
+@contextmanager
+def inject(schedules: Dict[str, Schedule]):
+    """Arm ``schedules`` for the dynamic extent of the block. Nesting
+    replaces the outer plan (the chaos suite never needs two at once and
+    silent merging would make sweeps ambiguous)."""
+    global _active
+    prior = _active
+    plan = FaultPlan(schedules)
+    _active = plan
+    try:
+        yield plan
+    finally:
+        _active = prior

@@ -19,6 +19,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.faults import fault_site
 from repro.kernels.mwem_step.mwem_step import (gather_score_pallas,
                                                marginal_gather_score_pallas,
                                                mwem_step_pallas)
@@ -67,6 +68,7 @@ def mwem_step(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
       h: (U,) histogram.
       noise: scalar realized Laplace noise (0.0 for ``rule="paper"``).
     """
+    fault_site("kernel.mwem_step")
     _check_rule(rule)
     U = log_w.shape[0]
     if not mwem_step_supported(U):
@@ -93,6 +95,7 @@ def mwem_step_batch(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
     shared (U,) or per-lane (B, U) histogram. Lane b reproduces
     `mwem_step` for its slice bitwise (grid programs are independent).
     """
+    fault_site("kernel.mwem_step")
     _check_rule(rule)
     B, U = log_w.shape
     if not mwem_step_supported(U, B):
@@ -163,6 +166,7 @@ def mwu_apply(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
     model tail, where the winner row arrives via a one-hot psum instead of
     an id into a local table. Same kernel body, ``sel = [0]`` into the
     (1, U) row."""
+    fault_site("kernel.mwem_step")
     _check_rule(rule)
     U = log_w.shape[0]
     if not mwem_step_supported(U):

@@ -23,6 +23,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.faults import fault_site
+
 UPDATE_RULES = ("paper", "signed", "hardt")
 
 
@@ -66,5 +68,6 @@ def mwem_step_ref(log_w: jax.Array, p: jax.Array, p_sum: jax.Array,
     Returns ``(log_w', p', p_sum + p')`` — exactly the state the fused scan
     carries per lane.
     """
+    fault_site("kernel.mwem_step")
     lw, p_new = mwu_apply_ref(log_w, p, q_row, h, noise, rule=rule, eta=eta)
     return lw, p_new, p_sum + p_new

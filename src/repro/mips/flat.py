@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.workload import Workload, as_workload
+from repro.faults import fault_site
 from repro.mips.base import resolve_pallas
 
 
@@ -100,6 +101,7 @@ class FlatIndex:
         return self.query_in_graph(jnp.asarray(v, jnp.float32), k)
 
     def query_in_graph(self, v, k: int):
+        fault_site("index.probe")
         return _flat_query(self._v, v, k, self._resolve_pallas())
 
     def query_cost(self, k: int) -> int:
@@ -147,12 +149,14 @@ class FlatAbsIndex:
         return self.query_in_graph(jnp.asarray(v, jnp.float32), k)
 
     def query_in_graph(self, v, k: int):
+        fault_site("index.probe")
         if not self._w.is_dense:
             aug, top_a, _ = _flat_abs_workload_scores(self._w, v, k)
             return aug, top_a
         return _flat_abs_query(self._q, v, k, self._resolve_pallas())
 
     def query_in_graph_batch(self, Vb, k: int):
+        fault_site("index.probe")
         if not self._w.is_dense:
             aug, top_a, _ = jax.vmap(
                 lambda q: _flat_abs_workload_scores(self._w, q, k))(Vb)
@@ -171,6 +175,7 @@ class FlatAbsIndex:
         """Exhaustive probe that also returns the full (m,) signed score
         vector — the fused driver reuses it for tail scoring and the
         overflow fallback instead of re-touching Q (DESIGN.md §2)."""
+        fault_site("index.probe")
         if not self._w.is_dense:
             return _flat_abs_workload_scores(self._w, v, k)
         return _flat_abs_query_scores(self._q, v, k)

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.faults import fault_site
 from repro.mips.base import resolve_pallas
 
 
@@ -183,6 +184,7 @@ class IVFIndex:
         return self.query_in_graph(jnp.asarray(v, jnp.float32), k)
 
     def query_in_graph(self, v, k: int):
+        fault_site("index.probe")
         if self._resolve_pallas():
             from repro.kernels.ivf_probe import ivf_probe_topk
 
@@ -198,6 +200,7 @@ class IVFIndex:
 
         The kernel route reads cells probed by several lanes once; the XLA
         route is the vmapped single probe (bitwise per-lane parity)."""
+        fault_site("index.probe")
         if self._resolve_pallas():
             from repro.kernels.ivf_probe import ivf_probe_topk_batch
 

@@ -12,6 +12,10 @@ policy has one place to change:
   backwards under NTP skew and reorder events; this cannot.
 * `wall_time` — the one sanctioned wall-clock read, for human-facing
   timestamps only (never for ordering or arithmetic between events).
+* `timestamp` — formatted wall-clock string for artifacts/logs.
+* `sleep` — the single sanctioned delay primitive (retry backoff, injected
+  latency in `repro.faults`): everything that waits goes through here so a
+  test double or fault schedule can control time everywhere at once.
 """
 
 from __future__ import annotations
@@ -21,3 +25,9 @@ import time as _time
 perf_counter = _time.perf_counter
 monotonic = _time.monotonic
 wall_time = _time.time
+sleep = _time.sleep
+
+
+def timestamp() -> str:
+    """Human-facing wall-clock stamp (ISO-8601-ish, local offset)."""
+    return _time.strftime("%Y-%m-%dT%H:%M:%S%z")

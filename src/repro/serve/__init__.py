@@ -9,10 +9,21 @@ Two serving tiers live here (DESIGN.md §5):
   control, cross-tenant fixed-size release waves through one
   `run_mwem_batch` dispatch, and a zero-ε answer cache over released
   synthetic histograms.
+* `journal` / `breaker` — the fault-tolerance layer (DESIGN.md §10):
+  write-ahead journaling of the two-phase budget commit with crash
+  `recover()`, and the circuit breaker that pins a flaky kernel route to
+  the bitwise XLA reference path.
 """
 
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.admission import AdmissionController, AdmissionDecision
+from repro.serve.breaker import CircuitBreaker
+from repro.serve.journal import (
+    Journal,
+    RecoveredState,
+    read_records,
+    recover,
+)
 from repro.serve.release_service import (
     ReleaseService,
     ReleaseTicket,
@@ -32,6 +43,11 @@ __all__ = [
     "Request",
     "AdmissionController",
     "AdmissionDecision",
+    "CircuitBreaker",
+    "Journal",
+    "RecoveredState",
+    "read_records",
+    "recover",
     "ReleaseService",
     "ReleaseTicket",
     "ServiceStats",

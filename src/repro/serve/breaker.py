@@ -1,0 +1,79 @@
+"""Circuit breaker for the Pallas kernel seams (DESIGN.md §10).
+
+A flaky accelerator path must not take the serving tier down with it: the
+kernels already have bitwise XLA reference fallbacks (DESIGN.md §3/§7),
+so after ``threshold`` *consecutive* runtime failures the breaker opens
+and the owning service pins itself to the reference route
+(``use_pallas="never"``) — answers stay bitwise-correct, only the
+roofline win is given up. A later `reset()` (operator action, or a config
+reload after a toolchain fix) closes it again.
+
+The breaker publishes its state as a gauge (0 = closed, 1 = open) plus a
+trip counter, so degraded services are visible on the same dashboard as
+everything else.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry, default_registry
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker with on-trip / on-reset callbacks."""
+
+    def __init__(self, threshold: int = 3, seam: str = "kernel",
+                 registry: Optional[MetricsRegistry] = None):
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        self.threshold = threshold
+        self.seam = seam
+        self.consecutive_failures = 0
+        self.is_open = False
+        self.trips = 0
+        self._registry = registry
+        self._on_trip: List[Callable[[], None]] = []
+        self._publish()
+
+    def on_trip(self, fn: Callable[[], None]) -> None:
+        """Register a callback fired once each time the breaker opens —
+        the service hangs its degrade-to-ref-path switch here."""
+        self._on_trip.append(fn)
+
+    def record_success(self) -> None:
+        self.consecutive_failures = 0
+        self._publish()
+
+    def record_failure(self) -> bool:
+        """Count one runtime failure; returns True iff this one tripped
+        the breaker open."""
+        self.consecutive_failures += 1
+        tripped = (not self.is_open
+                   and self.consecutive_failures >= self.threshold)
+        if tripped:
+            self.is_open = True
+            self.trips += 1
+            if obs.enabled():
+                reg = (self._registry if self._registry is not None
+                       else default_registry())
+                reg.counter("breaker_trips_total", seam=self.seam).inc()
+            for fn in self._on_trip:
+                fn()
+        self._publish()
+        return tripped
+
+    def reset(self) -> None:
+        """Close the breaker (operator action after the fault is fixed)."""
+        self.is_open = False
+        self.consecutive_failures = 0
+        self._publish()
+
+    def _publish(self) -> None:
+        if not obs.enabled():
+            return
+        reg = self._registry if self._registry is not None else default_registry()
+        reg.gauge("breaker_state", seam=self.seam).set(float(self.is_open))
+        reg.gauge("breaker_consecutive_failures", seam=self.seam).set(
+            self.consecutive_failures)

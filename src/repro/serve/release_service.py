@@ -22,8 +22,23 @@ Flow (DESIGN.md §5):
 
 Budget reservations: a queued-but-unexecuted request already counts against
 its tenant's budget at admission time (its cost bundle is held as a
-reservation and previewed together with the ledger), so two requests that
-individually fit but jointly overspend cannot both be admitted.
+reservation on the tenant *ledger* — `PrivacyLedger.reserve` — and
+previewed together with it), so two requests that individually fit but
+jointly overspend cannot both be admitted.
+
+Fault tolerance (DESIGN.md §10): budget moves through a two-phase commit —
+reserve at submit, commit only after the wave's results land, abort on
+expiry/failure/shedding — with every transition written ahead to an
+optional JSONL `Journal` so `journal.recover()` can rebuild sessions and
+ledgers after a crash. Waves are exception-safe: on a retryable failure
+the tickets stay at the queue head and the wave re-dispatches with capped
+exponential backoff; because lanes are keyed by ``PRNGKey(ticket.seed)``,
+a retried wave is bitwise identical to a clean run, so retries cost zero
+additional privacy and commit exactly once. Per-ticket deadlines expire
+still-queued tickets with a refunded reservation; a `CircuitBreaker`
+around the kernel seams pins the service to the XLA reference route after
+repeated runtime failures; and queue-depth load shedding rejects before
+any reservation is taken.
 
 The LP workload (paper §4, DESIGN.md §6) rides the same machinery:
 `attach_lp` registers a scalar-private feasibility LP (public A,
@@ -50,29 +65,50 @@ from repro.core.lp_dual import lp_release_cost
 from repro.core.lp_scalar import ScalarLPConfig, solve_lp_batch
 from repro.core.mwem import MWEMConfig, release_cost, run_mwem_batch
 from repro.core.workload import as_workload
+from repro.faults import fault_site
 from repro.mips import (FlatAbsIndex, FlatIndex, IVFIndex, LSHIndex,
                         MarginalIVFIndex, ShardedIVFIndex,
                         augment_complement, lp_scalar_rows)
 from repro.obs import trace as obs
-from repro.obs.clock import monotonic
+from repro.obs.clock import monotonic, sleep
 from repro.obs.metrics import MetricsRegistry, default_registry
 from repro.serve.admission import AdmissionController, AdmissionDecision
+from repro.serve.breaker import CircuitBreaker
+from repro.serve.journal import Journal, RecoveredState, encode_bundle
 from repro.serve.session import (Answer, ReleasedHistogram, ReleasedLP,
                                  TenantSession)
+
+
+def _retryable(exc: BaseException) -> bool:
+    """Transient-vs-programming-error classification for wave failures.
+
+    Device/runtime faults (XLA runtime errors subclass ``RuntimeError``,
+    injected `FaultInjected` faults do too, I/O hiccups are ``OSError``)
+    re-dispatch; ``ValueError``/``TypeError``/``NotImplementedError`` are
+    bugs or unsupported configs and propagate to the caller unchanged —
+    retrying cannot fix them and would burn the backoff budget."""
+    if isinstance(exc, NotImplementedError):
+        return False
+    return isinstance(exc, (RuntimeError, OSError))
 
 
 @dataclass
 class ReleaseTicket:
     """Handle returned by `submit`/`submit_lp`; resolved by the wave that
-    executes it."""
+    executes it (or by a deadline/retry-limit along the way)."""
 
     ticket_id: int
     tenant_id: str
     seed: int
-    status: str                      # "queued" | "rejected" | "done"
+    # "queued" | "rejected" | "retrying" | "done" | "failed" | "expired"
+    status: str
     decision: AdmissionDecision
     kind: str = "mwem"               # "mwem" | "lp"
     cost_bundle: tuple = ()          # (events, gamma, slack) reservation
+    rid: Optional[int] = None        # ledger reservation id (until resolved)
+    attempts: int = 0                # dispatch attempts that included this ticket
+    deadline: Optional[float] = None  # absolute monotonic expiry, or None
+    error: str = ""                  # last failure, when status == "failed"
     release: Optional[object] = None  # ReleasedHistogram | ReleasedLP
     final_error: float = float("nan")
     submit_time: float = float("nan")   # monotonic stamp at submit()
@@ -86,11 +122,16 @@ class ServiceStats:
     lp_released: int = 0
     rejected: int = 0
     padded_slots: int = 0
+    retries: int = 0
+    failed: int = 0
+    expired: int = 0
+    shed: int = 0
 
     def as_dict(self) -> dict:
         return dict(dispatches=self.dispatches, released=self.released,
                     lp_released=self.lp_released, rejected=self.rejected,
-                    padded_slots=self.padded_slots)
+                    padded_slots=self.padded_slots, retries=self.retries,
+                    failed=self.failed, expired=self.expired, shed=self.shed)
 
 
 @dataclass
@@ -130,7 +171,12 @@ class ReleaseService:
                  index_kind: str = "flat", seed: int = 0,
                  tight_composition: bool = False, auto_flush: bool = True,
                  mesh=None, use_pallas: str = "auto",
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 journal: Optional[Journal] = None, retry_limit: int = 3,
+                 backoff_base: float = 0.05, backoff_cap: float = 2.0,
+                 default_deadline: Optional[float] = None,
+                 max_queue_depth: Optional[int] = None,
+                 breaker_threshold: int = 3):
         # the workload seam: a raw (m, U) matrix or any `core.workload`
         # family — `MarginalWorkload` releases run factored end to end
         # through the same admission/cost/wave path (DESIGN.md §9)
@@ -157,6 +203,22 @@ class ReleaseService:
         self._next_ticket = 0
         self._next_release = 0
         self._next_seed = seed
+        # every seed ever handed to a lane (auto or explicit) — the auto
+        # counter skips issued values so two tickets can never share a PRNG
+        # stream by accident (identical seeds ⇒ identical releases ⇒ the
+        # second tenant pays ε for an answer the first already published)
+        self._issued_seeds: set = set()
+        # fault-tolerance knobs (DESIGN.md §10)
+        self.journal = journal
+        self.retry_limit = int(retry_limit)
+        self.backoff_base = float(backoff_base)
+        self.backoff_cap = float(backoff_cap)
+        self.default_deadline = default_deadline
+        self.max_queue_depth = max_queue_depth
+        self.degraded = False
+        self.breaker = CircuitBreaker(threshold=breaker_threshold,
+                                      registry=self.metrics)
+        self.breaker.on_trip(self._degrade_to_ref)
         # `use_pallas` ("auto" | "always" | "never") routes the per-wave
         # probe through the fused kernels where the index supports them
         # (kernels/ivf_probe for IVF, mips_topk for flat) — "auto" falls
@@ -218,7 +280,28 @@ class ReleaseService:
                                  delta_budget=delta_budget)
         self.sessions[tenant_id] = sess
         self._register_ledger_gauges(sess)
+        self._journal("session-created", tenant_id=tenant_id,
+                      h=sess.h.tolist(), n_records=sess.n_records,
+                      eps_budget=sess.eps_budget,
+                      delta_budget=sess.delta_budget)
         return sess
+
+    def adopt(self, recovered: RecoveredState) -> None:
+        """Install sessions rebuilt by `journal.recover` into this (fresh)
+        service — ledgers arrive already charged per the journal's
+        committed/in-doubt records, and seed/id counters fast-forward so
+        new tickets can never collide with pre-crash ones."""
+        for tenant_id, sess in recovered.sessions.items():
+            if tenant_id in self.sessions:
+                raise ValueError(
+                    f"session {tenant_id!r} already exists; adopt into a "
+                    "fresh service")
+            self.sessions[tenant_id] = sess
+            self._register_ledger_gauges(sess)
+        self._issued_seeds |= set(recovered.issued_seeds)
+        self._next_release = max(self._next_release,
+                                 recovered.next_release_id)
+        self._next_ticket = max(self._next_ticket, recovered.next_ticket_id)
 
     def _register_ledger_gauges(self, sess: TenantSession) -> None:
         """Hang the obs gauges off the tenant's ledger: after every
@@ -251,32 +334,189 @@ class ReleaseService:
         return replace(self.cfg, n_records=n_records)
 
     def _reserved(self, tenant_id: str):
-        """Cost bundles of this tenant's queued-but-unexecuted tickets —
-        across *both* workloads: a queued LP solve reserves budget against
-        a pending histogram release and vice versa."""
-        groups = list(self._pending.values())
-        if self.lp is not None:
-            groups.append(self.lp.pending)
-        events: list = []
-        gamma = slack = 0.0
-        for group in groups:
-            for t in group:
-                if t.tenant_id == tenant_id:
-                    ev, g, s = t.cost_bundle
-                    events.extend(ev)
-                    gamma += g
-                    slack += s
-        return events, gamma, slack
+        """Cost bundles of this tenant's open (phase-one) reservations —
+        held on the tenant *ledger*, so they pool across both workloads: a
+        queued LP solve reserves budget against a pending histogram
+        release and vice versa."""
+        return self.sessions[tenant_id].ledger.reserved_bundle()
 
-    def submit(self, tenant_id: str,
-               seed: Optional[int] = None) -> ReleaseTicket:
+    def _take_seed(self, seed: Optional[int]) -> int:
+        """Issue a lane seed. Auto-issued seeds skip every seed already
+        handed out (including explicit ones — the historical bug let the
+        counter re-issue an explicitly-requested value); explicit seeds are
+        honored verbatim and registered so the counter avoids them."""
+        if seed is None:
+            while self._next_seed in self._issued_seeds:
+                self._next_seed += 1
+            seed = self._next_seed
+            self._next_seed += 1
+        seed = int(seed)
+        self._issued_seeds.add(seed)
+        return seed
+
+    # ----------------------------------------------------- fault tolerance
+    def _journal(self, rec_kind: str, **payload) -> None:
+        """Write one WAL record, riding the service's own retry/backoff
+        policy: a transient append failure (full disk buffer, injected
+        fault) retries; a persistent one propagates — budget transitions
+        must not proceed unlogged."""
+        if self.journal is None:
+            return
+        for attempt in range(self.retry_limit + 1):
+            try:
+                self.journal.append(rec_kind, **payload)
+                return
+            except Exception as exc:
+                if not _retryable(exc) or attempt >= self.retry_limit:
+                    raise
+                self._backoff(attempt)
+
+    def _backoff(self, attempt: int) -> None:
+        sleep(min(self.backoff_cap, self.backoff_base * (2.0 ** attempt)))
+
+    def _abort_ticket(self, ticket: ReleaseTicket, reason: str,
+                      status: str) -> None:
+        """Refund a ticket's phase-one reservation and resolve the ticket
+        (``status`` ∈ {"expired", "failed"})."""
+        if ticket.rid is not None:
+            self.sessions[ticket.tenant_id].ledger.abort(ticket.rid)
+            self._journal("aborted", tenant_id=ticket.tenant_id,
+                          rid=ticket.rid, reason=reason)
+            ticket.rid = None
+        ticket.status = status
+        if obs.enabled():
+            self.metrics.counter("reservations_aborted_total",
+                                 reason=reason).inc()
+
+    def _expire_deadlines(self, queue: List[ReleaseTicket]) -> None:
+        """Expire still-queued tickets past their deadline: the reservation
+        is refunded in full — nothing ran, no randomness was realized, so
+        the refund leaks nothing."""
+        now = monotonic()
+        expired = [t for t in queue
+                   if t.deadline is not None and now >= t.deadline]
+        for t in expired:
+            queue.remove(t)
+            self._abort_ticket(t, reason="expired", status="expired")
+            self.stats.expired += 1
+
+    def _commit_ticket(self, ticket: ReleaseTicket) -> None:
+        """Phase two for one delivered lane. `PrivacyLedger.commit` checks
+        its fault site *before* popping the reservation, so a failed
+        attempt leaves the reservation intact and the retry commits exactly
+        once. The journal record lands *after* the ledger moves: if the
+        process dies in between, recovery's in-doubt rule (dispatched, no
+        resolution ⇒ committed) reconstructs the same ledger state."""
+        sess = self.sessions[ticket.tenant_id]
+        for attempt in range(self.retry_limit + 1):
+            try:
+                sess.ledger.commit(ticket.rid)
+                break
+            except KeyError:
+                raise
+            except Exception as exc:
+                if not _retryable(exc) or attempt >= self.retry_limit:
+                    raise
+                self._backoff(attempt)
+        rid, ticket.rid = ticket.rid, None
+        self._journal("committed", tenant_id=ticket.tenant_id, rid=rid)
+
+    def _note_dispatch_failure(self, exc: BaseException,
+                               wave: List[ReleaseTicket], attempt: int,
+                               kind: str) -> bool:
+        """Account one failed wave attempt; returns True iff the wave
+        should re-dispatch (retryable and under the retry budget)."""
+        site = getattr(exc, "site", "wave.dispatch")
+        if obs.enabled():
+            self.metrics.counter("dispatch_failures_total", site=site).inc()
+        # failures only count toward the breaker while the Pallas route is
+        # still live — once degraded to the reference path, further faults
+        # are not the kernels' doing
+        if self.cfg.use_pallas != "never":
+            self.breaker.record_failure()
+        retry = _retryable(exc) and attempt <= self.retry_limit
+        for t in wave:
+            t.attempts += 1
+            t.error = repr(exc)
+            t.status = "retrying" if retry else "failed"
+        if retry:
+            self.stats.retries += 1
+            if obs.enabled():
+                self.metrics.counter("wave_retries_total", kind=kind).inc()
+            self._backoff(attempt - 1)
+        return retry
+
+    def _fail_wave(self, wave: List[ReleaseTicket],
+                   exc: BaseException) -> None:
+        """Resolve a wave that exhausted its retries (or hit a
+        programming error): reservations are refunded — the dispatch never
+        produced output, so no randomness escaped and the refund is safe."""
+        for t in wave:
+            self._abort_ticket(t, reason="failed", status="failed")
+            t.error = repr(exc)
+        self.stats.failed += len(wave)
+
+    def _degrade_to_ref(self) -> None:
+        """Breaker trip: pin the service to the XLA reference route. The
+        megakernel and classic paths are bitwise-identical (DESIGN.md §7),
+        so degradation changes throughput, never answers."""
+        self.cfg = replace(self.cfg, use_pallas="never")
+        indexes = [self.index]
+        if self.lp is not None:
+            indexes.append(self.lp.index)
+        for idx in indexes:
+            if idx is not None:
+                # the fused drivers key their executable caches on this
+                # attribute, so flipping it re-routes cleanly
+                idx._use_pallas = "never"
+        self.degraded = True
+        if obs.enabled():
+            self.metrics.counter("service_degraded_total").inc()
+
+    def _shed_check(self, tenant_id: str,
+                    kind: str) -> Optional[ReleaseTicket]:
+        """Queue-depth load shedding: reject before any seed is issued or
+        reservation taken, so a shed request is free to retry later."""
+        if self.max_queue_depth is None:
+            return None
+        depth = self.pending_count()
+        if depth < self.max_queue_depth:
+            return None
+        sess = self.sessions[tenant_id]
+        decision = AdmissionDecision(
+            admitted=False, tenant_id=tenant_id,
+            eps_projected=float("nan"), delta_projected=float("nan"),
+            eps_budget=sess.eps_budget, delta_budget=sess.delta_budget,
+            eps_cost=float("nan"), delta_cost=float("nan"),
+            reason=f"load shed: queue depth {depth} >= "
+                   f"{self.max_queue_depth}")
+        ticket = ReleaseTicket(
+            ticket_id=self._next_ticket, tenant_id=tenant_id, seed=-1,
+            status="rejected", decision=decision, kind=kind,
+            submit_time=monotonic())
+        self._next_ticket += 1
+        self.stats.shed += 1
+        if obs.enabled():
+            self.metrics.counter("load_shed_total", kind=kind).inc()
+        return ticket
+
+    def submit(self, tenant_id: str, seed: Optional[int] = None,
+               deadline: Optional[float] = None) -> ReleaseTicket:
         """Request one release for a tenant.
 
         Admission previews the tenant ledger with the release's exact cost
-        bundle (plus any still-queued reservations) appended; over-budget
+        bundle (plus any still-open reservations) appended; over-budget
         requests are rejected *before* anything is spent, with the
-        projected composed (ε, δ) reported on the decision.
+        projected composed (ε, δ) reported on the decision. Admitted
+        requests take a phase-one ledger reservation (journaled) that a
+        successful wave commits and an expiry/failure refunds.
+        ``deadline`` (seconds from now; falls back to the service's
+        ``default_deadline``) expires the ticket if it is still queued when
+        a wave next drains.
         """
+        shed = self._shed_check(tenant_id, kind="mwem")
+        if shed is not None:
+            return shed
         sess = self.sessions[tenant_id]
         cfg = self._group_cfg(sess.n_records)
         bundle = release_cost(cfg, self.m, self.U, index=self.index)
@@ -284,14 +524,12 @@ class ReleaseService:
                                         reserved=self._reserved(tenant_id))
         ticket = ReleaseTicket(
             ticket_id=self._next_ticket, tenant_id=tenant_id,
-            seed=self._next_seed if seed is None else seed,
+            seed=self._take_seed(seed),
             status="queued" if decision.admitted else "rejected",
             decision=decision, cost_bundle=bundle,
             submit_time=monotonic(),
         )
         self._next_ticket += 1
-        if seed is None:
-            self._next_seed += 1
         if not decision.admitted:
             sess.rejected_count += 1
             self.stats.rejected += 1
@@ -299,6 +537,13 @@ class ReleaseService:
                 self.metrics.counter("admission_rejections_total",
                                      kind="mwem", tenant=tenant_id).inc()
             return ticket
+        ticket.rid = sess.ledger.reserve(*bundle)
+        d = deadline if deadline is not None else self.default_deadline
+        if d is not None:
+            ticket.deadline = ticket.submit_time + d
+        self._journal("reserved", tenant_id=tenant_id, rid=ticket.rid,
+                      ticket_id=ticket.ticket_id, workload="mwem",
+                      seed=ticket.seed, bundle=encode_bundle(bundle))
         self._pending.setdefault(sess.n_records, []).append(ticket)
         if self.auto_flush and len(self._pending[sess.n_records]) >= self.wave_size:
             self._run_wave(sess.n_records)
@@ -343,30 +588,32 @@ class ReleaseService:
                               cost=lp_release_cost(cfg, A, index=index),
                               pending=[])
 
-    def submit_lp(self, tenant_id: str,
-                  seed: Optional[int] = None) -> ReleaseTicket:
+    def submit_lp(self, tenant_id: str, seed: Optional[int] = None,
+                  deadline: Optional[float] = None) -> ReleaseTicket:
         """Request one private LP solve for a tenant.
 
         Admission previews the tenant ledger with the solve's exact cost
         bundle (`lp_release_cost` — the solver's own `lp_em` /
-        `approx_slack` / `index_failure` schedule) plus any still-queued
-        reservations from either workload, exactly like `submit`.
+        `approx_slack` / `index_failure` schedule) plus any still-open
+        reservations from either workload, exactly like `submit`; admitted
+        solves take the same journaled phase-one reservation.
         """
         if self.lp is None:
             raise ValueError("no LP workload attached; call attach_lp first")
+        shed = self._shed_check(tenant_id, kind="lp")
+        if shed is not None:
+            return shed
         sess = self.sessions[tenant_id]
         decision = self.admission.check(sess, self.lp.cost,
                                         reserved=self._reserved(tenant_id))
         ticket = ReleaseTicket(
             ticket_id=self._next_ticket, tenant_id=tenant_id,
-            seed=self._next_seed if seed is None else seed,
+            seed=self._take_seed(seed),
             status="queued" if decision.admitted else "rejected",
             decision=decision, kind="lp", cost_bundle=self.lp.cost,
             submit_time=monotonic(),
         )
         self._next_ticket += 1
-        if seed is None:
-            self._next_seed += 1
         if not decision.admitted:
             sess.rejected_count += 1
             self.stats.rejected += 1
@@ -374,6 +621,13 @@ class ReleaseService:
                 self.metrics.counter("admission_rejections_total",
                                      kind="lp", tenant=tenant_id).inc()
             return ticket
+        ticket.rid = sess.ledger.reserve(*self.lp.cost)
+        d = deadline if deadline is not None else self.default_deadline
+        if d is not None:
+            ticket.deadline = ticket.submit_time + d
+        self._journal("reserved", tenant_id=tenant_id, rid=ticket.rid,
+                      ticket_id=ticket.ticket_id, workload="lp",
+                      seed=ticket.seed, bundle=encode_bundle(self.lp.cost))
         self.lp.pending.append(ticket)
         if self.auto_flush and len(self.lp.pending) >= self.wave_size:
             self._run_lp_wave()
@@ -439,29 +693,52 @@ class ReleaseService:
 
     def _run_lp_wave(self) -> List[ReleaseTicket]:
         """Execute one LP wave: exactly ``wave_size`` seed lanes through one
-        `solve_lp_batch` dispatch — the same pad-by-replication, per-lane
-        ledger charging, and marginal-cost replay as histogram waves."""
+        `solve_lp_batch` dispatch — the same pad-by-replication, retry
+        discipline, two-phase commit, and marginal-cost replay as
+        histogram waves (see `_run_wave`)."""
         lp = self.lp
-        wave = lp.pending[:self.wave_size]
-        del lp.pending[:self.wave_size]
-        n_pad = self.wave_size - len(wave)
+        attempt = 0
+        while True:
+            self._expire_deadlines(lp.pending)
+            if not lp.pending:
+                return []
+            # peek, don't pop: a failed dispatch leaves the tickets at the
+            # queue head for the retry
+            wave = lp.pending[:self.wave_size]
+            n_pad = self.wave_size - len(wave)
+            lanes = wave + [wave[0]] * n_pad
+            keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in lanes])
+            try:
+                self._journal("dispatch-started", workload="lp",
+                              attempt=attempt,
+                              rids=[[t.tenant_id, t.rid] for t in wave])
+                with obs.annotate("serve/wave/lp"):
+                    fault_site("wave.dispatch")
+                    result = solve_lp_batch(lp.A, lp.b, lp.cfg, keys,
+                                            index=lp.index)
+            except Exception as exc:
+                attempt += 1
+                if self._note_dispatch_failure(exc, wave, attempt, "lp"):
+                    continue
+                del lp.pending[:len(wave)]
+                self._fail_wave(wave, exc)
+                if not _retryable(exc):
+                    raise
+                return []
+            self.breaker.record_success()
+            break
+        del lp.pending[:len(wave)]
         self.stats.padded_slots += n_pad
-        lanes = wave + [wave[0]] * n_pad
-        keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in lanes])
-        ledgers: List[Optional[PrivacyLedger]] = [
-            self.sessions[t.tenant_id].ledger for t in wave
-        ] + [None] * n_pad
-        snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
-                 for t in wave}
-        with obs.annotate("serve/wave/lp"):
-            result = solve_lp_batch(lp.A, lp.b, lp.cfg, keys, index=lp.index,
-                                    ledgers=ledgers)
         self.stats.dispatches += 1
         self._record_wave_metrics("lp", len(wave), n_pad)
+        # pre-commit ledger snapshots, for per-ticket marginal costs
+        snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
+                 for t in wave}
         x_bar = np.asarray(result.x_bar)
         lanes_seen: Dict[str, int] = {}
         for i, ticket in enumerate(wave):
             sess = self.sessions[ticket.tenant_id]
+            self._commit_ticket(ticket)
             k = lanes_seen.get(ticket.tenant_id, 0)
             lanes_seen[ticket.tenant_id] = k + 1
             eps_cost, delta_cost = self._lane_cost(
@@ -476,6 +753,12 @@ class ReleaseService:
             )
             self._next_release += 1
             sess.add_lp_release(rel)
+            self._journal("release-delivered", tenant_id=ticket.tenant_id,
+                          ticket_id=ticket.ticket_id, release_kind="lp",
+                          release_id=rel.release_id, seed=ticket.seed,
+                          x_bar=x_bar[i].tolist(),
+                          violated_frac=rel.violated_frac,
+                          eps_cost=eps_cost, delta_cost=delta_cost)
             ticket.release = rel
             ticket.final_error = rel.violated_frac
             ticket.status = "done"
@@ -488,44 +771,76 @@ class ReleaseService:
 
         Short waves are padded by replicating the first slot (same
         histogram/key shapes keep the compiled executable; pad lanes carry
-        no ledger and their outputs are dropped) — the slot-reuse trick the
-        LM engine uses for ragged request batches.
+        no budget reservation and their outputs are dropped) — the
+        slot-reuse trick the LM engine uses for ragged request batches.
+
+        Exception safety (DESIGN.md §10): tickets are *peeked*, not
+        popped. A retryable dispatch failure leaves them at the queue head
+        and re-dispatches after capped exponential backoff; since every
+        lane is keyed by ``PRNGKey(ticket.seed)``, the retry realizes
+        bitwise-identical noise, so it costs zero additional privacy and
+        commits exactly once. Budget commits only after the wave's results
+        land — each lane's phase-one reservation is committed per ticket,
+        then the delivered artifact is journaled.
         """
         queue = self._pending[n_records]
-        wave = queue[:self.wave_size]
-        del queue[:self.wave_size]
+        attempt = 0
+        while True:
+            self._expire_deadlines(queue)
+            if not queue:
+                del self._pending[n_records]
+                return []
+            # peek, don't pop: a failed dispatch leaves the tickets at the
+            # queue head for the retry
+            wave = queue[:self.wave_size]
+            # sharded lanes dispatch sequentially (no vmap), so padding a
+            # short wave would burn a whole extra mesh run per pad slot
+            n_pad = 0 if self.mesh is not None else self.wave_size - len(wave)
+            lanes = wave + [wave[0]] * n_pad
+            cfg = self._group_cfg(n_records)
+            h_stack = jnp.asarray(
+                np.stack([self.sessions[t.tenant_id].h for t in lanes]))
+            keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in lanes])
+            try:
+                self._journal("dispatch-started", workload="mwem",
+                              attempt=attempt,
+                              rids=[[t.tenant_id, t.rid] for t in wave])
+                with obs.annotate("serve/wave/mwem"):
+                    fault_site("wave.dispatch")
+                    if self.mesh is not None:
+                        result = run_mwem_sharded_batch(
+                            self.workload, h_stack, cfg, keys,
+                            mesh=self.mesh, index=self.index)
+                    else:
+                        result = run_mwem_batch(self.workload, h_stack, cfg,
+                                                keys, index=self.index)
+            except Exception as exc:
+                attempt += 1
+                if self._note_dispatch_failure(exc, wave, attempt, "mwem"):
+                    continue
+                del queue[:len(wave)]
+                if not queue:
+                    del self._pending[n_records]
+                self._fail_wave(wave, exc)
+                if not _retryable(exc):
+                    raise
+                return []
+            self.breaker.record_success()
+            break
+        del queue[:len(wave)]
         if not queue:
             del self._pending[n_records]
-        # sharded lanes dispatch sequentially (no vmap), so padding a short
-        # wave would burn a whole extra mesh run per pad slot — skip it
-        n_pad = 0 if self.mesh is not None else self.wave_size - len(wave)
         self.stats.padded_slots += n_pad
-        lanes = wave + [wave[0]] * n_pad
-        cfg = self._group_cfg(n_records)
-        h_stack = jnp.asarray(
-            np.stack([self.sessions[t.tenant_id].h for t in lanes]))
-        keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in lanes])
-        ledgers: List[Optional[PrivacyLedger]] = [
-            self.sessions[t.tenant_id].ledger for t in wave
-        ] + [None] * n_pad
-        # pre-dispatch ledger snapshots, for per-ticket marginal costs
-        snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
-                 for t in wave}
-        with obs.annotate("serve/wave/mwem"):
-            if self.mesh is not None:
-                result = run_mwem_sharded_batch(self.workload, h_stack, cfg,
-                                                keys, mesh=self.mesh,
-                                                index=self.index,
-                                                ledgers=ledgers)
-            else:
-                result = run_mwem_batch(self.workload, h_stack, cfg, keys,
-                                        index=self.index, ledgers=ledgers)
         self.stats.dispatches += 1
         self._record_wave_metrics("mwem", len(wave), n_pad)
+        # pre-commit ledger snapshots, for per-ticket marginal costs
+        snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
+                 for t in wave}
         p_hat = np.asarray(result.p_hat)
         lanes_seen: Dict[str, int] = {}
         for i, ticket in enumerate(wave):
             sess = self.sessions[ticket.tenant_id]
+            self._commit_ticket(ticket)
             k = lanes_seen.get(ticket.tenant_id, 0)
             lanes_seen[ticket.tenant_id] = k + 1
             eps_cost, delta_cost = self._lane_cost(
@@ -540,6 +855,12 @@ class ReleaseService:
             )
             self._next_release += 1
             sess.add_release(rel)
+            self._journal("release-delivered", tenant_id=ticket.tenant_id,
+                          ticket_id=ticket.ticket_id, release_kind="mwem",
+                          release_id=rel.release_id, seed=ticket.seed,
+                          p_hat=p_hat[i].tolist(),
+                          final_error=rel.final_error,
+                          eps_cost=eps_cost, delta_cost=delta_cost)
             ticket.release = rel
             ticket.final_error = rel.final_error
             ticket.status = "done"

@@ -106,3 +106,83 @@ class TestBudgetHelpers:
         led.record(1.0)
         eps_rem, _ = led.remaining(0.5, 1e-3)
         assert eps_rem < 0.0
+
+
+_EVENTS = st.lists(
+    st.tuples(st.floats(1e-4, 0.5), st.floats(0.0, 1e-6),
+              st.sampled_from(["em", "laplace", "lp_em"])),
+    min_size=1, max_size=16)
+
+
+class TestTwoPhaseCommit:
+    """`reserve`/`commit`/`abort` — phase one/two of the serving tier's
+    budget commit (DESIGN.md §10). The contract the chaos suite builds on:
+    reserve→commit must be indistinguishable from a direct `record_events`
+    (ledger dataclass equality ⇒ identical composed (ε, δ) in both modes),
+    and reserve→abort must leave no trace."""
+
+    @pytest.mark.parametrize("tight", [False, True])
+    @given(events=_EVENTS, gamma=st.floats(0.0, 1e-4),
+           slack=st.floats(0.0, 0.01))
+    @settings(max_examples=50, deadline=None)
+    def test_reserve_commit_equals_record_events(self, tight, events,
+                                                 gamma, slack):
+        events = [tuple(e) for e in events]
+        direct = PrivacyLedger(target_delta_prime=1e-9)
+        direct.record(0.05, 0.0, "em")  # shared pre-existing spend
+        staged = PrivacyLedger(target_delta_prime=1e-9)
+        staged.record(0.05, 0.0, "em")
+        direct.record_events(events, gamma=gamma, slack=slack)
+        rid = staged.reserve(events, gamma=gamma, slack=slack)
+        staged.commit(rid)
+        assert staged == direct  # events/γ/slack dataclass equality
+        assert staged.composed(tight=tight) == direct.composed(tight=tight)
+        assert not staged.reservations
+
+    @given(events=_EVENTS, gamma=st.floats(0.0, 1e-4),
+           slack=st.floats(0.0, 0.01))
+    @settings(max_examples=50, deadline=None)
+    def test_reserve_abort_is_noop(self, events, gamma, slack):
+        events = [tuple(e) for e in events]
+        led = PrivacyLedger(target_delta_prime=1e-9)
+        led.record(0.02, 0.0, "em")
+        baseline = PrivacyLedger(target_delta_prime=1e-9)
+        baseline.record(0.02, 0.0, "em")
+        rid = led.reserve(events, gamma=gamma, slack=slack)
+        led.abort(rid)
+        assert led == baseline
+        assert not led.reservations
+
+    def test_hooks_fire_on_commit_not_reserve(self):
+        led = PrivacyLedger()
+        calls = []
+        led.add_hook(lambda lg: calls.append(len(lg.events)))
+        rid = led.reserve([(0.1, 0.0, "em")])
+        assert calls == []  # phase one holds budget without spending it
+        led.commit(rid)
+        assert calls == [1]  # phase two routes through record_events
+        rid2 = led.reserve([(0.1, 0.0, "em")])
+        led.abort(rid2)
+        assert calls == [1]  # refunds are silent too
+
+    def test_reserved_bundle_pools_open_reservations(self):
+        led = PrivacyLedger()
+        led.reserve([(0.1, 0.0, "em")], gamma=1e-6, slack=0.001)
+        r2 = led.reserve([(0.2, 1e-8, "laplace")], gamma=2e-6, slack=0.002)
+        events, gamma, slack = led.reserved_bundle()
+        assert events == [(0.1, 0.0, "em"), (0.2, 1e-8, "laplace")]
+        assert math.isclose(gamma, 3e-6) and math.isclose(slack, 0.003)
+        led.abort(r2)
+        events, gamma, slack = led.reserved_bundle()
+        assert events == [(0.1, 0.0, "em")]
+
+    def test_unknown_or_double_resolution_raises(self):
+        led = PrivacyLedger()
+        rid = led.reserve([(0.1, 0.0, "em")])
+        led.commit(rid)
+        with pytest.raises(KeyError):
+            led.commit(rid)  # double charge is structurally impossible
+        with pytest.raises(KeyError):
+            led.abort(rid)
+        with pytest.raises(KeyError):
+            led.abort(12345)

@@ -1,0 +1,431 @@
+"""Chaos suite for the fault-tolerant serving tier (DESIGN.md §10).
+
+Sweeps fault-site × schedule through the release service and pins the
+invariants the two-phase budget commit promises:
+
+* no budget leak — after a flush, every reservation is resolved (committed
+  or refunded) and the ledger holds exactly the delivered releases' events;
+* no double charge — a retried wave commits exactly once, and its ledger
+  equals a clean (fault-free) run's bitwise;
+* retry determinism — lanes are keyed by ``PRNGKey(ticket.seed)``, so a
+  retried wave's released artifacts equal the clean run's bitwise (mwem
+  and LP);
+* journal replay — `recover()` rebuilds sessions whose ledgers equal the
+  live service's, and resolves in-doubt reservations conservatively.
+
+``CHAOS_SEED`` (CI matrix {0,1,2}) seeds the probabilistic schedules so
+the sweep explores different failure interleavings per lane.
+"""
+
+import os
+from contextlib import nullcontext
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import MWEMConfig
+from repro.core.queries import gaussian_histogram, random_binary_queries
+from repro.faults import (FaultInjected, FaultPlan, Schedule, fail_once,
+                          fault_site, inject)
+from repro.obs.metrics import MetricsRegistry
+from repro.serve import ReleaseService, recover
+from repro.serve.journal import Journal, read_records
+
+U, M, N_RECORDS = 64, 128, 300
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+def make_workload():
+    key = jax.random.PRNGKey(7)
+    kh, kq = jax.random.split(key)
+    h = gaussian_histogram(kh, N_RECORDS, U)
+    Q = random_binary_queries(kq, M, U)
+    return Q, np.asarray(h)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return make_workload()
+
+
+def make_service(Q, **kw):
+    kw.setdefault("wave_size", 2)
+    kw.setdefault("auto_flush", False)
+    kw.setdefault("backoff_base", 1e-4)
+    kw.setdefault("registry", MetricsRegistry())
+    cfg = MWEMConfig(eps=0.5, delta=1e-3, T=6, mode="fast")
+    return ReleaseService(Q, cfg, **kw)
+
+
+def add_tenant(svc, h, name="t0", eps_budget=50.0, delta_budget=0.5):
+    return svc.create_session(name, eps_budget=eps_budget,
+                              delta_budget=delta_budget, h=h,
+                              n_records=N_RECORDS)
+
+
+def assert_no_budget_leak(svc):
+    """Σ committed == Σ delivered lane costs, and nothing is left held:
+    each session's ledger carries exactly the event schedules of its
+    delivered (status == "done") tickets, with zero open reservations."""
+    by_tenant = {}
+    for group in list(svc._pending.values()) + (
+            [svc.lp.pending] if svc.lp is not None else []):
+        for t in group:
+            by_tenant.setdefault(t.tenant_id, []).append(t)
+    for sess in svc.sessions.values():
+        assert not sess.ledger.reservations, (
+            f"leaked reservations: {sess.ledger.reservations}")
+
+
+def delivered_event_count(tickets, tenant_id):
+    return sum(len(t.cost_bundle[0]) for t in tickets
+               if t.tenant_id == tenant_id and t.status == "done")
+
+
+# --------------------------------------------------------------------------
+# harness unit tests
+# --------------------------------------------------------------------------
+class TestHarness:
+    def test_disarmed_is_noop(self):
+        fault_site("wave.dispatch")  # nothing armed: must not raise
+
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultPlan({"no.such.site": fail_once()})
+
+    def test_fail_n_schedule(self):
+        with inject({"ledger.commit": Schedule(fail_n=2)}) as plan:
+            for expected in (True, True, False, False):
+                if expected:
+                    with pytest.raises(FaultInjected) as ei:
+                        fault_site("ledger.commit")
+                    assert ei.value.site == "ledger.commit"
+                else:
+                    fault_site("ledger.commit")
+        assert plan.hits["ledger.commit"] == 4
+        assert plan.failures["ledger.commit"] == 2
+        # the plan is disarmed again outside the block
+        fault_site("ledger.commit")
+
+    def test_fail_rate_deterministic_across_plans(self):
+        def draw(n=64):
+            out = []
+            with inject({"index.probe": Schedule(fail_rate=0.5,
+                                                 seed=CHAOS_SEED)}):
+                for _ in range(n):
+                    try:
+                        fault_site("index.probe")
+                        out.append(False)
+                    except FaultInjected:
+                        out.append(True)
+            return out
+        a, b = draw(), draw()
+        assert a == b          # same seed ⇒ same failure sequence
+        assert any(a) and not all(a)
+
+    def test_sites_draw_independently_from_one_seed(self):
+        sched = Schedule(fail_rate=0.5, seed=CHAOS_SEED)
+        seqs = {}
+        for site in ("wave.dispatch", "index.probe"):
+            with inject({site: sched}):
+                seq = []
+                for _ in range(64):
+                    try:
+                        fault_site(site)
+                        seq.append(False)
+                    except FaultInjected:
+                        seq.append(True)
+                seqs[site] = seq
+        assert seqs["wave.dispatch"] != seqs["index.probe"]
+
+    def test_latency_schedule_sleeps_through_clock(self, monkeypatch):
+        slept = []
+        monkeypatch.setattr("repro.obs.clock.sleep",
+                            lambda s: slept.append(s))
+        with inject({"journal.append": Schedule(latency=0.25)}):
+            fault_site("journal.append")  # latency without failure
+        assert slept == [0.25]
+
+
+# --------------------------------------------------------------------------
+# fault-site × schedule sweep through live waves
+# --------------------------------------------------------------------------
+SWEEP = [
+    ("wave.dispatch", Schedule(fail_n=1)),
+    ("wave.dispatch", Schedule(fail_n=2)),
+    ("wave.dispatch", Schedule(fail_rate=0.5, seed=CHAOS_SEED)),
+    ("wave.dispatch", Schedule(fail_n=1, latency=0.005)),
+    ("ledger.commit", Schedule(fail_n=1)),
+    ("journal.append", Schedule(fail_n=1)),
+    ("kernel.mwem_step", Schedule(fail_n=1)),
+    ("index.probe", Schedule(fail_n=1)),
+]
+
+
+class TestChaosSweep:
+    @pytest.mark.parametrize(
+        "site,sched", SWEEP,
+        ids=[f"{s}-{'fail_n' + str(sc.fail_n) if sc.fail_n else 'rate'}"
+             f"{'-lat' if sc.latency else ''}" for s, sc in SWEEP])
+    def test_invariants_under_fault(self, workload, tmp_path, site, sched):
+        Q, h = workload
+        svc = make_service(Q, journal=Journal(tmp_path / "wal.jsonl"))
+        add_tenant(svc, h)
+        tickets = [svc.submit("t0", seed=100 + i) for i in range(4)]
+        assert all(t.status == "queued" for t in tickets)
+        with inject({site: sched}) as plan:
+            svc.flush()
+        assert plan.hits[site] >= 1, f"site {site} never exercised"
+        assert_no_budget_leak(svc)
+        # every ticket resolved one way or the other — none stranded
+        assert all(t.status in ("done", "failed") for t in tickets)
+        assert all(t.rid is None for t in tickets)
+        sess = svc.session("t0")
+        assert len(sess.ledger.events) == delivered_event_count(
+            tickets, "t0")
+        # journal replay reproduces the live ledger exactly
+        rec = recover(svc.journal.path, registry=svc.metrics)
+        assert rec.sessions["t0"].ledger == sess.ledger
+        if any(t.status == "failed" for t in tickets):
+            assert svc.stats.failed > 0
+        if svc.stats.retries:
+            assert svc.metrics.counter("wave_retries_total",
+                                       kind="mwem").value > 0
+            assert svc.metrics.counter("dispatch_failures_total",
+                                       site=site).value > 0
+
+    @pytest.mark.parametrize("tight", [False, True])
+    def test_retry_wave_bitwise_equals_clean_mwem(self, workload, tight):
+        Q, h = workload
+
+        def run(schedules):
+            svc = make_service(Q, tight_composition=tight)
+            add_tenant(svc, h)
+            for i in range(2):
+                svc.submit("t0", seed=40 + i)
+            with (inject(schedules) if schedules else nullcontext()):
+                done = svc.flush()
+            return svc, done
+
+        svc_clean, done_clean = run(None)
+        svc_retry, done_retry = run({"wave.dispatch": Schedule(fail_n=2)})
+        assert svc_retry.stats.retries == 2
+        assert [t.status for t in done_retry] == ["done", "done"]
+        for a, b in zip(done_clean, done_retry):
+            np.testing.assert_array_equal(a.release.p_hat, b.release.p_hat)
+            assert a.release.eps_cost == b.release.eps_cost
+        # retries are privacy-free: the ledgers are equal, not just close
+        assert (svc_clean.session("t0").ledger
+                == svc_retry.session("t0").ledger)
+        assert (svc_clean.session("t0").ledger.composed(tight=tight)
+                == svc_retry.session("t0").ledger.composed(tight=tight))
+
+    def test_retry_wave_bitwise_equals_clean_lp(self, workload):
+        Q, h = workload
+        A = np.abs(np.asarray(Q[:8]))
+        b = np.full(8, 0.9, np.float32)
+
+        def run(schedules):
+            svc = make_service(Q)
+            svc.attach_lp(A, b)
+            add_tenant(svc, h)
+            for i in range(2):
+                svc.submit_lp("t0", seed=60 + i)
+            with (inject(schedules) if schedules else nullcontext()):
+                done = svc.flush()
+            return svc, done
+
+        svc_clean, done_clean = run(None)
+        svc_retry, done_retry = run({"wave.dispatch": fail_once()})
+        assert svc_retry.stats.retries == 1
+        for a, b_t in zip(done_clean, done_retry):
+            np.testing.assert_array_equal(a.release.x_bar, b_t.release.x_bar)
+        assert (svc_clean.session("t0").ledger
+                == svc_retry.session("t0").ledger)
+
+    def test_exhausted_retries_fail_and_refund(self, workload):
+        Q, h = workload
+        svc = make_service(Q, retry_limit=1)
+        add_tenant(svc, h)
+        tickets = [svc.submit("t0", seed=i) for i in range(2)]
+        with inject({"wave.dispatch": Schedule(fail_n=10)}):
+            done = svc.flush()
+        assert done == []
+        assert all(t.status == "failed" for t in tickets)
+        assert all("FaultInjected" in t.error for t in tickets)
+        sess = svc.session("t0")
+        assert sess.ledger.events == [] and not sess.ledger.reservations
+        assert svc.stats.failed == 2
+        assert svc.metrics.counter("reservations_aborted_total",
+                                   reason="failed").value == 2
+        # the queue group is gone — the next submit starts clean
+        t = svc.submit("t0")
+        assert t.status == "queued"
+        svc.flush()
+        assert t.status == "done"
+
+    def test_non_retryable_error_propagates(self, workload):
+        Q, h = workload
+        svc = make_service(Q)
+        add_tenant(svc, h)
+        ticket = svc.submit("t0")
+
+        def boom(*a, **k):
+            raise ValueError("shape mismatch — a bug, not a fault")
+
+        import repro.serve.release_service as rs_mod
+        orig = rs_mod.run_mwem_batch
+        rs_mod.run_mwem_batch = boom
+        try:
+            with pytest.raises(ValueError, match="a bug"):
+                svc.flush()
+        finally:
+            rs_mod.run_mwem_batch = orig
+        assert ticket.status == "failed"
+        assert svc.stats.retries == 0  # bugs never burn the retry budget
+        assert not svc.session("t0").ledger.reservations
+
+
+# --------------------------------------------------------------------------
+# journal recovery
+# --------------------------------------------------------------------------
+class TestRecovery:
+    @pytest.mark.parametrize("tight", [False, True])
+    def test_replay_equals_live_state(self, workload, tmp_path, tight):
+        Q, h = workload
+        path = tmp_path / "wal.jsonl"
+        svc = make_service(Q, journal=Journal(path),
+                           tight_composition=tight)
+        svc.attach_lp(np.abs(np.asarray(Q[:8])), np.full(8, 0.9, np.float32))
+        add_tenant(svc, h, "alice")
+        add_tenant(svc, h, "bob", eps_budget=20.0)
+        for i in range(3):
+            svc.submit("alice", seed=10 + i)
+        svc.submit("bob", seed=20)
+        svc.submit_lp("alice", seed=30)
+        svc.flush()
+        rec = recover(path, registry=svc.metrics, tight=tight)
+        assert set(rec.sessions) == {"alice", "bob"}
+        for name in ("alice", "bob"):
+            live, back = svc.session(name), rec.sessions[name]
+            assert back.ledger == live.ledger  # bitwise: events/γ/slack
+            assert (back.ledger.composed(tight=tight)
+                    == live.ledger.composed(tight=tight))
+            assert len(back.releases) == len(live.releases)
+            assert len(back.lp_releases) == len(live.lp_releases)
+            for lr, br in zip(live.releases, back.releases):
+                np.testing.assert_array_equal(lr.p_hat, br.p_hat)
+                assert lr.eps_cost == br.eps_cost
+        assert rec.issued_seeds == {10, 11, 12, 20, 30}
+        assert rec.in_doubt == [] and rec.refunded == []
+        # a fresh service adopts the recovered sessions and serves on
+        svc2 = make_service(Q, registry=MetricsRegistry())
+        svc2.adopt(rec)
+        t = svc2.submit("bob")
+        assert t.seed not in rec.issued_seeds
+        svc2.flush()
+        assert t.status == "done"
+
+    def test_in_doubt_resolves_as_committed(self, workload, tmp_path):
+        """The conservative rule: reserved + dispatch started + no
+        resolution ⇒ the noise may have been realized ⇒ charge it."""
+        Q, h = workload
+        path = tmp_path / "wal.jsonl"
+        svc = make_service(Q, journal=Journal(path))
+        add_tenant(svc, h)
+        svc.submit("t0", seed=1)
+        svc.submit("t0", seed=2)
+        bundle = svc.session("t0").ledger.reserved_bundle()
+        # crash simulation: journal a dispatch start, then stop the world
+        svc.journal.append("dispatch-started", kind="mwem", attempt=0,
+                           rids=[["t0", 0]])
+        svc.journal.close()
+        rec = recover(path)
+        # rid 0 dispatched ⇒ committed; rid 1 never dispatched ⇒ refunded
+        assert rec.in_doubt == [("t0", 0)]
+        assert rec.refunded == [("t0", 1)]
+        per_release = len(bundle[0]) // 2
+        assert len(rec.sessions["t0"].ledger.events) == per_release
+
+    def test_torn_tail_record_is_dropped(self, tmp_path):
+        path = tmp_path / "wal.jsonl"
+        with Journal(path) as j:
+            j.append("session-created", tenant_id="t0", h=[1.0],
+                     n_records=1, eps_budget=1.0, delta_budget=1e-3)
+        with open(path, "a", encoding="utf-8") as fh:
+            fh.write('{"seq": 1, "kind": "reserved", "tenant')  # torn
+        recs = read_records(path)
+        assert [r["kind"] for r in recs] == ["session-created"]
+        rec = recover(path)
+        assert set(rec.sessions) == {"t0"}
+
+
+# --------------------------------------------------------------------------
+# deadlines, shedding, breaker
+# --------------------------------------------------------------------------
+class TestDegradation:
+    def test_deadline_expiry_refunds_reservation(self, workload):
+        Q, h = workload
+        svc = make_service(Q)
+        add_tenant(svc, h)
+        expired = svc.submit("t0", seed=1, deadline=0.0)
+        live = svc.submit("t0", seed=2)
+        done = svc.flush()
+        assert expired.status == "expired" and expired.rid is None
+        assert live.status == "done"
+        assert [t.ticket_id for t in done] == [live.ticket_id]
+        assert svc.stats.expired == 1
+        sess = svc.session("t0")
+        assert not sess.ledger.reservations
+        assert len(sess.ledger.events) == len(live.cost_bundle[0])
+
+    def test_load_shedding_rejects_before_reservation(self, workload):
+        Q, h = workload
+        svc = make_service(Q, max_queue_depth=2)
+        add_tenant(svc, h)
+        t1, t2 = svc.submit("t0"), svc.submit("t0")
+        shed = svc.submit("t0")
+        assert (t1.status, t2.status) == ("queued", "queued")
+        assert shed.status == "rejected"
+        assert "load shed" in shed.decision.reason
+        assert shed.rid is None and shed.seed == -1
+        assert len(svc.session("t0").ledger.reservations) == 2
+        assert svc.stats.shed == 1
+        assert svc.metrics.counter("load_shed_total", kind="mwem").value == 1
+        svc.flush()  # the queue drains; new submits are admitted again
+        assert svc.submit("t0").status == "queued"
+
+    def test_breaker_trips_and_degrades_to_ref(self, workload):
+        Q, h = workload
+        svc = make_service(Q, breaker_threshold=2, retry_limit=3)
+        add_tenant(svc, h)
+        ticket = svc.submit("t0", seed=9)
+        assert svc.cfg.use_pallas == "auto" and not svc.degraded
+        with inject({"wave.dispatch": Schedule(fail_n=2)}):
+            svc.flush()
+        # two consecutive failures trip the breaker; the third attempt runs
+        # on the pinned reference route and delivers
+        assert ticket.status == "done"
+        assert svc.degraded and svc.breaker.is_open
+        assert svc.cfg.use_pallas == "never"
+        assert svc.index._use_pallas == "never"
+        assert svc.metrics.gauge("breaker_state", seam="kernel").value == 1.0
+        assert svc.metrics.counter("breaker_trips_total",
+                                   seam="kernel").value == 1
+        # degraded-route failures no longer feed the breaker
+        assert svc.breaker.trips == 1
+
+    def test_degraded_route_is_bitwise_equal(self, workload):
+        """Breaker degradation changes throughput, never answers: a service
+        pinned to the reference route releases the same bytes."""
+        Q, h = workload
+
+        def run(**kw):
+            svc = make_service(Q, **kw)
+            add_tenant(svc, h)
+            svc.submit("t0", seed=5)
+            return svc.flush()[0].release.p_hat
+
+        np.testing.assert_array_equal(run(), run(use_pallas="never"))

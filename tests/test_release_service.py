@@ -496,3 +496,30 @@ class TestSessions:
         add_tenant(svc, h, "t0")
         with pytest.raises(ValueError, match="already exists"):
             add_tenant(svc, h, "t0")
+
+
+class TestSeedIssuance:
+    """Regression for the seed-collision bug: an explicit ``seed=`` did not
+    advance the auto counter, so a later auto-seeded ticket could share a
+    PRNG stream (⇒ identical release, double-charged) with it."""
+
+    def test_auto_seed_skips_explicit_seeds(self, workload):
+        Q, h = workload
+        svc = make_service(Q, auto_flush=False)
+        add_tenant(svc, h, "t0")
+        explicit = svc.submit("t0", seed=1)  # the counter's next-but-one
+        auto = [svc.submit("t0") for _ in range(3)]
+        seeds = [explicit.seed] + [t.seed for t in auto]
+        assert explicit.seed == 1
+        assert len(set(seeds)) == len(seeds), seeds
+
+    def test_seed_uniqueness_across_workloads(self, workload):
+        Q, h = workload
+        svc = make_service(Q, auto_flush=False)
+        svc.attach_lp(np.abs(np.asarray(Q[:8])), np.full(8, 0.9, np.float32))
+        add_tenant(svc, h, "t0")
+        tickets = [svc.submit("t0", seed=2), svc.submit_lp("t0"),
+                   svc.submit("t0"), svc.submit_lp("t0", seed=5),
+                   svc.submit("t0")]
+        seeds = [t.seed for t in tickets]
+        assert len(set(seeds)) == len(seeds), seeds

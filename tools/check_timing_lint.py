@@ -1,16 +1,21 @@
 #!/usr/bin/env python
-"""Lint: all timing in src/ must go through repro.obs.clock.
+"""Lint: all timing in src/, benchmarks/ and examples/ must go through
+repro.obs.clock.
 
 Raw ``time.time()`` stamps break event ordering under wall-clock (NTP)
 skew, and scattered ``perf_counter`` imports make it impossible to fake
 or audit timing from one place. `repro/obs/clock.py` is the single
-sanctioned seam — everything else in src/ must import from it.
+sanctioned seam — everything else must import from it. Benchmarks and
+examples are held to the same rule: the fault-injection harness drives
+latency through `clock.sleep`, so a bench that times through a side
+channel would silently miss injected delays.
 
-Rejected in ``src/**/*.py`` outside ``src/repro/obs/``:
+Rejected in ``{src,benchmarks,examples}/**/*.py`` outside
+``src/repro/obs/``:
 
 * ``import time`` / ``from time import ...``
-* ``time.time(`` / ``time.perf_counter(`` / ``time.monotonic(``
-* bare ``perf_counter()`` not imported from repro.obs.clock
+* ``time.time(`` / ``time.perf_counter(`` / ``time.monotonic(`` /
+  ``time.sleep(`` / ``time.strftime(``
 
 Exit 0 when clean; exit 1 printing ``path:line: offending text``.
 """
@@ -22,8 +27,8 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-SRC = ROOT / "src"
-EXEMPT = SRC / "repro" / "obs"
+SCAN_ROOTS = [ROOT / "src", ROOT / "benchmarks", ROOT / "examples"]
+EXEMPT = ROOT / "src" / "repro" / "obs"
 
 PATTERNS = [
     re.compile(r"^\s*import\s+time\b"),
@@ -31,6 +36,8 @@ PATTERNS = [
     re.compile(r"\btime\.time\("),
     re.compile(r"\btime\.perf_counter\("),
     re.compile(r"\btime\.monotonic\("),
+    re.compile(r"\btime\.sleep\("),
+    re.compile(r"\btime\.strftime\("),
 ]
 
 
@@ -47,14 +54,17 @@ def check(path: Path) -> list[tuple[int, str]]:
 
 def main() -> int:
     bad = 0
-    for path in sorted(SRC.rglob("*.py")):
-        if EXEMPT in path.parents:
+    for root in SCAN_ROOTS:
+        if not root.is_dir():
             continue
-        for lineno, text in check(path):
-            print(f"{path.relative_to(ROOT)}:{lineno}: {text}")
-            bad += 1
+        for path in sorted(root.rglob("*.py")):
+            if EXEMPT in path.parents:
+                continue
+            for lineno, text in check(path):
+                print(f"{path.relative_to(ROOT)}:{lineno}: {text}")
+                bad += 1
     if bad:
-        print(f"timing lint: {bad} raw `time` use(s) in src/ — "
+        print(f"timing lint: {bad} raw `time` use(s) — "
               "route them through repro.obs.clock", file=sys.stderr)
         return 1
     print("timing lint: clean")
