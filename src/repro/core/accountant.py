@@ -84,6 +84,22 @@ class PrivacyLedger:
             fn(self)
 
     # ------------------------------------------------- two-phase commit
+    @property
+    def next_rid(self) -> int:
+        """The id the next `reserve` will hand out. Journal recovery needs
+        it: rids key WAL records, so a recovered ledger must never re-issue
+        an id the pre-crash process already journaled."""
+        return self._next_rid
+
+    def advance_rid(self, next_rid: int) -> None:
+        """Fast-forward the reservation-id counter to at least ``next_rid``
+        (never backward). Called by `journal.recover`/`ReleaseService.adopt`
+        so post-recovery reservations cannot collide with a pre-crash rid
+        still referenced by the WAL — a reused rid would let a later
+        ``committed``/``aborted`` record resolve the *wrong* reservation on
+        the next replay."""
+        self._next_rid = max(self._next_rid, int(next_rid))
+
     def reserve(self, events, gamma: float = 0.0, slack: float = 0.0) -> int:
         """Phase one: hold a cost bundle against this ledger.
 

@@ -16,6 +16,14 @@ Record kinds, in the order one release produces them:
 * ``aborted``           — the rid was refunded (expired / failed / shed)
 * ``release-delivered`` — the released artifact (p_hat or x_bar) landed
 
+plus two snapshot kinds written only by `ReleaseService.adopt` so the
+post-adoption WAL is self-contained (a second recovery — from a fresh
+journal file, or from the same file the adopter keeps appending to —
+reconstructs the adopted state without re-reading the pre-crash records):
+
+* ``ledger-snapshot``   — one tenant's full committed bundle + next rid
+* ``service-snapshot``  — issued seeds and the ticket/release counters
+
 In-doubt resolution (the crash-recovery rule the chaos suite pins): a
 reservation with a ``dispatch-started`` record but no ``committed`` /
 ``aborted`` resolution is replayed as **committed** — the dispatch may
@@ -116,6 +124,10 @@ class RecoveredState:
     in_doubt: List[tuple] = field(default_factory=list)   # (tenant_id, rid)
     refunded: List[tuple] = field(default_factory=list)   # never dispatched
     issued_seeds: set = field(default_factory=set)
+    # per-tenant: one past the highest rid the journal ever mentioned —
+    # recovered ledgers are fast-forwarded to it, and `adopt` re-applies
+    # it, so a post-recovery reserve can never reuse a journaled rid
+    next_rids: Dict[str, int] = field(default_factory=dict)
     next_release_id: int = 0
     next_ticket_id: int = 0
     seconds: float = 0.0
@@ -136,9 +148,16 @@ def recover(path, registry: Optional[MetricsRegistry] = None,
     # (tenant_id, rid) -> (bundle, dispatched?)
     pending: Dict[tuple, list] = {}
 
+    def saw_rid(tenant_id: str, next_rid: int) -> None:
+        state.next_rids[tenant_id] = max(
+            state.next_rids.get(tenant_id, 0), int(next_rid))
+
     for rec in read_records(path):
         kind = rec["kind"]
         if kind == "session-created":
+            # a repeated session-created (an adoption snapshot appended to
+            # the same WAL) supersedes the earlier replay: the snapshot
+            # records that follow carry the full post-recovery state
             sess = TenantSession(
                 tenant_id=rec["tenant_id"],
                 h=np.asarray(rec["h"], np.float32),
@@ -151,6 +170,7 @@ def recover(path, registry: Optional[MetricsRegistry] = None,
             key = (rec["tenant_id"], rec["rid"])
             pending[key] = [decode_bundle(rec["bundle"]), False]
             state.issued_seeds.add(int(rec["seed"]))
+            saw_rid(rec["tenant_id"], rec["rid"] + 1)
             state.next_ticket_id = max(state.next_ticket_id,
                                        rec["ticket_id"] + 1)
         elif kind == "dispatch-started":
@@ -168,6 +188,18 @@ def recover(path, registry: Optional[MetricsRegistry] = None,
                     *entry[0])
         elif kind == "aborted":
             pending.pop((rec["tenant_id"], rec["rid"]), None)
+        elif kind == "ledger-snapshot":
+            # adoption snapshot: the tenant's full committed bundle in one
+            # record (the session-created just before it reset the ledger)
+            state.sessions[rec["tenant_id"]].ledger.record_events(
+                *decode_bundle(rec["bundle"]))
+            saw_rid(rec["tenant_id"], rec.get("next_rid", 0))
+        elif kind == "service-snapshot":
+            state.issued_seeds |= {int(s) for s in rec["issued_seeds"]}
+            state.next_ticket_id = max(state.next_ticket_id,
+                                       int(rec["next_ticket_id"]))
+            state.next_release_id = max(state.next_release_id,
+                                        int(rec["next_release_id"]))
         elif kind == "release-delivered":
             sess = state.sessions[rec["tenant_id"]]
             if rec["release_kind"] == "mwem":
@@ -200,6 +232,12 @@ def recover(path, registry: Optional[MetricsRegistry] = None,
             state.in_doubt.append((tenant_id, rid))
         else:
             state.refunded.append((tenant_id, rid))
+
+    # recovered ledgers must never re-issue a rid the WAL already holds —
+    # an in-doubt reservation's record would then resolve the wrong one
+    # on the next replay
+    for tenant_id, sess in state.sessions.items():
+        sess.ledger.advance_rid(state.next_rids.get(tenant_id, 0))
 
     state.seconds = perf_counter() - t0
     if obs.enabled():

@@ -289,8 +289,21 @@ class ReleaseService:
     def adopt(self, recovered: RecoveredState) -> None:
         """Install sessions rebuilt by `journal.recover` into this (fresh)
         service — ledgers arrive already charged per the journal's
-        committed/in-doubt records, and seed/id counters fast-forward so
-        new tickets can never collide with pre-crash ones."""
+        committed/in-doubt records, and every counter a pre-crash record
+        could collide with fast-forwards: seeds, ticket/release ids, and
+        each ledger's *reservation* ids (a reused rid would let the next
+        replay resolve a pre-crash in-doubt record against a post-adopt
+        reservation, silently under-counting spent ε).
+
+        If this service journals, the adopted state is re-journaled as a
+        snapshot (session-created / ledger-snapshot / release-delivered
+        per tenant, aborted markers for the crash's resolved rids, one
+        service-snapshot) so the post-adopt WAL is self-contained: a
+        second recovery — from a fresh journal file, or from the same
+        file this service keeps appending to — reconstructs the adopted
+        state exactly, with the old in-doubt charges carried by the
+        ledger snapshot rather than re-resolved (no double charge, no
+        loss)."""
         for tenant_id, sess in recovered.sessions.items():
             if tenant_id in self.sessions:
                 raise ValueError(
@@ -298,10 +311,53 @@ class ReleaseService:
                     "fresh service")
             self.sessions[tenant_id] = sess
             self._register_ledger_gauges(sess)
+            sess.ledger.advance_rid(recovered.next_rids.get(tenant_id, 0))
         self._issued_seeds |= set(recovered.issued_seeds)
         self._next_release = max(self._next_release,
                                  recovered.next_release_id)
         self._next_ticket = max(self._next_ticket, recovered.next_ticket_id)
+        self._journal_adoption_snapshot(recovered)
+
+    def _journal_adoption_snapshot(self, recovered: RecoveredState) -> None:
+        """Re-journal adopted state (see `adopt`). Record order matters
+        for same-WAL appends: each tenant's ``session-created`` resets the
+        replayed session before ``ledger-snapshot``/``release-delivered``
+        rebuild it, and the ``aborted`` markers resolve the pre-crash
+        reservations the old records leave pending (their in-doubt charge
+        already lives inside the ledger snapshot)."""
+        if self.journal is None:
+            return
+        for tenant_id, sess in recovered.sessions.items():
+            self._journal("session-created", tenant_id=tenant_id,
+                          h=sess.h.tolist(), n_records=sess.n_records,
+                          eps_budget=sess.eps_budget,
+                          delta_budget=sess.delta_budget)
+            self._journal("ledger-snapshot", tenant_id=tenant_id,
+                          bundle=encode_bundle(sess.ledger.bundle()),
+                          next_rid=sess.ledger.next_rid)
+            for rel in sess.releases:
+                self._journal("release-delivered", tenant_id=tenant_id,
+                              release_kind="mwem",
+                              release_id=rel.release_id, seed=rel.seed,
+                              p_hat=np.asarray(rel.p_hat).tolist(),
+                              final_error=rel.final_error,
+                              eps_cost=rel.eps_cost,
+                              delta_cost=rel.delta_cost)
+            for rel in sess.lp_releases:
+                self._journal("release-delivered", tenant_id=tenant_id,
+                              release_kind="lp",
+                              release_id=rel.release_id, seed=rel.seed,
+                              x_bar=np.asarray(rel.x_bar).tolist(),
+                              violated_frac=rel.violated_frac,
+                              eps_cost=rel.eps_cost,
+                              delta_cost=rel.delta_cost)
+        for tenant_id, rid in recovered.in_doubt + recovered.refunded:
+            self._journal("aborted", tenant_id=tenant_id, rid=rid,
+                          reason="adoption-snapshot")
+        self._journal("service-snapshot",
+                      issued_seeds=sorted(self._issued_seeds),
+                      next_ticket_id=self._next_ticket,
+                      next_release_id=self._next_release)
 
     def _register_ledger_gauges(self, sess: TenantSession) -> None:
         """Hang the obs gauges off the tenant's ledger: after every
@@ -431,8 +487,9 @@ class ReleaseService:
             self.metrics.counter("dispatch_failures_total", site=site).inc()
         # failures only count toward the breaker while the Pallas route is
         # still live — once degraded to the reference path, further faults
-        # are not the kernels' doing
-        if self.cfg.use_pallas != "never":
+        # are not the kernels' doing; neither are WAL write failures, which
+        # pinning to the reference route could never fix
+        if self.cfg.use_pallas != "never" and site != "journal.append":
             self.breaker.record_failure()
         retry = _retryable(exc) and attempt <= self.retry_limit
         for t in wave:
@@ -455,6 +512,35 @@ class ReleaseService:
             self._abort_ticket(t, reason="failed", status="failed")
             t.error = repr(exc)
         self.stats.failed += len(wave)
+
+    def _resolve_stranded(self, tickets: List[ReleaseTicket],
+                          exc: BaseException) -> None:
+        """Resolve tickets a phase-two failure would otherwise strand.
+
+        The delivery loop runs after the wave was popped from the queue,
+        so a ticket it leaves unresolved would hold its reservation open
+        forever — a live budget leak. Open reservations are refunded
+        (their outputs are dropped undelivered, so nothing escaped),
+        best-effort: when the journal is itself the failure, the WAL
+        ``aborted`` record may not land, and recovery's in-doubt rule then
+        re-charges the rid — a conservative overcharge, never a leak. A
+        ticket whose ledger commit landed but whose ``committed`` record
+        didn't (rid already cleared) stays charged, matching the same
+        rule."""
+        for t in tickets:
+            if t.status == "done":
+                continue
+            try:
+                if t.rid is not None:
+                    self._abort_ticket(t, reason="commit-failed",
+                                       status="failed")
+                else:
+                    t.status = "failed"
+            except Exception:
+                t.rid = None
+                t.status = "failed"
+            t.error = repr(exc)
+            self.stats.failed += 1
 
     def _degrade_to_ref(self) -> None:
         """Breaker trip: pin the service to the XLA reference route. The
@@ -541,9 +627,18 @@ class ReleaseService:
         d = deadline if deadline is not None else self.default_deadline
         if d is not None:
             ticket.deadline = ticket.submit_time + d
-        self._journal("reserved", tenant_id=tenant_id, rid=ticket.rid,
-                      ticket_id=ticket.ticket_id, workload="mwem",
-                      seed=ticket.seed, bundle=encode_bundle(bundle))
+        try:
+            self._journal("reserved", tenant_id=tenant_id, rid=ticket.rid,
+                          ticket_id=ticket.ticket_id, workload="mwem",
+                          seed=ticket.seed, bundle=encode_bundle(bundle))
+        except Exception:
+            # an unjournaled reservation must not outlive the failed
+            # submit — the ticket never queues, so nothing would ever
+            # commit or abort it: refund so the raise is budget-neutral
+            sess.ledger.abort(ticket.rid)
+            ticket.rid = None
+            ticket.status = "failed"
+            raise
         self._pending.setdefault(sess.n_records, []).append(ticket)
         if self.auto_flush and len(self._pending[sess.n_records]) >= self.wave_size:
             self._run_wave(sess.n_records)
@@ -625,9 +720,17 @@ class ReleaseService:
         d = deadline if deadline is not None else self.default_deadline
         if d is not None:
             ticket.deadline = ticket.submit_time + d
-        self._journal("reserved", tenant_id=tenant_id, rid=ticket.rid,
-                      ticket_id=ticket.ticket_id, workload="lp",
-                      seed=ticket.seed, bundle=encode_bundle(self.lp.cost))
+        try:
+            self._journal("reserved", tenant_id=tenant_id, rid=ticket.rid,
+                          ticket_id=ticket.ticket_id, workload="lp",
+                          seed=ticket.seed,
+                          bundle=encode_bundle(self.lp.cost))
+        except Exception:
+            # see submit(): a failed submit must be budget-neutral
+            sess.ledger.abort(ticket.rid)
+            ticket.rid = None
+            ticket.status = "failed"
+            raise
         self.lp.pending.append(ticket)
         if self.auto_flush and len(self.lp.pending) >= self.wave_size:
             self._run_lp_wave()
@@ -708,10 +811,15 @@ class ReleaseService:
             n_pad = self.wave_size - len(wave)
             lanes = wave + [wave[0]] * n_pad
             keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in lanes])
+            # outside the breaker-attributed try: a WAL failure is not the
+            # kernels' doing — it rides _journal's own retry policy, and a
+            # persistent one propagates with the queue and reservations
+            # intact (tickets were only peeked) instead of tripping the
+            # breaker into a permanent degrade
+            self._journal("dispatch-started", workload="lp",
+                          attempt=attempt,
+                          rids=[[t.tenant_id, t.rid] for t in wave])
             try:
-                self._journal("dispatch-started", workload="lp",
-                              attempt=attempt,
-                              rids=[[t.tenant_id, t.rid] for t in wave])
                 with obs.annotate("serve/wave/lp"):
                     fault_site("wave.dispatch")
                     result = solve_lp_batch(lp.A, lp.b, lp.cfg, keys,
@@ -737,33 +845,48 @@ class ReleaseService:
         x_bar = np.asarray(result.x_bar)
         lanes_seen: Dict[str, int] = {}
         for i, ticket in enumerate(wave):
-            sess = self.sessions[ticket.tenant_id]
-            self._commit_ticket(ticket)
-            k = lanes_seen.get(ticket.tenant_id, 0)
-            lanes_seen[ticket.tenant_id] = k + 1
-            eps_cost, delta_cost = self._lane_cost(
-                sess, snaps[ticket.tenant_id], result.ledger, k)
-            rel = ReleasedLP(
-                release_id=self._next_release,
-                x_bar=x_bar[i],
-                violated_frac=float(result.violated_fracs[i]),
-                eps_cost=eps_cost,
-                delta_cost=delta_cost,
-                seed=ticket.seed,
-            )
-            self._next_release += 1
-            sess.add_lp_release(rel)
-            self._journal("release-delivered", tenant_id=ticket.tenant_id,
-                          ticket_id=ticket.ticket_id, release_kind="lp",
-                          release_id=rel.release_id, seed=ticket.seed,
-                          x_bar=x_bar[i].tolist(),
-                          violated_frac=rel.violated_frac,
-                          eps_cost=eps_cost, delta_cost=delta_cost)
-            ticket.release = rel
-            ticket.final_error = rel.violated_frac
-            ticket.status = "done"
-            self.stats.lp_released += 1
-            self._record_ticket_latency(ticket)
+            # phase two per ticket, exception-safe: a commit/journal
+            # failure fails *this* ticket (refunding its still-open
+            # reservation) and moves on; a programming error fails the
+            # rest of the wave too, then propagates — either way no
+            # popped ticket is left stranded with a reservation held
+            try:
+                sess = self.sessions[ticket.tenant_id]
+                self._commit_ticket(ticket)
+                k = lanes_seen.get(ticket.tenant_id, 0)
+                lanes_seen[ticket.tenant_id] = k + 1
+                eps_cost, delta_cost = self._lane_cost(
+                    sess, snaps[ticket.tenant_id], result.ledger, k)
+                rel = ReleasedLP(
+                    release_id=self._next_release,
+                    x_bar=x_bar[i],
+                    violated_frac=float(result.violated_fracs[i]),
+                    eps_cost=eps_cost,
+                    delta_cost=delta_cost,
+                    seed=ticket.seed,
+                )
+                self._next_release += 1
+                # WAL before state: if the delivery record can't land,
+                # the session must not keep an artifact recovery would
+                # lose (the charge stands either way — in-doubt rule)
+                self._journal("release-delivered",
+                              tenant_id=ticket.tenant_id,
+                              ticket_id=ticket.ticket_id, release_kind="lp",
+                              release_id=rel.release_id, seed=ticket.seed,
+                              x_bar=x_bar[i].tolist(),
+                              violated_frac=rel.violated_frac,
+                              eps_cost=eps_cost, delta_cost=delta_cost)
+                sess.add_lp_release(rel)
+                ticket.release = rel
+                ticket.final_error = rel.violated_frac
+                ticket.status = "done"
+                self.stats.lp_released += 1
+                self._record_ticket_latency(ticket)
+            except Exception as exc:
+                if not _retryable(exc):
+                    self._resolve_stranded(wave[i:], exc)
+                    raise
+                self._resolve_stranded([ticket], exc)
         return wave
 
     def _run_wave(self, n_records: int) -> List[ReleaseTicket]:
@@ -801,10 +924,11 @@ class ReleaseService:
             h_stack = jnp.asarray(
                 np.stack([self.sessions[t.tenant_id].h for t in lanes]))
             keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in lanes])
+            # outside the breaker-attributed try — see _run_lp_wave
+            self._journal("dispatch-started", workload="mwem",
+                          attempt=attempt,
+                          rids=[[t.tenant_id, t.rid] for t in wave])
             try:
-                self._journal("dispatch-started", workload="mwem",
-                              attempt=attempt,
-                              rids=[[t.tenant_id, t.rid] for t in wave])
                 with obs.annotate("serve/wave/mwem"):
                     fault_site("wave.dispatch")
                     if self.mesh is not None:
@@ -839,33 +963,43 @@ class ReleaseService:
         p_hat = np.asarray(result.p_hat)
         lanes_seen: Dict[str, int] = {}
         for i, ticket in enumerate(wave):
-            sess = self.sessions[ticket.tenant_id]
-            self._commit_ticket(ticket)
-            k = lanes_seen.get(ticket.tenant_id, 0)
-            lanes_seen[ticket.tenant_id] = k + 1
-            eps_cost, delta_cost = self._lane_cost(
-                sess, snaps[ticket.tenant_id], result.ledger, k)
-            rel = ReleasedHistogram(
-                release_id=self._next_release,
-                p_hat=p_hat[i],
-                final_error=float(result.final_errors[i]),
-                eps_cost=eps_cost,
-                delta_cost=delta_cost,
-                seed=ticket.seed,
-            )
-            self._next_release += 1
-            sess.add_release(rel)
-            self._journal("release-delivered", tenant_id=ticket.tenant_id,
-                          ticket_id=ticket.ticket_id, release_kind="mwem",
-                          release_id=rel.release_id, seed=ticket.seed,
-                          p_hat=p_hat[i].tolist(),
-                          final_error=rel.final_error,
-                          eps_cost=eps_cost, delta_cost=delta_cost)
-            ticket.release = rel
-            ticket.final_error = rel.final_error
-            ticket.status = "done"
-            self.stats.released += 1
-            self._record_ticket_latency(ticket)
+            # exception-safe phase two — see _run_lp_wave
+            try:
+                sess = self.sessions[ticket.tenant_id]
+                self._commit_ticket(ticket)
+                k = lanes_seen.get(ticket.tenant_id, 0)
+                lanes_seen[ticket.tenant_id] = k + 1
+                eps_cost, delta_cost = self._lane_cost(
+                    sess, snaps[ticket.tenant_id], result.ledger, k)
+                rel = ReleasedHistogram(
+                    release_id=self._next_release,
+                    p_hat=p_hat[i],
+                    final_error=float(result.final_errors[i]),
+                    eps_cost=eps_cost,
+                    delta_cost=delta_cost,
+                    seed=ticket.seed,
+                )
+                self._next_release += 1
+                # WAL before state — see _run_lp_wave
+                self._journal("release-delivered",
+                              tenant_id=ticket.tenant_id,
+                              ticket_id=ticket.ticket_id,
+                              release_kind="mwem",
+                              release_id=rel.release_id, seed=ticket.seed,
+                              p_hat=p_hat[i].tolist(),
+                              final_error=rel.final_error,
+                              eps_cost=eps_cost, delta_cost=delta_cost)
+                sess.add_release(rel)
+                ticket.release = rel
+                ticket.final_error = rel.final_error
+                ticket.status = "done"
+                self.stats.released += 1
+                self._record_ticket_latency(ticket)
+            except Exception as exc:
+                if not _retryable(exc):
+                    self._resolve_stranded(wave[i:], exc)
+                    raise
+                self._resolve_stranded([ticket], exc)
         return wave
 
     # ------------------------------------------------------------- answers

@@ -289,6 +289,147 @@ class TestChaosSweep:
 
 
 # --------------------------------------------------------------------------
+# phase-two (commit/journal) failures must never strand popped tickets
+# --------------------------------------------------------------------------
+class TestPhaseTwoFailures:
+    def test_commit_failure_resolves_rest_of_wave(self, workload):
+        """A ledger-commit failure that exhausts its retries fails that
+        ticket alone (reservation refunded) — the rest of the wave still
+        delivers, and nothing is left holding a reservation."""
+        Q, h = workload
+        svc = make_service(Q, retry_limit=0)
+        add_tenant(svc, h)
+        t0 = svc.submit("t0", seed=1)
+        t1 = svc.submit("t0", seed=2)
+        with inject({"ledger.commit": Schedule(fail_n=1)}):
+            svc.flush()
+        assert t0.status == "failed" and t0.rid is None
+        assert t0.release is None and "FaultInjected" in t0.error
+        assert t1.status == "done" and t1.rid is None
+        sess = svc.session("t0")
+        assert not sess.ledger.reservations
+        assert len(sess.ledger.events) == len(t1.cost_bundle[0])
+        assert svc.stats.failed == 1 and svc.stats.released == 1
+        assert svc.metrics.counter("reservations_aborted_total",
+                                   reason="commit-failed").value == 1
+
+    def test_phase_two_bug_fails_remaining_wave(self, workload):
+        """A programming error in phase two resolves every remaining
+        ticket (refunded) before propagating — no stranded reservations."""
+        Q, h = workload
+        svc = make_service(Q)
+        add_tenant(svc, h)
+        t0 = svc.submit("t0", seed=1)
+        t1 = svc.submit("t0", seed=2)
+
+        def boom(ticket):
+            raise ValueError("phase-two bug")
+
+        svc._commit_ticket = boom
+        with pytest.raises(ValueError, match="phase-two bug"):
+            svc.flush()
+        assert t0.status == "failed" and t1.status == "failed"
+        assert t0.rid is None and t1.rid is None
+        sess = svc.session("t0")
+        assert sess.ledger.events == [] and not sess.ledger.reservations
+        assert svc.pending_count() == 0
+
+    def test_journal_failure_in_phase_two_does_not_strand(
+            self, workload, tmp_path):
+        """The WAL dies on one ticket's ``committed`` append, after the
+        ledger already moved: the charge stands (recovery's in-doubt rule
+        agrees — replay equals live), the ticket fails without a release,
+        and the rest of the wave still delivers."""
+        Q, h = workload
+        path = tmp_path / "wal.jsonl"
+        svc = make_service(Q, retry_limit=0, journal=Journal(path))
+        add_tenant(svc, h)
+        t0 = svc.submit("t0", seed=1)
+        t1 = svc.submit("t0", seed=2)
+        rid0 = t0.rid
+        orig_append = svc.journal.append
+
+        def flaky(rec_kind, **payload):
+            if rec_kind == "committed" and payload["rid"] == rid0:
+                raise OSError("disk full")
+            return orig_append(rec_kind, **payload)
+
+        svc.journal.append = flaky
+        svc.flush()
+        assert t0.status == "failed" and t0.rid is None
+        assert t0.release is None
+        assert t1.status == "done"
+        sess = svc.session("t0")
+        assert not sess.ledger.reservations
+        # t0's charge stands even though its ticket failed (in-doubt rule)
+        assert len(sess.ledger.events) == (len(t0.cost_bundle[0])
+                                           + len(t1.cost_bundle[0]))
+        svc.journal.close()
+        rec = recover(path)
+        assert rec.in_doubt == [("t0", rid0)]
+        assert rec.sessions["t0"].ledger == sess.ledger
+        assert len(rec.sessions["t0"].releases) == 1
+
+    def test_submit_journal_failure_is_budget_neutral(
+            self, workload, tmp_path):
+        """A ``reserved`` append that exhausts its retries refunds the
+        just-taken reservation before re-raising: the failed submit holds
+        no budget and queues nothing."""
+        Q, h = workload
+        svc = make_service(Q, retry_limit=0,
+                           journal=Journal(tmp_path / "wal.jsonl"))
+        add_tenant(svc, h)
+        with inject({"journal.append": Schedule(fail_n=10)}):
+            with pytest.raises(FaultInjected):
+                svc.submit("t0", seed=1)
+        sess = svc.session("t0")
+        assert not sess.ledger.reservations
+        assert svc.pending_count() == 0
+        # the WAL recovered: the tenant resubmits at full budget
+        t = svc.submit("t0", seed=2)
+        assert t.status == "queued"
+        svc.flush()
+        assert t.status == "done"
+        rec = recover(svc.journal.path)
+        assert rec.sessions["t0"].ledger == sess.ledger
+
+    def test_submit_lp_journal_failure_is_budget_neutral(
+            self, workload, tmp_path):
+        Q, h = workload
+        svc = make_service(Q, retry_limit=0,
+                           journal=Journal(tmp_path / "wal.jsonl"))
+        svc.attach_lp(np.abs(np.asarray(Q[:8])), np.full(8, 0.9, np.float32))
+        add_tenant(svc, h)
+        with inject({"journal.append": Schedule(fail_n=10)}):
+            with pytest.raises(FaultInjected):
+                svc.submit_lp("t0", seed=1)
+        assert not svc.session("t0").ledger.reservations
+        assert svc.pending_count() == 0
+        t = svc.submit_lp("t0", seed=2)
+        svc.flush()
+        assert t.status == "done"
+
+    def test_journal_failure_does_not_feed_breaker(self, workload, tmp_path):
+        """A persistent WAL failure at dispatch propagates with the queue
+        and reservations intact — it is not a kernel fault, so it must
+        not trip the breaker into a permanent reference-path degrade."""
+        Q, h = workload
+        svc = make_service(Q, retry_limit=0, breaker_threshold=1,
+                           journal=Journal(tmp_path / "wal.jsonl"))
+        add_tenant(svc, h)
+        t = svc.submit("t0", seed=9)
+        with inject({"journal.append": Schedule(fail_n=10)}):
+            with pytest.raises(FaultInjected):
+                svc.flush()
+        assert t.status == "queued" and t.rid is not None
+        assert not svc.breaker.is_open and not svc.degraded
+        assert svc.breaker.consecutive_failures == 0
+        assert svc.pending_count() == 1
+        svc.flush()                # the WAL recovered: same ticket delivers
+        assert t.status == "done"
+
+
+# --------------------------------------------------------------------------
 # journal recovery
 # --------------------------------------------------------------------------
 class TestRecovery:
@@ -348,6 +489,85 @@ class TestRecovery:
         assert rec.refunded == [("t0", 1)]
         per_release = len(bundle[0]) // 2
         assert len(rec.sessions["t0"].ledger.events) == per_release
+
+    def _crash_with_in_doubt(self, Q, h, path):
+        """One committed+delivered release (rid 0), then a crash with
+        rid 1 reserved and dispatched but unresolved (in doubt)."""
+        svc = make_service(Q, journal=Journal(path))
+        add_tenant(svc, h)
+        svc.submit("t0", seed=1)
+        svc.flush()
+        svc.submit("t0", seed=2)
+        svc.journal.append("dispatch-started", workload="mwem", attempt=0,
+                           rids=[["t0", 1]])
+        svc.journal.close()
+        return svc
+
+    def test_adopt_fast_forwards_reservation_ids(self, workload, tmp_path):
+        """A post-adopt reserve must never reuse a journaled rid: the WAL
+        still holds rid 0/1 records, and a collision would let the next
+        replay resolve a pre-crash in-doubt record against the new
+        reservation, silently under-counting spent ε."""
+        Q, h = workload
+        path = tmp_path / "wal.jsonl"
+        self._crash_with_in_doubt(Q, h, path)
+        rec = recover(path)
+        assert rec.in_doubt == [("t0", 1)]
+        assert rec.next_rids == {"t0": 2}
+        assert rec.sessions["t0"].ledger.next_rid == 2
+        svc2 = make_service(Q)
+        svc2.adopt(rec)
+        t = svc2.submit("t0")
+        assert t.rid == 2
+
+    def test_adopt_rejournals_into_fresh_wal(self, workload, tmp_path):
+        """adopt() snapshots the recovered state into the new service's
+        journal, so recovering the post-adopt WAL *alone* reconstructs
+        everything: sessions, charges (including the crash's in-doubt
+        one), releases, seeds, and the rid counter."""
+        Q, h = workload
+        path = tmp_path / "wal.jsonl"
+        self._crash_with_in_doubt(Q, h, path)
+        rec = recover(path)
+        path2 = tmp_path / "wal2.jsonl"
+        svc2 = make_service(Q, journal=Journal(path2))
+        svc2.adopt(rec)
+        t = svc2.submit("t0", seed=3)
+        svc2.flush()
+        assert t.status == "done"
+        live = svc2.session("t0")
+        rec2 = recover(path2)
+        back = rec2.sessions["t0"]
+        assert back.ledger == live.ledger
+        assert back.ledger.next_rid == live.ledger.next_rid
+        assert rec2.in_doubt == []   # adoption markers resolved the crash
+        assert len(back.releases) == len(live.releases) == 2
+        for lr, br in zip(live.releases, back.releases):
+            np.testing.assert_array_equal(lr.p_hat, br.p_hat)
+            assert lr.eps_cost == br.eps_cost
+        assert {1, 2, 3} <= rec2.issued_seeds
+
+    def test_adopt_same_wal_second_recovery_is_consistent(
+            self, workload, tmp_path):
+        """Adopting while appending to the *same* WAL: the snapshot
+        supersedes the pre-crash records, so a second recovery equals the
+        live service — no double charge from re-resolving the old
+        in-doubt reservation, no silent under-count from a reused rid."""
+        Q, h = workload
+        path = tmp_path / "wal.jsonl"
+        self._crash_with_in_doubt(Q, h, path)
+        rec = recover(path)
+        svc2 = make_service(Q, journal=Journal(path))  # append to same WAL
+        svc2.adopt(rec)
+        t = svc2.submit("t0", seed=3)
+        assert t.rid == 2            # rid 1 is the in-doubt one — no reuse
+        svc2.flush()
+        live = svc2.session("t0")
+        rec2 = recover(path)
+        assert rec2.sessions["t0"].ledger == live.ledger
+        assert rec2.in_doubt == []
+        assert len(rec2.sessions["t0"].releases) == len(live.releases)
+        assert rec2.sessions["t0"].ledger.next_rid == live.ledger.next_rid
 
     def test_torn_tail_record_is_dropped(self, tmp_path):
         path = tmp_path / "wal.jsonl"
