@@ -32,7 +32,7 @@ def main() -> None:
                             bench_ivf_probe, bench_linear_queries, bench_lp,
                             bench_margin, bench_marginals, bench_mwem_step,
                             bench_n_ablation, bench_release_service,
-                            roofline_report)
+                            bench_streaming, roofline_report)
     from benchmarks.common import print_rows
 
     benches = {
@@ -42,6 +42,7 @@ def main() -> None:
         "margin": bench_margin,
         "n_ablation": bench_n_ablation,
         "release_service": bench_release_service,
+        "streaming": bench_streaming,
         "distributed": bench_distributed,
         "ivf_probe": bench_ivf_probe,
         "marginals": bench_marginals,

@@ -364,6 +364,138 @@ def solve_scalar_lp_fused(
     return res
 
 
+@dataclass
+class LPPendingBatch:
+    """Handle for an in-flight `launch_lp_batch` dispatch — the LP
+    counterpart of `mwem.MWEMPendingBatch`. Device buffers are futures
+    until `finish_lp_batch` blocks on them."""
+
+    x_bar: jax.Array
+    traces: tuple
+    t0: float
+    A: jax.Array
+    b: jax.Array
+    batched_b: bool
+    cfg: ScalarLPConfig
+    cal: _LPCalibration
+    c_idx: float
+    index: object
+    lanes: int
+
+
+def launch_lp_batch(
+    A: jax.Array,
+    b: jax.Array,
+    cfg: ScalarLPConfig,
+    keys: jax.Array,
+    index=None,
+) -> LPPendingBatch:
+    """Dispatch one batched LP wave asynchronously — the launch half of
+    `solve_lp_batch`. ``solve_lp_batch(...)`` is exactly
+    ``finish_lp_batch(launch_lp_batch(...))``."""
+    from repro.core.mwem import _compiled_driver
+
+    if cfg.driver == "host":
+        raise ValueError("solve_lp_batch always uses the fused driver; "
+                         "loop solve_scalar_lp(..., driver='host') for host runs")
+    A = jnp.asarray(A, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    keys = jnp.asarray(keys)
+    B = keys.shape[0]
+    batched_b = b.ndim == 2
+    if batched_b and cfg.mode == "fast":
+        raise ValueError(
+            "per-lane b instances require mode='exact': the k-MIPS index "
+            "rows [A_i, b_i] embed a single b")
+    cal = _scalar_calibrate(A, cfg)
+    c_idx = _check_lp_fast_index(cfg, index, fused=True, what="[A_i, b_i]")
+
+    entry = _lp_fused_driver(index if cfg.mode == "fast" else None,
+                             _scalar_core, _scalar_statics(cfg, cal), "scalar",
+                             batch_axes=(None, 0 if batched_b else None, 0))
+    args = (A, b, keys)
+    driver = _compiled_driver(entry, *args)
+    t0 = perf_counter()
+    with obs_annotate("lp_scalar/batch"):
+        x_bar, traces = driver(*args)
+    return LPPendingBatch(x_bar=x_bar, traces=traces, t0=t0, A=A, b=b,
+                          batched_b=batched_b, cfg=cfg, cal=cal, c_idx=c_idx,
+                          index=index, lanes=B)
+
+
+def finish_lp_batch(pending: LPPendingBatch,
+                    ledgers: Optional[list] = None) -> ScalarLPBatchResult:
+    """Block on a launched LP wave and assemble its `ScalarLPBatchResult` —
+    the finish half of `solve_lp_batch`."""
+    A, b, cfg, cal = pending.A, pending.b, pending.cfg, pending.cal
+    index, B, batched_b = pending.index, pending.lanes, pending.batched_b
+    m, _ = A.shape
+    if ledgers is not None and len(ledgers) != B:
+        raise ValueError(f"ledgers must have one entry per lane "
+                         f"({len(ledgers)} != {B})")
+    with obs_annotate("lp_scalar/batch/finish"):
+        x_bar, traces = pending.x_bar, pending.traces
+        jax.block_until_ready(x_bar)
+    total = perf_counter() - pending.t0
+
+    viol = x_bar @ A.T - (b if batched_b else b[None, :])   # (B, m)
+    violated_fracs = np.asarray(jnp.mean(viol > cfg.alpha, axis=1))
+
+    ledger = PrivacyLedger()
+    if cfg.mode == "fast":
+        ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
+    for _ in range(cal.T):
+        _record_lp_iteration(ledger, cfg.mode, cal.eps0, "lp_em",
+                             pending.c_idx, cfg.margin_slack)
+    if ledgers is not None:
+        for lane in ledgers:
+            if lane is not None:
+                lane.record_events(ledger.events, ledger.index_failure_mass,
+                                   ledger.approx_slack)
+
+    traces = jax.device_get(traces)
+    telemetry = record_run(
+        workload="lp_scalar", driver="fused", mode=cfg.mode, m=m,
+        n_scored=np.asarray(traces[1]),
+        overflow_count=int(np.asarray(traces[3]).sum()),
+        total_seconds=total, amortized=True, lanes=B)
+    return ScalarLPBatchResult(
+        x_bar=x_bar,
+        violated_fracs=violated_fracs,
+        selected=np.asarray(traces[0]),
+        n_scored=np.asarray(traces[1]),
+        overflow_counts=np.asarray(traces[3]).sum(axis=1),
+        total_seconds=total,
+        ledger=ledger,
+        ledgers=list(ledgers) if ledgers is not None else None,
+        telemetry=telemetry,
+    )
+
+
+def aot_compile_lp_batch(A, b, cfg: ScalarLPConfig, lanes: int,
+                         index=None) -> bool:
+    """Populate the batched LP driver's AOT executable cache for a
+    ``lanes``-wide wave without dispatching — the LP counterpart of
+    `mwem.aot_compile_batch`. Returns True when a new executable was
+    compiled for this lane count."""
+    from repro.core.mwem import _compiled_driver
+
+    if cfg.driver == "host":
+        raise ValueError("solve_lp_batch always uses the fused driver; "
+                         "loop solve_scalar_lp(..., driver='host') for host runs")
+    A = jnp.asarray(A, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    cal = _scalar_calibrate(A, cfg)
+    _check_lp_fast_index(cfg, index, fused=True, what="[A_i, b_i]")
+    entry = _lp_fused_driver(index if cfg.mode == "fast" else None,
+                             _scalar_core, _scalar_statics(cfg, cal), "scalar",
+                             batch_axes=(None, None, 0))
+    keys = jnp.stack([jax.random.PRNGKey(0)] * lanes)
+    n_before = len(entry[1])
+    _compiled_driver(entry, A, b, keys)
+    return len(entry[1]) > n_before
+
+
 def solve_lp_batch(
     A: jax.Array,
     b: jax.Array,
@@ -392,70 +524,15 @@ def solve_lp_batch(
     `lax.cond` lowers to a select under vmap, so every batched iteration
     pays the exhaustive branch — same caveat as `run_mwem_batch`.
     """
-    from repro.core.mwem import _compiled_driver
-
     if cfg.driver == "host":
         raise ValueError("solve_lp_batch always uses the fused driver; "
                          "loop solve_scalar_lp(..., driver='host') for host runs")
-    A = jnp.asarray(A, jnp.float32)
-    b = jnp.asarray(b, jnp.float32)
-    keys = jnp.asarray(keys)
-    B = keys.shape[0]
+    B = jnp.asarray(keys).shape[0]
     if ledgers is not None and len(ledgers) != B:
         raise ValueError(f"ledgers must have one entry per lane "
                          f"({len(ledgers)} != {B})")
-    batched_b = b.ndim == 2
-    if batched_b and cfg.mode == "fast":
-        raise ValueError(
-            "per-lane b instances require mode='exact': the k-MIPS index "
-            "rows [A_i, b_i] embed a single b")
-    m, _ = A.shape
-    cal = _scalar_calibrate(A, cfg)
-    c_idx = _check_lp_fast_index(cfg, index, fused=True, what="[A_i, b_i]")
-
-    entry = _lp_fused_driver(index if cfg.mode == "fast" else None,
-                             _scalar_core, _scalar_statics(cfg, cal), "scalar",
-                             batch_axes=(None, 0 if batched_b else None, 0))
-    args = (A, b, keys)
-    driver = _compiled_driver(entry, *args)
-    t0 = perf_counter()
-    with obs_annotate("lp_scalar/batch"):
-        x_bar, traces = driver(*args)
-        jax.block_until_ready(x_bar)
-    total = perf_counter() - t0
-
-    viol = x_bar @ A.T - (b if batched_b else b[None, :])   # (B, m)
-    violated_fracs = np.asarray(jnp.mean(viol > cfg.alpha, axis=1))
-
-    ledger = PrivacyLedger()
-    if cfg.mode == "fast":
-        ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
-    for _ in range(cal.T):
-        _record_lp_iteration(ledger, cfg.mode, cal.eps0, "lp_em",
-                             c_idx, cfg.margin_slack)
-    if ledgers is not None:
-        for lane in ledgers:
-            if lane is not None:
-                lane.record_events(ledger.events, ledger.index_failure_mass,
-                                   ledger.approx_slack)
-
-    traces = jax.device_get(traces)
-    telemetry = record_run(
-        workload="lp_scalar", driver="fused", mode=cfg.mode, m=m,
-        n_scored=np.asarray(traces[1]),
-        overflow_count=int(np.asarray(traces[3]).sum()),
-        total_seconds=total, amortized=True, lanes=B)
-    return ScalarLPBatchResult(
-        x_bar=x_bar,
-        violated_fracs=violated_fracs,
-        selected=np.asarray(traces[0]),
-        n_scored=np.asarray(traces[1]),
-        overflow_counts=np.asarray(traces[3]).sum(axis=1),
-        total_seconds=total,
-        ledger=ledger,
-        ledgers=list(ledgers) if ledgers is not None else None,
-        telemetry=telemetry,
-    )
+    return finish_lp_batch(launch_lp_batch(A, b, cfg, keys, index=index),
+                           ledgers=ledgers)
 
 
 # ---------------------------------------------------------------------------

@@ -758,6 +758,176 @@ def run_mwem_fused(
     return res
 
 
+@dataclass
+class MWEMPendingBatch:
+    """Handle for an in-flight `launch_mwem_batch` dispatch.
+
+    Holds the device futures the async dispatch returned plus everything
+    `finish_mwem_batch` needs to rebuild the exact `MWEMBatchResult` that
+    `run_mwem_batch` would have produced synchronously. Nothing here has
+    been blocked on: the scan may still be executing when the caller gets
+    this object back, which is what lets a streaming server overlap the
+    next wave's host-side prep and transfers with this wave's scan."""
+
+    final_state: MWEMState      # (B, U) device futures
+    traces: tuple               # stacked scan outputs, unfetched
+    t0: float                   # perf_counter stamp at dispatch
+    W: Workload
+    h: jax.Array
+    batched_h: bool
+    cfg: MWEMConfig
+    cal: _Calibration
+    c_idx: float
+    index: object
+    lanes: int
+    driver_label: str
+
+
+def launch_mwem_batch(
+    Q: jax.Array,
+    h: jax.Array,
+    cfg: MWEMConfig,
+    keys: jax.Array,
+    index=None,
+) -> MWEMPendingBatch:
+    """Dispatch one batched wave asynchronously — the launch half of
+    `run_mwem_batch`.
+
+    Calibration, driver lookup, and the cached AOT compile all happen
+    here; the compiled executable is dispatched *without* blocking, so the
+    returned handle's device buffers are futures. `finish_mwem_batch`
+    blocks and assembles the result; ``run_mwem_batch(...)`` is exactly
+    ``finish_mwem_batch(launch_mwem_batch(...))``, so a launched wave is
+    bitwise identical to a synchronous one.
+    """
+    if cfg.driver == "host":
+        raise ValueError("run_mwem_batch always uses the fused driver; "
+                         "loop run_mwem(..., driver='host') for host runs")
+    W = as_workload(Q)
+    m, U = W.m, W.U
+    keys = jnp.asarray(keys)
+    B = keys.shape[0]
+    h = jnp.asarray(h, jnp.float32)
+    batched_h = h.ndim == 2
+    cal = _calibrate(cfg, m, U)
+    c_idx = _check_fast_index(cfg, index, fused=True)
+
+    batch_axes = (None, 0 if batched_h else None, 0, 0)
+    entry = _fused_driver(index if cfg.mode == "fast" else None,
+                          _fused_statics(cfg, cal),
+                          batch_axes=batch_axes)
+    driver_label = ("waved"
+                    if _waved_route(index if cfg.mode == "fast" else None,
+                                    batch_axes)
+                    else "fused")
+    state0 = MWEMState(log_w=jnp.zeros((B, U), jnp.float32),
+                       p_sum=jnp.zeros((B, U), jnp.float32))
+    args = (W, h, state0, keys)
+    driver = _compiled_driver(entry, *args)
+    t0 = perf_counter()
+    with obs_annotate(f"mwem/batch/{driver_label}"):
+        final_state, traces = driver(*args)
+    return MWEMPendingBatch(
+        final_state=final_state, traces=traces, t0=t0, W=W, h=h,
+        batched_h=batched_h, cfg=cfg, cal=cal, c_idx=c_idx, index=index,
+        lanes=B, driver_label=driver_label)
+
+
+def finish_mwem_batch(pending: MWEMPendingBatch,
+                      ledgers: Optional[list] = None) -> MWEMBatchResult:
+    """Block on a launched wave and assemble its `MWEMBatchResult` — the
+    finish half of `run_mwem_batch` (ledger charging, trace fetch, and
+    telemetry all happen here, after the device work lands)."""
+    W, cfg, cal = pending.W, pending.cfg, pending.cal
+    index, B = pending.index, pending.lanes
+    h, batched_h = pending.h, pending.batched_h
+    m = W.m
+    if ledgers is not None and len(ledgers) != B:
+        raise ValueError(f"ledgers must have one entry per lane "
+                         f"({len(ledgers)} != {B})")
+    with obs_annotate(f"mwem/batch/{pending.driver_label}/finish"):
+        final_state, traces = pending.final_state, pending.traces
+        jax.block_until_ready(final_state.p_sum)
+    total = perf_counter() - pending.t0
+
+    p_hat = final_state.p_sum / cfg.T
+    if W.is_dense:  # pre-refactor expression, kept bitwise
+        final_errors = jnp.max(jnp.abs((h - p_hat) @ W.Q.T), axis=-1)
+    else:
+        final_errors = jax.vmap(
+            lambda hh, pp: max_error(W, hh, pp),
+            in_axes=(0 if batched_h else None, 0))(h, p_hat)
+
+    ledger = PrivacyLedger()
+    if cfg.mode == "fast":
+        ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
+    for _ in range(cfg.T):
+        _record_iteration(ledger, cfg.mode, cfg.update_rule, cal,
+                          pending.c_idx, cfg.margin_slack)
+    if ledgers is not None:
+        for lane in ledgers:
+            if lane is not None:
+                lane.record_events(ledger.events, ledger.index_failure_mass,
+                                   ledger.approx_slack)
+
+    traces = jax.device_get(traces)
+    errors = None
+    if cfg.eval_every:
+        eval_ts = range(cfg.eval_every, cfg.T + 1, cfg.eval_every)
+        errors = np.asarray(traces[4])[:, [t - 1 for t in eval_ts]]
+    telemetry = record_run(
+        workload="mwem", driver=pending.driver_label, mode=cfg.mode, m=m,
+        n_scored=np.asarray(traces[1]),
+        overflow_count=int(np.asarray(traces[3]).sum()),
+        total_seconds=total, amortized=True, lanes=B)
+    return MWEMBatchResult(
+        p_hat=p_hat,
+        final_errors=np.asarray(final_errors),
+        selected=np.asarray(traces[0]),
+        n_scored=np.asarray(traces[1]),
+        overflow_counts=np.asarray(traces[3]).sum(axis=1),
+        errors=errors,
+        eval_every=cfg.eval_every,
+        total_seconds=total,
+        ledger=ledger,
+        ledgers=list(ledgers) if ledgers is not None else None,
+        telemetry=telemetry,
+    )
+
+
+def aot_compile_batch(Q, cfg: MWEMConfig, lanes: int, index=None,
+                      batched_h: bool = True) -> bool:
+    """Populate the batched driver's AOT executable cache for a
+    ``lanes``-wide wave without dispatching any work.
+
+    The streaming serving tier compiles one executable per wave size in a
+    small ladder up front (`ReleaseService.prewarm`), then picks the best
+    fit per wave instead of padding every short wave to one size. Returns
+    True when a new executable was compiled, False when the cache already
+    held this (shape, statics) entry. The compiled artifact lands in the
+    same cache `run_mwem_batch`/`launch_mwem_batch` consult, so the first
+    live wave at this lane count pays zero trace+compile.
+    """
+    if cfg.driver == "host":
+        raise ValueError("run_mwem_batch always uses the fused driver; "
+                         "loop run_mwem(..., driver='host') for host runs")
+    W = as_workload(Q)
+    m, U = W.m, W.U
+    cal = _calibrate(cfg, m, U)
+    _check_fast_index(cfg, index, fused=True)
+    batch_axes = (None, 0 if batched_h else None, 0, 0)
+    entry = _fused_driver(index if cfg.mode == "fast" else None,
+                          _fused_statics(cfg, cal),
+                          batch_axes=batch_axes)
+    h = jnp.zeros((lanes, U) if batched_h else (U,), jnp.float32)
+    keys = jnp.stack([jax.random.PRNGKey(0)] * lanes)
+    state0 = MWEMState(log_w=jnp.zeros((lanes, U), jnp.float32),
+                       p_sum=jnp.zeros((lanes, U), jnp.float32))
+    n_before = len(entry[1])
+    _compiled_driver(entry, W, h, state0, keys)
+    return len(entry[1]) > n_before
+
+
 def run_mwem_batch(
     Q: jax.Array,
     h: jax.Array,
@@ -802,79 +972,12 @@ def run_mwem_batch(
     if cfg.driver == "host":
         raise ValueError("run_mwem_batch always uses the fused driver; "
                          "loop run_mwem(..., driver='host') for host runs")
-    W = as_workload(Q)
-    m, U = W.m, W.U
-    keys = jnp.asarray(keys)
-    B = keys.shape[0]
+    B = jnp.asarray(keys).shape[0]
     if ledgers is not None and len(ledgers) != B:
         raise ValueError(f"ledgers must have one entry per lane "
                          f"({len(ledgers)} != {B})")
-    h = jnp.asarray(h, jnp.float32)
-    batched_h = h.ndim == 2
-    cal = _calibrate(cfg, m, U)
-    c_idx = _check_fast_index(cfg, index, fused=True)
-
-    batch_axes = (None, 0 if batched_h else None, 0, 0)
-    entry = _fused_driver(index if cfg.mode == "fast" else None,
-                          _fused_statics(cfg, cal),
-                          batch_axes=batch_axes)
-    driver_label = ("waved"
-                    if _waved_route(index if cfg.mode == "fast" else None,
-                                    batch_axes)
-                    else "fused")
-    state0 = MWEMState(log_w=jnp.zeros((B, U), jnp.float32),
-                       p_sum=jnp.zeros((B, U), jnp.float32))
-    args = (W, h, state0, keys)
-    driver = _compiled_driver(entry, *args)
-    t0 = perf_counter()
-    with obs_annotate(f"mwem/batch/{driver_label}"):
-        final_state, traces = driver(*args)
-        jax.block_until_ready(final_state.p_sum)
-    total = perf_counter() - t0
-
-    p_hat = final_state.p_sum / cfg.T
-    if W.is_dense:  # pre-refactor expression, kept bitwise
-        final_errors = jnp.max(jnp.abs((h - p_hat) @ W.Q.T), axis=-1)
-    else:
-        final_errors = jax.vmap(
-            lambda hh, pp: max_error(W, hh, pp),
-            in_axes=(0 if batched_h else None, 0))(h, p_hat)
-
-    ledger = PrivacyLedger()
-    if cfg.mode == "fast":
-        ledger.record_index_failure(getattr(index, "failure_mass", 1.0 / m))
-    for _ in range(cfg.T):
-        _record_iteration(ledger, cfg.mode, cfg.update_rule, cal,
-                          c_idx, cfg.margin_slack)
-    if ledgers is not None:
-        for lane in ledgers:
-            if lane is not None:
-                lane.record_events(ledger.events, ledger.index_failure_mass,
-                                   ledger.approx_slack)
-
-    traces = jax.device_get(traces)
-    errors = None
-    if cfg.eval_every:
-        eval_ts = range(cfg.eval_every, cfg.T + 1, cfg.eval_every)
-        errors = np.asarray(traces[4])[:, [t - 1 for t in eval_ts]]
-    telemetry = record_run(
-        workload="mwem", driver=driver_label, mode=cfg.mode, m=m,
-        n_scored=np.asarray(traces[1]),
-        overflow_count=int(np.asarray(traces[3]).sum()),
-        total_seconds=total, amortized=True, lanes=B)
-    return MWEMBatchResult(
-        p_hat=p_hat,
-        final_errors=np.asarray(final_errors),
-        selected=np.asarray(traces[0]),
-        n_scored=np.asarray(traces[1]),
-        overflow_counts=np.asarray(traces[3]).sum(axis=1),
-        errors=errors,
-        eval_every=cfg.eval_every,
-        total_seconds=total,
-        ledger=ledger,
-        ledgers=list(ledgers) if ledgers is not None else None,
-        telemetry=telemetry,
-    )
+    return finish_mwem_batch(launch_mwem_batch(Q, h, cfg, keys, index=index),
+                             ledgers=ledgers)
 
 
 # ---------------------------------------------------------------------------

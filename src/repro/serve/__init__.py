@@ -13,11 +13,23 @@ Two serving tiers live here (DESIGN.md §5):
   write-ahead journaling of the two-phase budget commit with crash
   `recover()`, and the circuit breaker that pins a flaky kernel route to
   the bitwise XLA reference path.
+* `coalesce` / `loadgen` — the streaming layer (DESIGN.md §11): the
+  deadline/occupancy wave-coalescing policy with its AOT wave-size
+  ladder, and the open-loop Poisson load generator that measures
+  admission→answer latency distributions against it.
 """
 
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.admission import AdmissionController, AdmissionDecision
 from repro.serve.breaker import CircuitBreaker
+from repro.serve.coalesce import (
+    DeadlineOccupancyPolicy,
+    ScriptedPolicy,
+    WaveDecision,
+    WaveLadder,
+    replay_decisions,
+)
+from repro.serve.loadgen import LoadReport, LoadSpec, run_open_loop
 from repro.serve.journal import (
     Journal,
     RecoveredState,
@@ -44,6 +56,14 @@ __all__ = [
     "AdmissionController",
     "AdmissionDecision",
     "CircuitBreaker",
+    "DeadlineOccupancyPolicy",
+    "ScriptedPolicy",
+    "WaveDecision",
+    "WaveLadder",
+    "replay_decisions",
+    "LoadReport",
+    "LoadSpec",
+    "run_open_loop",
     "Journal",
     "RecoveredState",
     "read_records",

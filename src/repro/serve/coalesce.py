@@ -1,0 +1,205 @@
+"""Deadline/occupancy wave coalescing for the streaming release path.
+
+Under continuous admission the service no longer waits for a full
+fixed-size wave: a `DeadlineOccupancyPolicy` watches each compatible
+group's queue and dispatches when the wave is **full** or when the oldest
+queued ticket has spent **half its latency budget** waiting (DESIGN.md
+§11). Short waves are not padded to the batch wave size — a `WaveLadder`
+of AOT-precompiled lane counts picks the smallest compiled executable
+that fits the occupancy, so a 3-ticket wave runs on the 4-lane executable
+instead of replicating a slot 5× to fill an 8-lane one.
+
+The policy is deliberately **pure**: `decide` takes the clock reading as
+an argument and returns a frozen `WaveDecision`, so hypothesis can drive
+it through arbitrary (occupancy, deadline) trajectories without touching
+real time, and the service can journal the decision before acting on it.
+Every dispatch decision is WAL-replayable: the service writes the
+trigger reason, chosen wave size, and observed occupancy into the
+``dispatch-started`` journal record, and `replay_decisions` rebuilds the
+decision sequence from a journal — crash recovery can audit exactly why
+each wave was cut where it was.
+
+Coalescing never touches mechanism statistics: lanes stay keyed by
+``PRNGKey(ticket.seed)``, so however the policy slices the admitted set
+into waves, each lane's release is bitwise identical to the fixed-wave
+path (tests/test_streaming.py holds this as the headline invariant).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "WaveLadder",
+    "WaveDecision",
+    "DeadlineOccupancyPolicy",
+    "ScriptedPolicy",
+    "replay_decisions",
+]
+
+
+@dataclass(frozen=True)
+class WaveLadder:
+    """The set of lane counts with precompiled batched executables.
+
+    ``sizes`` is sorted ascending and always contains the max wave size.
+    The default ladder for ``max_size=8`` is ``(2, 4, 8)`` — powers of
+    two keep the executable count logarithmic in the wave size while
+    bounding padding waste to <2× for n ≥ 2 (a wave of n lanes runs on
+    the ``fit(n) < 2n`` executable).
+
+    The ladder floors at **2 lanes**: XLA lowers the degenerate 1-lane
+    vmap with different reduction/tiling choices than any multi-lane
+    executable, and the ulp-level score differences flip near-tied EM
+    selections (observed on the LP workload at ~10% of seeds). All B ≥ 2
+    executables agree bitwise with each other and with the padded
+    fixed-wave path, so a singleton wave pads one replica slot — the
+    same slot-replication trick the batch drain uses — rather than run
+    the one executable whose answers can drift. ``max_size=1`` keeps a
+    ``(1,)`` ladder: there the batch path is also single-lane, so the
+    two paths share the executable and parity holds trivially.
+    """
+
+    sizes: Tuple[int, ...]
+
+    @classmethod
+    def for_wave_size(cls, max_size: int) -> "WaveLadder":
+        if max_size < 1:
+            raise ValueError(f"max_size must be >= 1, got {max_size}")
+        if max_size == 1:
+            return cls(sizes=(1,))
+        sizes = []
+        s = 2
+        while s < max_size:
+            sizes.append(s)
+            s *= 2
+        sizes.append(max_size)
+        return cls(sizes=tuple(sizes))
+
+    @property
+    def max_size(self) -> int:
+        return self.sizes[-1]
+
+    def fit(self, n: int) -> int:
+        """Smallest ladder size that holds ``n`` lanes (capped at max)."""
+        if n < 1:
+            raise ValueError(f"cannot fit a wave of {n} lanes")
+        for s in self.sizes:
+            if s >= n:
+                return s
+        return self.max_size
+
+
+@dataclass(frozen=True)
+class WaveDecision:
+    """One coalescer verdict, journaled alongside the wave it cut.
+
+    ``reason`` ∈ {"full", "deadline", "flush", "scripted"} for dispatches
+    and {"hold", "empty"} for non-dispatches. ``wave_size`` is the ladder
+    executable the wave will run on (0 when not dispatching);
+    ``occupancy`` is the queue depth the policy saw.
+    """
+
+    dispatch: bool
+    reason: str
+    wave_size: int
+    occupancy: int
+
+
+@dataclass
+class DeadlineOccupancyPolicy:
+    """Dispatch when the wave is full or the oldest ticket's latency
+    budget is half-spent.
+
+    The half-spent rule bounds queueing delay to 50% of the slowest
+    ticket's end-to-end budget while leaving the other half for the scan
+    itself; tickets without deadlines only ride full or flushed waves.
+    ``decide`` is pure in ``now`` so property tests can replay arbitrary
+    clock trajectories.
+    """
+
+    wave_size: int
+    ladder: WaveLadder = None  # type: ignore[assignment]
+    half_frac: float = 0.5
+
+    def __post_init__(self):
+        if self.ladder is None:
+            self.ladder = WaveLadder.for_wave_size(self.wave_size)
+        if not 0.0 < self.half_frac <= 1.0:
+            raise ValueError(f"half_frac must be in (0, 1], got {self.half_frac}")
+
+    def decide(self, occupancy: int, now: float,
+               oldest_submit: Optional[float] = None,
+               oldest_deadline: Optional[float] = None,
+               force: bool = False) -> WaveDecision:
+        if occupancy <= 0:
+            return WaveDecision(False, "empty", 0, occupancy)
+        if occupancy >= self.wave_size:
+            return WaveDecision(True, "full", self.ladder.max_size, occupancy)
+        if force:
+            return WaveDecision(True, "flush", self.ladder.fit(occupancy),
+                                occupancy)
+        if oldest_submit is not None and oldest_deadline is not None:
+            budget = oldest_deadline - oldest_submit
+            if budget <= 0 or now >= oldest_submit + self.half_frac * budget:
+                return WaveDecision(True, "deadline",
+                                    self.ladder.fit(occupancy), occupancy)
+        return WaveDecision(False, "hold", 0, occupancy)
+
+
+@dataclass
+class ScriptedPolicy:
+    """Cut waves at pre-scripted sizes — the parity-test harness.
+
+    ``slices`` is consumed left to right; each entry is the number of
+    tickets the next wave takes (clamped to the queue depth). Once the
+    script runs dry the policy dispatches whatever is queued. Lets
+    tests/test_streaming.py prove that *any* slicing of the admitted set
+    produces bitwise-identical answers.
+    """
+
+    wave_size: int
+    slices: Sequence[int] = ()
+    ladder: WaveLadder = None  # type: ignore[assignment]
+    _cursor: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.ladder is None:
+            self.ladder = WaveLadder.for_wave_size(self.wave_size)
+
+    def decide(self, occupancy: int, now: float,
+               oldest_submit: Optional[float] = None,
+               oldest_deadline: Optional[float] = None,
+               force: bool = False) -> WaveDecision:
+        if occupancy <= 0:
+            return WaveDecision(False, "empty", 0, occupancy)
+        if self._cursor < len(self.slices):
+            take = max(1, min(self.slices[self._cursor], occupancy,
+                              self.wave_size))
+            self._cursor += 1
+        else:
+            take = min(occupancy, self.wave_size)
+        return WaveDecision(True, "scripted", self.ladder.fit(take), take)
+
+
+def replay_decisions(records: Iterable[dict]) -> List[WaveDecision]:
+    """Rebuild the coalescer's dispatch decisions from journal records.
+
+    Reads the ``trigger``/``wave_size``/``occupancy`` fields PR 10 added
+    to ``dispatch-started`` records (older journals without them are
+    skipped — the WAL stays forward/backward compatible). A recovered
+    service can diff this against its live `wave_log` to audit that every
+    wave it dispatched before a crash is accounted for.
+    """
+    out: List[WaveDecision] = []
+    for rec in records:
+        if rec.get("kind") != "dispatch-started":
+            continue
+        trigger = rec.get("trigger")
+        if trigger is None:
+            continue
+        out.append(WaveDecision(dispatch=True, reason=trigger,
+                                wave_size=int(rec.get("wave_size", 0)),
+                                occupancy=int(rec.get("occupancy", 0))))
+    return out

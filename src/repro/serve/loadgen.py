@@ -1,0 +1,160 @@
+"""Open-loop load generation for the streaming release service.
+
+Arrivals are drawn up front from a Poisson process (exponential gaps,
+seeded) and are **independent of service state** — the generator never
+waits for an answer before offering the next request, so queueing delay
+shows up in the measured latency instead of silently throttling the
+offered rate (the coordinated-omission trap closed-loop generators fall
+into). Between arrivals the generator spins the service's `pump` tick so
+deadline-triggered waves fire on time.
+
+Traffic is a tenant-mixed blend of histogram releases, LP solves, and
+cached-answer reads (zero-ε post-processing); per-kind admission→answer
+latency distributions (p50/p95/p99) and sustained QPS come back in a
+`LoadReport`, which `benchmarks/bench_streaming.py` writes into
+BENCH_results.json. The chaos tier runs the same generator under
+`repro.faults` schedules — the generator counts, rather than propagates,
+per-request failures so a fault burst cannot abort the measurement.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.obs.clock import monotonic
+
+__all__ = ["LoadSpec", "LoadReport", "run_open_loop"]
+
+
+@dataclass
+class LoadSpec:
+    """One open-loop run: offer ``rate`` req/s for ``duration`` seconds."""
+
+    duration: float = 1.0            # arrival window (seconds of offered load)
+    rate: float = 50.0               # mean offered arrivals per second
+    seed: int = 0                    # drives arrivals, kinds, tenant picks
+    mix: Dict[str, float] = field(default_factory=lambda: {
+        "mwem": 0.5, "lp": 0.25, "answer": 0.25})
+    deadline: Optional[float] = None  # per-ticket latency budget (seconds)
+    max_wall: float = 120.0          # hard wall-clock cap on the whole run
+    tenants: Optional[List[str]] = None  # default: every registered session
+
+
+@dataclass
+class LoadReport:
+    """Latency distributions and throughput for one open-loop run."""
+
+    latencies: Dict[str, np.ndarray]          # kind -> sorted seconds
+    quantiles: Dict[str, Dict[str, float]]    # kind -> {p50, p95, p99}
+    counts: Dict[str, int]
+    offered_qps: float
+    sustained_qps: float                      # completed work / wall time
+    wall_seconds: float
+    tickets: List[object] = field(default_factory=list, repr=False)
+
+    def as_dict(self) -> dict:
+        return dict(
+            quantiles={k: dict(v) for k, v in self.quantiles.items()},
+            counts=dict(self.counts),
+            offered_qps=self.offered_qps,
+            sustained_qps=self.sustained_qps,
+            wall_seconds=self.wall_seconds,
+        )
+
+
+def _quantiles(lat: np.ndarray) -> Dict[str, float]:
+    if lat.size == 0:
+        return {"p50": float("nan"), "p95": float("nan"),
+                "p99": float("nan")}
+    return {"p50": float(np.percentile(lat, 50)),
+            "p95": float(np.percentile(lat, 95)),
+            "p99": float(np.percentile(lat, 99))}
+
+
+def run_open_loop(svc, spec: LoadSpec,
+                  answer_queries=None) -> LoadReport:
+    """Drive ``svc`` with the open-loop schedule in ``spec``.
+
+    ``svc`` is a `ReleaseService`; streaming or batch mode both work (the
+    generator only calls `pump`/`submit`/`submit_lp`/`answer`/`flush`),
+    which is how the parity tier measures both paths with one harness.
+    Answer reads are only offered to tenants that already hold a release;
+    LP arrivals require `attach_lp` (offered mass falls back to "mwem"
+    otherwise). Submission failures are counted, not propagated.
+    """
+    rng = np.random.default_rng(spec.seed)
+    tenants = spec.tenants or list(svc.sessions)
+    if not tenants:
+        raise ValueError("no tenant sessions to offer load against")
+    mix = dict(spec.mix)
+    if svc.lp is None and "lp" in mix:
+        mix["mwem"] = mix.get("mwem", 0.0) + mix.pop("lp")
+    kind_names = sorted(mix)
+    probs = np.asarray([mix[k] for k in kind_names], float)
+    probs = probs / probs.sum()
+
+    # the whole arrival schedule is fixed before the run starts — open loop
+    arrivals: List[float] = []
+    t = float(rng.exponential(1.0 / spec.rate))
+    while t < spec.duration:
+        arrivals.append(t)
+        t += float(rng.exponential(1.0 / spec.rate))
+    kinds = rng.choice(kind_names, size=len(arrivals), p=probs)
+    picks = rng.choice(np.asarray(tenants, object), size=len(arrivals))
+    if answer_queries is None:
+        answer_queries = rng.random((8, svc.U)).astype(np.float32)
+    answer_queries = np.asarray(answer_queries, np.float32)
+
+    tickets: List[object] = []
+    answer_lat: List[float] = []
+    counts = {"offered": len(arrivals), "answers": 0, "skipped_answers": 0,
+              "submit_errors": 0}
+    t0 = monotonic()
+    for arr, kind, tenant in zip(arrivals, kinds, picks):
+        while monotonic() - t0 < arr:
+            svc.pump()
+        if monotonic() - t0 > spec.max_wall:
+            break
+        try:
+            if kind == "answer":
+                sess = svc.sessions[tenant]
+                if not sess.releases:
+                    counts["skipped_answers"] += 1
+                    continue
+                q = answer_queries[int(rng.integers(len(answer_queries)))]
+                ta = monotonic()
+                svc.answer(tenant, q)
+                answer_lat.append(monotonic() - ta)
+                counts["answers"] += 1
+            elif kind == "lp":
+                tickets.append(svc.submit_lp(tenant, deadline=spec.deadline))
+            else:
+                tickets.append(svc.submit(tenant, deadline=spec.deadline))
+        except Exception:
+            # submit raises are budget-neutral (the reservation was
+            # refunded before the raise); the run keeps measuring
+            counts["submit_errors"] += 1
+    svc.flush()
+    wall = monotonic() - t0
+
+    latencies: Dict[str, np.ndarray] = {}
+    for kind in ("mwem", "lp"):
+        lat = np.sort(np.asarray([t.latency_seconds for t in tickets
+                                  if t.kind == kind and t.status == "done"]))
+        latencies[kind] = lat
+    latencies["answer"] = np.sort(np.asarray(answer_lat))
+    for status in ("done", "expired", "failed", "rejected"):
+        counts[status] = sum(1 for t in tickets if t.status == status)
+    completed = counts["done"] + counts["answers"]
+    return LoadReport(
+        latencies=latencies,
+        quantiles={k: _quantiles(v) for k, v in latencies.items()},
+        counts=counts,
+        offered_qps=len(arrivals) / max(spec.duration, 1e-9),
+        sustained_qps=completed / max(wall, 1e-9),
+        wall_seconds=wall,
+        tickets=tickets,
+    )

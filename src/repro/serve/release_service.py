@@ -40,6 +40,25 @@ around the kernel seams pins the service to the XLA reference route after
 repeated runtime failures; and queue-depth load shedding rejects before
 any reservation is taken.
 
+Streaming mode (DESIGN.md §11): ``streaming=True`` replaces the
+synchronous fixed-wave drain with a pipelined one. Requests are admitted
+continuously; every `pump` tick expires overdue tickets, then a
+deadline/occupancy coalescing policy (`serve.coalesce`) cuts a wave when
+it is full or when the oldest ticket's latency budget is half-spent. The
+wave runs on the smallest AOT-precompiled executable in a power-of-two
+lane ladder (`prewarm`) instead of padding to the batch wave size, and
+dispatch is split launch/finish (`core.launch_mwem_batch` /
+`finish_mwem_batch`): the next wave's histogram transfer and journal
+writes overlap the in-flight wave's scan, with the scan's carried state
+donated inside the compiled driver. Freed slots (expiry between retry
+attempts) are refilled from the queue mid-wave — the serve-engine
+``free_slots`` trick promoted into the release path. Every coalescer
+decision rides the ``dispatch-started`` WAL record (trigger reason, wave
+size, occupancy), so `coalesce.replay_decisions` can audit a crashed
+service's wave cuts. Lanes stay keyed by ``PRNGKey(ticket.seed)``:
+however the policy slices the admitted set, each lane's release is
+bitwise identical to the fixed-wave path (tests/test_streaming.py).
+
 The LP workload (paper §4, DESIGN.md §6) rides the same machinery:
 `attach_lp` registers a scalar-private feasibility LP (public A,
 curator-held private b, one shared k-MIPS index over [A_i, b_i]);
@@ -62,8 +81,12 @@ import numpy as np
 from repro.core.accountant import PrivacyLedger
 from repro.core.distributed import _data_shards, run_mwem_sharded_batch
 from repro.core.lp_dual import lp_release_cost
-from repro.core.lp_scalar import ScalarLPConfig, solve_lp_batch
-from repro.core.mwem import MWEMConfig, release_cost, run_mwem_batch
+from repro.core.lp_scalar import (LPPendingBatch, ScalarLPConfig,
+                                  aot_compile_lp_batch, finish_lp_batch,
+                                  launch_lp_batch, solve_lp_batch)
+from repro.core.mwem import (MWEMConfig, MWEMPendingBatch, aot_compile_batch,
+                             finish_mwem_batch, launch_mwem_batch,
+                             release_cost, run_mwem_batch)
 from repro.core.workload import as_workload
 from repro.faults import fault_site
 from repro.mips import (FlatAbsIndex, FlatIndex, IVFIndex, LSHIndex,
@@ -74,6 +97,8 @@ from repro.obs.clock import monotonic, sleep
 from repro.obs.metrics import MetricsRegistry, default_registry
 from repro.serve.admission import AdmissionController, AdmissionDecision
 from repro.serve.breaker import CircuitBreaker
+from repro.serve.coalesce import (DeadlineOccupancyPolicy, WaveDecision,
+                                  WaveLadder)
 from repro.serve.journal import Journal, RecoveredState, encode_bundle
 from repro.serve.session import (Answer, ReleasedHistogram, ReleasedLP,
                                  TenantSession)
@@ -126,12 +151,16 @@ class ServiceStats:
     failed: int = 0
     expired: int = 0
     shed: int = 0
+    refilled_slots: int = 0      # queue tickets promoted into freed lanes
+    pad_slots_saved: int = 0     # pad lanes avoided by the AOT size ladder
 
     def as_dict(self) -> dict:
         return dict(dispatches=self.dispatches, released=self.released,
                     lp_released=self.lp_released, rejected=self.rejected,
                     padded_slots=self.padded_slots, retries=self.retries,
-                    failed=self.failed, expired=self.expired, shed=self.shed)
+                    failed=self.failed, expired=self.expired, shed=self.shed,
+                    refilled_slots=self.refilled_slots,
+                    pad_slots_saved=self.pad_slots_saved)
 
 
 @dataclass
@@ -147,6 +176,25 @@ class _LPWorkload:
     index: Optional[object]
     cost: tuple                      # (events, gamma, slack) per release
     pending: List[ReleaseTicket]
+
+
+@dataclass
+class _InflightWave:
+    """One launched-but-unfinished streaming wave: the popped tickets, the
+    async dispatch handle, and the journaled coalescer decision. Exactly
+    one wave is in flight at a time (`ReleaseService._inflight`) — the
+    double buffer: while this wave's scan runs on device, the next wave's
+    host prep, transfers, and WAL writes proceed; resolving this handle is
+    the only point that blocks."""
+
+    kind: str                        # "mwem" | "lp"
+    n_records: Optional[int]         # mwem group key (None for lp)
+    tickets: List[ReleaseTicket]
+    n_pad: int
+    size: int                        # ladder executable lane count
+    pending: object                  # MWEMPendingBatch | LPPendingBatch
+    decision: WaveDecision
+    attempt: int
 
 
 class ReleaseService:
@@ -176,7 +224,8 @@ class ReleaseService:
                  backoff_base: float = 0.05, backoff_cap: float = 2.0,
                  default_deadline: Optional[float] = None,
                  max_queue_depth: Optional[int] = None,
-                 breaker_threshold: int = 3):
+                 breaker_threshold: int = 3, streaming: bool = False,
+                 policy=None):
         # the workload seam: a raw (m, U) matrix or any `core.workload`
         # family — `MarginalWorkload` releases run factored end to end
         # through the same admission/cost/wave path (DESIGN.md §9)
@@ -215,6 +264,19 @@ class ReleaseService:
         self.backoff_cap = float(backoff_cap)
         self.default_deadline = default_deadline
         self.max_queue_depth = max_queue_depth
+        # streaming drain (DESIGN.md §11): continuous admission, the
+        # deadline/occupancy coalescer cuts adaptive-size waves, dispatch
+        # is pipelined launch/finish with one wave in flight
+        self.streaming = bool(streaming)
+        if self.streaming and mesh is not None:
+            raise ValueError(
+                "streaming waves are single-device: the sharded driver "
+                "dispatches lanes sequentially with no launch/finish split")
+        self.policy = (policy if policy is not None else
+                       (DeadlineOccupancyPolicy(wave_size=self.wave_size)
+                        if self.streaming else None))
+        self.wave_log: List[WaveDecision] = []
+        self._inflight: Optional[_InflightWave] = None
         self.degraded = False
         self.breaker = CircuitBreaker(threshold=breaker_threshold,
                                       registry=self.metrics)
@@ -640,7 +702,10 @@ class ReleaseService:
             ticket.status = "failed"
             raise
         self._pending.setdefault(sess.n_records, []).append(ticket)
-        if self.auto_flush and len(self._pending[sess.n_records]) >= self.wave_size:
+        if self.streaming:
+            if self.auto_flush:
+                self.pump()
+        elif self.auto_flush and len(self._pending[sess.n_records]) >= self.wave_size:
             self._run_wave(sess.n_records)
         return ticket
 
@@ -732,7 +797,10 @@ class ReleaseService:
             ticket.status = "failed"
             raise
         self.lp.pending.append(ticket)
-        if self.auto_flush and len(self.lp.pending) >= self.wave_size:
+        if self.streaming:
+            if self.auto_flush:
+                self.pump()
+        elif self.auto_flush and len(self.lp.pending) >= self.wave_size:
             self._run_lp_wave()
         return ticket
 
@@ -744,15 +812,292 @@ class ReleaseService:
         return n
 
     def flush(self) -> List[ReleaseTicket]:
-        """Drain every pending group (histogram and LP) through fixed-size
-        waves."""
-        done: List[ReleaseTicket] = []
+        """Drain every pending group (histogram and LP). Batch mode drains
+        through fixed-size waves; streaming mode force-pumps the coalescer
+        (reason "flush") until every queue and the in-flight wave are
+        resolved."""
+        if self.streaming:
+            done: List[ReleaseTicket] = []
+            while True:
+                done.extend(self.pump(force=True))
+                if (self._inflight is None
+                        and not any(self._pending.values())
+                        and (self.lp is None or not self.lp.pending)):
+                    return done
+        done = []
         for n_records in list(self._pending):
             while self._pending.get(n_records):
                 done.extend(self._run_wave(n_records))
         while self.lp is not None and self.lp.pending:
             done.extend(self._run_lp_wave())
         return done
+
+    # -------------------------------------------------- streaming pipeline
+    def _ladder(self) -> WaveLadder:
+        if self.policy is not None and getattr(self.policy, "ladder", None):
+            return self.policy.ladder
+        return WaveLadder.for_wave_size(self.wave_size)
+
+    def prewarm(self, n_records: Optional[int] = None,
+                lp: bool = False) -> Dict[int, bool]:
+        """AOT-compile the wave-size ladder ahead of traffic.
+
+        One executable per ladder lane count lands in the batched driver's
+        cache (`core.aot_compile_batch`), so streaming waves pick the
+        smallest compiled size that fits their occupancy with zero
+        first-wave trace+compile cost. Histogram executables are keyed by
+        ``n_records`` (a compile-time static through the noise scales) —
+        pass it, or omit it to prewarm every registered session's group.
+        Returns {lane_count: newly_compiled}.
+        """
+        ladder = self._ladder()
+        out: Dict[int, bool] = {}
+        if lp:
+            if self.lp is None:
+                raise ValueError("no LP workload attached; call attach_lp "
+                                 "first")
+            for s in ladder.sizes:
+                out[s] = aot_compile_lp_batch(self.lp.A, self.lp.b,
+                                              self.lp.cfg, s,
+                                              index=self.lp.index)
+            return out
+        groups = ([n_records] if n_records is not None
+                  else sorted({s.n_records for s in self.sessions.values()}))
+        for n in groups:
+            cfg = self._group_cfg(n)
+            for s in ladder.sizes:
+                compiled = aot_compile_batch(self.workload, cfg, s,
+                                             index=self.index)
+                out[s] = out.get(s, False) or compiled
+        return out
+
+    def pump(self, force: bool = False) -> List[ReleaseTicket]:
+        """One coalescer tick.
+
+        Every tick — batch or streaming — expires overdue tickets in all
+        queues and refunds their reservations (the PR 10 fix: expiry used
+        to run only inside the wave drains, so under continuous admission
+        a ticket could sit past its deadline forever while no wave
+        formed). In streaming mode the tick then asks the policy, per
+        compatible group, whether to cut a wave; cut waves launch
+        asynchronously and the previously in-flight wave resolves while
+        the new one runs. A ready (or ``force``-drained) in-flight wave is
+        resolved at the end of the tick; otherwise it stays in flight and
+        the next tick collects it. Returns tickets resolved this tick.
+        """
+        done: List[ReleaseTicket] = []
+        for n_records in list(self._pending):
+            queue = self._pending[n_records]
+            self._expire_deadlines(queue)
+            if not queue:
+                del self._pending[n_records]
+        if self.lp is not None:
+            self._expire_deadlines(self.lp.pending)
+        if not self.streaming:
+            return done
+        for n_records in list(self._pending):
+            done.extend(self._pump_queue("mwem", n_records, force))
+        if self.lp is not None and self.lp.pending:
+            done.extend(self._pump_queue("lp", None, force))
+        if self._inflight is not None and (force or self._inflight_ready()):
+            done.extend(self._resolve_inflight())
+        return done
+
+    def _pump_queue(self, kind: str, n_records: Optional[int],
+                    force: bool) -> List[ReleaseTicket]:
+        """Coalesce one queue: policy decision → pop → async launch →
+        resolve the previous in-flight wave while the new one runs."""
+        done: List[ReleaseTicket] = []
+        queue = (self.lp.pending if kind == "lp"
+                 else self._pending.get(n_records))
+        while queue:
+            self._expire_deadlines(queue)
+            if not queue:
+                break
+            oldest = queue[0]
+            decision = self.policy.decide(
+                len(queue), monotonic(),
+                oldest_submit=oldest.submit_time,
+                oldest_deadline=oldest.deadline,
+                force=force)
+            if obs.enabled():
+                self.metrics.gauge("coalescer_occupancy", kind=kind).set(
+                    decision.occupancy)
+                self.metrics.counter("wave_trigger_total", kind=kind,
+                                     reason=decision.reason).inc()
+            if not decision.dispatch:
+                break
+            take = min(len(queue), decision.wave_size, decision.occupancy)
+            wave = queue[:take]
+            del queue[:take]
+            inflight = self._launch_streaming(kind, n_records, wave, decision)
+            prev, self._inflight = self._inflight, inflight
+            if prev is not None:
+                # the new wave's scan is already running on device — this
+                # block only waits on the *previous* wave (double buffer)
+                done.extend(self._resolve_wave(prev))
+        if kind == "mwem" and not self._pending.get(n_records):
+            self._pending.pop(n_records, None)
+        return done
+
+    def _refill_wave(self, kind: str, wave: List[ReleaseTicket],
+                     queue: List[ReleaseTicket]) -> None:
+        """Between dispatch attempts: expire overdue in-wave tickets (the
+        failed attempt produced nothing, so the refund leaks nothing) and
+        promote queued tickets into the freed lanes — the serve-engine
+        ``free_slots`` mid-wave refill lifted into the release path."""
+        target = len(wave)
+        now = monotonic()
+        for t in list(wave):
+            if t.deadline is not None and now >= t.deadline:
+                wave.remove(t)
+                self._abort_ticket(t, reason="expired", status="expired")
+                self.stats.expired += 1
+        while queue and len(wave) < target:
+            t = queue.pop(0)
+            if t.deadline is not None and now >= t.deadline:
+                self._abort_ticket(t, reason="expired", status="expired")
+                self.stats.expired += 1
+                continue
+            t.status = "queued"
+            wave.append(t)
+            self.stats.refilled_slots += 1
+            if obs.enabled():
+                self.metrics.counter("wave_slot_refills_total",
+                                     kind=kind).inc()
+
+    def _launch_streaming(self, kind: str, n_records: Optional[int],
+                          wave: List[ReleaseTicket], decision: WaveDecision,
+                          attempt: int = 0) -> Optional[_InflightWave]:
+        """Journal and asynchronously dispatch one streaming wave on the
+        smallest fitting ladder executable. Returns the in-flight handle,
+        or None when every slot expired away or the dispatch failed
+        terminally (tickets already resolved, reservations refunded)."""
+        queue = (self.lp.pending if kind == "lp"
+                 else self._pending.get(n_records, []))
+        while True:
+            if attempt > 0:
+                self._refill_wave(kind, wave, queue)
+            if not wave:
+                return None
+            size = min(self._ladder().fit(len(wave)), decision.wave_size)
+            n_pad = size - len(wave)
+            lanes = wave + [wave[0]] * n_pad
+            keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in lanes])
+            # the decision rides the WAL record (trigger/wave_size/
+            # occupancy) so `coalesce.replay_decisions` can rebuild the
+            # coalescer's cuts from the journal alone; outside the
+            # breaker-attributed try — see _run_lp_wave
+            self._journal("dispatch-started", workload=kind, attempt=attempt,
+                          rids=[[t.tenant_id, t.rid] for t in wave],
+                          trigger=decision.reason, wave_size=size,
+                          occupancy=decision.occupancy)
+            self.wave_log.append(WaveDecision(True, decision.reason, size,
+                                              decision.occupancy))
+            try:
+                with obs.annotate(f"serve/wave/{kind}/stream"):
+                    fault_site("wave.dispatch")
+                    if kind == "lp":
+                        pending = launch_lp_batch(self.lp.A, self.lp.b,
+                                                  self.lp.cfg, keys,
+                                                  index=self.lp.index)
+                    else:
+                        # device_put starts the histogram transfer now, so
+                        # it overlaps the still-running previous wave; the
+                        # scan's carried state is donated inside the
+                        # compiled driver (core._fused_driver)
+                        h_stack = jax.device_put(np.stack(
+                            [self.sessions[t.tenant_id].h for t in lanes]))
+                        pending = launch_mwem_batch(
+                            self.workload, h_stack,
+                            self._group_cfg(n_records), keys,
+                            index=self.index)
+            except Exception as exc:
+                attempt += 1
+                if self._note_dispatch_failure(exc, wave, attempt, kind):
+                    continue
+                self._fail_wave(wave, exc)
+                if not _retryable(exc):
+                    raise
+                return None
+            return _InflightWave(kind=kind, n_records=n_records,
+                                 tickets=wave, n_pad=n_pad, size=size,
+                                 pending=pending,
+                                 decision=WaveDecision(
+                                     True, decision.reason, size,
+                                     decision.occupancy),
+                                 attempt=attempt)
+
+    def _inflight_ready(self) -> bool:
+        """Whether the in-flight wave's device work has landed (so
+        resolving it will not block). Falls back to "ready" when the array
+        type cannot say — resolving then blocks, which is correct, just
+        not overlapped."""
+        fl = self._inflight
+        if fl is None:
+            return False
+        arr = (fl.pending.x_bar if fl.kind == "lp"
+               else fl.pending.final_state.p_sum)
+        is_ready = getattr(arr, "is_ready", None)
+        return True if is_ready is None else bool(is_ready())
+
+    def _resolve_inflight(self) -> List[ReleaseTicket]:
+        fl, self._inflight = self._inflight, None
+        if fl is None:
+            return []
+        return self._resolve_wave(fl)
+
+    def _resolve_wave(self, fl: _InflightWave) -> List[ReleaseTicket]:
+        """Block on one launched wave and run phase two. A retryable
+        finish failure re-*launches* the wave (a failed computation cannot
+        be re-blocked) with freed slots refilled; lanes are keyed by
+        ``PRNGKey(ticket.seed)``, so the relaunch is bitwise identical and
+        costs zero additional privacy — same contract as the batch retry
+        loop."""
+        while True:
+            try:
+                with obs.annotate(f"serve/wave/{fl.kind}/finish"):
+                    if fl.kind == "lp":
+                        result = finish_lp_batch(fl.pending)
+                    else:
+                        result = finish_mwem_batch(fl.pending)
+            except Exception as exc:
+                fl.attempt += 1
+                if self._note_dispatch_failure(exc, fl.tickets, fl.attempt,
+                                               fl.kind):
+                    relaunched = self._launch_streaming(
+                        fl.kind, fl.n_records, fl.tickets, fl.decision,
+                        attempt=fl.attempt)
+                    if relaunched is None:
+                        return []
+                    fl = relaunched
+                    continue
+                self._fail_wave(fl.tickets, exc)
+                if not _retryable(exc):
+                    raise
+                return []
+            break
+        self.breaker.record_success()
+        self.stats.dispatches += 1
+        self.stats.padded_slots += fl.n_pad
+        saved = self.wave_size - fl.size
+        if saved > 0:
+            # lanes the fixed-size path would have padded by replication
+            self.stats.pad_slots_saved += saved
+            if obs.enabled():
+                self.metrics.counter("wave_pad_slots_saved_total",
+                                     kind=fl.kind).inc(saved)
+        self._record_wave_metrics(fl.kind, len(fl.tickets), fl.n_pad,
+                                  lanes=fl.size)
+        if obs.enabled():
+            self.metrics.histogram("wave_latency_seconds", kind=fl.kind,
+                                   lanes=fl.size).observe(
+                                       result.total_seconds)
+        if fl.kind == "lp":
+            return self._deliver_lp(fl.tickets, result,
+                                    trigger=fl.decision.reason)
+        return self._deliver_mwem(fl.tickets, result,
+                                  trigger=fl.decision.reason)
 
     def _lane_cost(self, sess: TenantSession, snap, per_run: PrivacyLedger,
                    k: int) -> tuple:
@@ -773,26 +1118,38 @@ class ReleaseService:
                                 per_run.approx_slack, tight=tight)
         return after[0] - before[0], after[1] - before[1]
 
-    def _record_wave_metrics(self, kind: str, n_real: int, n_pad: int) -> None:
-        """Per-dispatch wave health: occupancy (real lanes / wave_size) and
-        the padding waste the replication trick pays for short waves."""
+    def _record_wave_metrics(self, kind: str, n_real: int, n_pad: int,
+                             lanes: Optional[int] = None) -> None:
+        """Per-dispatch wave health: occupancy (real lanes / executed
+        lanes) and the padding waste the replication trick pays for short
+        waves. ``lanes`` is the executed executable width — the adaptive
+        ladder size in streaming mode, ``wave_size`` in batch mode."""
         if not obs.enabled():
             return
+        lanes = lanes if lanes is not None else self.wave_size
         self.metrics.counter("wave_dispatches_total", kind=kind).inc()
         self.metrics.counter("wave_padded_slots_total", kind=kind).inc(n_pad)
-        self.metrics.gauge("wave_occupancy", kind=kind).set(
-            n_real / self.wave_size)
-        self.metrics.gauge("wave_padding_waste", kind=kind).set(
-            n_pad / self.wave_size)
+        self.metrics.gauge("wave_occupancy", kind=kind).set(n_real / lanes)
+        self.metrics.gauge("wave_padding_waste", kind=kind).set(n_pad / lanes)
 
-    def _record_ticket_latency(self, ticket: ReleaseTicket) -> None:
+    def _record_ticket_latency(self, ticket: ReleaseTicket,
+                               trigger: Optional[str] = None) -> None:
         """Admission→answer latency for one resolved ticket, bucketed per
-        workload kind ("mwem" | "lp"); the ticket keeps its own stamp too."""
+        workload kind ("mwem" | "lp"); the ticket keeps its own stamp too.
+        Streaming waves pass the coalescer ``trigger`` so the distribution
+        also splits by why the wave was cut (full vs deadline vs flush) —
+        on a separate series, so the per-kind one batch mode populates
+        keeps its identity."""
         ticket.latency_seconds = monotonic() - ticket.submit_time
         if obs.enabled():
             self.metrics.histogram("admission_to_answer_seconds",
                                    kind=ticket.kind).observe(
                                        ticket.latency_seconds)
+            if trigger is not None:
+                self.metrics.histogram("admission_to_answer_seconds",
+                                       kind=ticket.kind,
+                                       trigger=trigger).observe(
+                                           ticket.latency_seconds)
 
     def _run_lp_wave(self) -> List[ReleaseTicket]:
         """Execute one LP wave: exactly ``wave_size`` seed lanes through one
@@ -839,6 +1196,14 @@ class ReleaseService:
         self.stats.padded_slots += n_pad
         self.stats.dispatches += 1
         self._record_wave_metrics("lp", len(wave), n_pad)
+        return self._deliver_lp(wave, result)
+
+    def _deliver_lp(self, wave: List[ReleaseTicket], result,
+                    trigger: Optional[str] = None) -> List[ReleaseTicket]:
+        """Phase two for an executed LP wave: per-ticket commit, marginal
+        cost replay, journaled delivery. Shared verbatim between the batch
+        drain and the streaming pipeline (``trigger`` is the coalescer
+        reason, streaming only), so the two paths cannot drift."""
         # pre-commit ledger snapshots, for per-ticket marginal costs
         snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
                  for t in wave}
@@ -881,7 +1246,7 @@ class ReleaseService:
                 ticket.final_error = rel.violated_frac
                 ticket.status = "done"
                 self.stats.lp_released += 1
-                self._record_ticket_latency(ticket)
+                self._record_ticket_latency(ticket, trigger)
             except Exception as exc:
                 if not _retryable(exc):
                     self._resolve_stranded(wave[i:], exc)
@@ -957,6 +1322,11 @@ class ReleaseService:
         self.stats.padded_slots += n_pad
         self.stats.dispatches += 1
         self._record_wave_metrics("mwem", len(wave), n_pad)
+        return self._deliver_mwem(wave, result)
+
+    def _deliver_mwem(self, wave: List[ReleaseTicket], result,
+                      trigger: Optional[str] = None) -> List[ReleaseTicket]:
+        """Phase two for an executed histogram wave — see `_deliver_lp`."""
         # pre-commit ledger snapshots, for per-ticket marginal costs
         snaps = {t.tenant_id: self.sessions[t.tenant_id].ledger.bundle()
                  for t in wave}
@@ -994,7 +1364,7 @@ class ReleaseService:
                 ticket.final_error = rel.final_error
                 ticket.status = "done"
                 self.stats.released += 1
-                self._record_ticket_latency(ticket)
+                self._record_ticket_latency(ticket, trigger)
             except Exception as exc:
                 if not _retryable(exc):
                     self._resolve_stranded(wave[i:], exc)

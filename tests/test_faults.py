@@ -30,7 +30,8 @@ from repro.core.queries import gaussian_histogram, random_binary_queries
 from repro.faults import (FaultInjected, FaultPlan, Schedule, fail_once,
                           fault_site, inject)
 from repro.obs.metrics import MetricsRegistry
-from repro.serve import ReleaseService, recover
+from repro.serve import (LoadSpec, ReleaseService, ScriptedPolicy, recover,
+                         run_open_loop)
 from repro.serve.journal import Journal, read_records
 
 U, M, N_RECORDS = 64, 128, 300
@@ -649,3 +650,143 @@ class TestDegradation:
             return svc.flush()[0].release.p_hat
 
         np.testing.assert_array_equal(run(), run(use_pallas="never"))
+
+
+# --------------------------------------------------------------------------
+# streaming chaos (DESIGN.md §11): the open-loop generator under faults
+# --------------------------------------------------------------------------
+class TestStreamingChaos:
+    """The §10 invariants must survive the streaming drain: continuous
+    admission, coalesced adaptive waves, launch/finish retries, and
+    mid-wave slot refills, all driven by the open-loop generator with the
+    fault harness armed (the ``CHAOS_SEED`` matrix varies both the fault
+    interleavings and the offered traffic)."""
+
+    TENANTS = ("t0", "t1", "t2")
+
+    def _streaming_service(self, Q, h, path=None, **kw):
+        kw.setdefault("wave_size", 2)
+        svc = make_service(Q, streaming=True,
+                           journal=Journal(path) if path else None, **kw)
+        for name in self.TENANTS:
+            add_tenant(svc, h, name, eps_budget=200.0, delta_budget=0.9)
+        return svc
+
+    def test_open_loop_under_dispatch_fault_rate(self, workload, tmp_path):
+        Q, h = workload
+        svc = self._streaming_service(Q, h, tmp_path / "wal.jsonl")
+        svc.attach_lp(np.abs(np.asarray(Q[:8])), np.full(8, 0.9, np.float32))
+        spec = LoadSpec(duration=0.4, rate=30.0, seed=CHAOS_SEED,
+                        deadline=5.0, mix={"mwem": 0.6, "lp": 0.4})
+        with inject({"wave.dispatch": Schedule(fail_rate=0.3,
+                                               seed=CHAOS_SEED)}) as plan:
+            rep = run_open_loop(svc, spec)
+        assert plan.hits["wave.dispatch"] >= 1
+        assert rep.counts["done"] > 0
+        assert_no_budget_leak(svc)
+        # every offered ticket resolved one way or the other; none holds
+        # a reservation (rid) after the final flush
+        for t in rep.tickets:
+            assert t.status in ("done", "failed", "expired", "rejected")
+            assert t.rid is None
+        # commit exactly once: despite retries, each tenant's ledger
+        # carries exactly its delivered tickets' event schedules
+        for name in self.TENANTS:
+            assert len(svc.session(name).ledger.events) == \
+                delivered_event_count(rep.tickets, name)
+        # journal replay reproduces every live ledger
+        rec = recover(svc.journal.path, registry=svc.metrics)
+        for name in self.TENANTS:
+            assert rec.sessions[name].ledger == svc.session(name).ledger
+
+    def test_expired_under_fault_is_refunded(self, workload):
+        """A ticket that expires while dispatch faults churn its wave is
+        refunded in full — the failed attempts produced no output, so the
+        refund leaks nothing and the budget balances exactly."""
+        Q, h = workload
+        svc = self._streaming_service(Q, h)
+        doomed = svc.submit("t0", seed=1, deadline=0.05)
+        live = svc.submit("t1", seed=2)
+        with inject({"wave.dispatch": Schedule(fail_n=2, latency=0.1)}):
+            svc.flush()
+        assert doomed.status == "expired" and doomed.rid is None
+        assert live.status == "done"
+        assert svc.stats.expired == 1
+        assert_no_budget_leak(svc)
+        sess = svc.session("t0")
+        assert sess.ledger.events == [] and not sess.ledger.reservations
+        assert len(svc.session("t1").ledger.events) == \
+            len(live.cost_bundle[0])
+
+    def test_refill_promotes_queue_into_freed_slots(self, workload):
+        """The serve-engine ``free_slots`` trick in the release path:
+        when a retry frees a lane (the doomed ticket expired during the
+        failed attempt), a queued ticket is promoted into the slot and
+        the relaunched wave delivers it — no dispatch wasted on a
+        half-empty retry while work is queued behind it."""
+        Q, h = workload
+        svc = make_service(Q, streaming=True, wave_size=2,
+                           policy=ScriptedPolicy(wave_size=2, slices=[2]))
+        add_tenant(svc, h, "t0", eps_budget=200.0, delta_budget=0.9)
+        doomed = svc.submit("t0", seed=1, deadline=0.2)
+        survivor = svc.submit("t0", seed=2)
+        spare = svc.submit("t0", seed=3)
+        with inject({"wave.dispatch": Schedule(fail_n=1, latency=0.3)}):
+            svc.flush()
+        assert doomed.status == "expired" and doomed.rid is None
+        assert survivor.status == "done" and spare.status == "done"
+        assert svc.stats.refilled_slots == 1
+        assert svc.stats.retries == 1
+        assert svc.metrics.counter("wave_slot_refills_total",
+                                   kind="mwem").value == 1
+        assert_no_budget_leak(svc)
+
+    def test_streaming_retry_bitwise_equals_clean(self, workload):
+        """Streaming relaunch-at-finish keeps the batch retry contract:
+        lanes are keyed by ``PRNGKey(ticket.seed)``, so the retried wave
+        releases the same bytes and charges the same ledger."""
+        Q, h = workload
+
+        def run(schedules):
+            svc = self._streaming_service(Q, h)
+            tickets = [svc.submit("t0", seed=70 + i) for i in range(2)]
+            with (inject(schedules) if schedules else nullcontext()):
+                svc.flush()
+            return svc, tickets
+
+        svc_clean, clean = run(None)
+        svc_retry, retried = run({"wave.dispatch": Schedule(fail_n=2)})
+        assert svc_retry.stats.retries == 2
+        assert [t.status for t in retried] == ["done", "done"]
+        for a, b in zip(clean, retried):
+            np.testing.assert_array_equal(a.release.p_hat, b.release.p_hat)
+            assert a.release.eps_cost == b.release.eps_cost
+        assert (svc_clean.session("t0").ledger
+                == svc_retry.session("t0").ledger)
+
+    def test_journal_fail_once_retries_through_load(self, workload,
+                                                    tmp_path):
+        Q, h = workload
+        svc = self._streaming_service(Q, h, tmp_path / "wal.jsonl")
+        spec = LoadSpec(duration=0.25, rate=30.0, seed=CHAOS_SEED,
+                        mix={"mwem": 1.0})
+        with inject({"journal.append": fail_once()}) as plan:
+            rep = run_open_loop(svc, spec)
+        assert plan.failures["journal.append"] == 1
+        assert rep.counts["done"] > 0 and rep.counts["submit_errors"] == 0
+        assert_no_budget_leak(svc)
+        rec = recover(svc.journal.path)
+        for name in self.TENANTS:
+            assert rec.sessions[name].ledger == svc.session(name).ledger
+
+    def test_index_probe_latency_slows_but_completes(self, workload):
+        Q, h = workload
+        svc = self._streaming_service(Q, h)
+        spec = LoadSpec(duration=0.2, rate=25.0, seed=CHAOS_SEED,
+                        mix={"mwem": 1.0})
+        with inject({"index.probe": Schedule(latency=0.002)}) as plan:
+            rep = run_open_loop(svc, spec)
+        assert rep.counts["done"] > 0
+        assert_no_budget_leak(svc)
+        for t in rep.tickets:
+            assert t.status == "done" and t.rid is None
